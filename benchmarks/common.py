@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset builders."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summarization as S
+from repro.data.series import random_walk, sliding_windows, synthetic_signal
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn: Callable, *, repeat: int = 3, number: int = 1) -> float:
+    """Best-of-repeat wall time per call, in microseconds."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6
+
+
+def block(x):
+    return jax.block_until_ready(x)
+
+
+def dataset(n: int, L: int = 64, seed: int = 0) -> jnp.ndarray:
+    return random_walk(jax.random.PRNGKey(seed), n, L)
+
+
+def seismic_like(n: int, L: int = 64, seed: int = 1) -> jnp.ndarray:
+    sig = synthetic_signal(jax.random.PRNGKey(seed), n * 4 + L)
+    return sliding_windows(sig, L, step=4)[:n]
+
+
+def cfg_for(L: int = 64, w: int = 8, b: int = 4) -> S.SummaryConfig:
+    return S.SummaryConfig(series_len=L, segments=w, bits=b)

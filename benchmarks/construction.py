@@ -1,0 +1,64 @@
+"""Paper Fig. 11a/b/d/e: index-construction speed, bulk-load vs top-down.
+
+Coconut's claim: sort-based bulk load is O(N/B) sequential block transfers
+while iSAX-style top-down insertion is O(N) random ones.  We measure wall
+time on-device and the modeled block I/O (core.metrics), sweeping N for
+the scalability curves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import summarization as S, tree as T
+from repro.core.metrics import IOStats
+from repro.core.trie import ISaxIndex, build_trie
+
+from .common import block, cfg_for, dataset, emit, timeit
+
+
+def bench_construction(sizes=(2000, 8000, 32000)) -> None:
+    cfg = cfg_for()
+    leaf = 64
+    for n in sizes:
+        raw = dataset(n)
+
+        # Coconut-Tree bulk load (materialized + non-materialized)
+        for mat, tag in ((True, "full"), (False, "nonmat")):
+            io = IOStats(leaf)
+            us = timeit(lambda: block(T.build(
+                raw, cfg, leaf_size=leaf, materialized=mat).keys))
+            T.build(raw, cfg, leaf_size=leaf, materialized=mat, io=io)
+            emit(f"construction/ctree_{tag}/n{n}", us,
+                 f"io_blocks={io.total_blocks};random={io.random_blocks}")
+
+        # Coconut-Trie (bulk load then prefix grouping)
+        io = IOStats(leaf)
+        tree = T.build(raw, cfg, leaf_size=leaf, io=io)
+        keys_np = np.asarray(tree.keys)
+        us = timeit(lambda: build_trie(keys_np, w=cfg.segments,
+                                       b=cfg.bits, leaf_size=leaf))
+        trie = build_trie(keys_np, w=cfg.segments, b=cfg.bits,
+                          leaf_size=leaf, io=io)
+        emit(f"construction/ctrie/n{n}", us,
+             f"io_blocks={io.total_blocks};leaves={trie.n_leaves}")
+
+        # iSAX 2.0-style top-down baseline (the state of the art beaten
+        # by the paper) — wall time AND modeled random I/O
+        _, codes = S.summarize(raw, cfg)
+        codes_np = np.asarray(codes)
+        io = IOStats(leaf)
+        isax = ISaxIndex(cfg, leaf_size=leaf, io=io)
+        us = timeit(lambda: ISaxIndex(cfg, leaf_size=leaf).bulk_insert(
+            codes_np), repeat=1)
+        isax.bulk_insert(codes_np)
+        emit(f"construction/isax_topdown/n{n}", us,
+             f"io_blocks={io.total_blocks};random={io.random_blocks};"
+             f"leaves={isax.n_leaves}")
+
+
+def main() -> None:
+    bench_construction()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Paper Fig. 15: query throughput in the presence of insertions.
+
+Interleaves insertion batches with exact queries.  Contenders:
+  * C-LSM (Coconut-LSM, btp mode)  — amortized O(log N / B) inserts
+  * CTree-rebuild                  — re-sorts the whole index per batch
+    (what a static bulk-loaded index must do; O(N/B) per batch)
+  * iSAX-style per-entry cost model — O(1) *random* I/O per insert
+    (modeled blocks; the wall-clock strawman is the rebuild)
+
+Reported: wall time for the full interleaved workload + modeled I/O.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import summarization as S, tree as T
+from repro.core.lsm import CoconutLSM
+from repro.core.metrics import IOStats
+
+from .common import cfg_for, dataset, emit, timeit
+
+
+def _workload(total: int = 16000, batches: int = 8, n_queries: int = 8):
+    raw = np.asarray(dataset(total))
+    queries = np.asarray(dataset(n_queries, seed=3))
+    split = np.array_split(raw, batches)
+    return split, queries
+
+
+def bench_insertions() -> None:
+    cfg = cfg_for()
+    leaf = 64
+    split, queries = _workload()
+
+    # ---- Coconut-LSM -------------------------------------------------------
+    def run_lsm():
+        io = IOStats(leaf)
+        lsm = CoconutLSM(cfg, buffer_capacity=2048, leaf_size=leaf,
+                         mode="btp", io=io)
+        for bi, batch in enumerate(split):
+            lsm.insert(batch)
+            lsm.flush()
+            q = queries[bi % len(queries)]
+            lsm.search_exact(q)
+        return io
+
+    us = timeit(run_lsm, repeat=1)
+    io = run_lsm()
+    emit("insertions/clsm", us,
+         f"io_blocks={io.total_blocks};random={io.random_blocks}")
+
+    # ---- CTree full rebuild per batch --------------------------------------
+    def run_rebuild():
+        io = IOStats(leaf)
+        acc = None
+        for bi, batch in enumerate(split):
+            acc = batch if acc is None else np.concatenate([acc, batch])
+            tree = T.build(jnp.asarray(acc), cfg, leaf_size=leaf, io=io)
+            q = queries[bi % len(queries)]
+            T.exact_search(tree, jnp.asarray(q), io=io)
+        return io
+
+    us = timeit(run_rebuild, repeat=1)
+    io = run_rebuild()
+    emit("insertions/ctree_rebuild", us,
+         f"io_blocks={io.total_blocks};random={io.random_blocks}")
+
+    # ---- iSAX top-down modeled cost (O(1) random I/O per insert) -----------
+    io = IOStats(leaf)
+    n_total = sum(len(b) for b in split)
+    io.counters["rand_read_blocks"] += n_total
+    io.counters["rand_write_blocks"] += n_total
+    emit("insertions/isax_topdown_model", 0.0,
+         f"io_blocks={io.total_blocks};random={io.random_blocks}")
+
+
+def main() -> None:
+    bench_insertions()
+
+
+if __name__ == "__main__":
+    main()

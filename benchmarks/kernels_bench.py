@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: the SIMS scan and construction pass throughput.
+
+On this CPU container the *production* path is the jnp oracle (Pallas
+interpret mode is a correctness harness, not a performance one), so wall
+numbers here are jnp; the derived column reports achieved bytes/s against
+the paper-relevant streaming volume so the bandwidth-bound character of
+each op is visible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import summarization as S
+from repro.kernels import ops
+
+from .common import block, emit, timeit
+
+
+def bench_kernels(n: int = 200000, L: int = 256) -> None:
+    cfg = S.SummaryConfig(series_len=L, segments=16, bits=8)
+    raw = jax.random.normal(jax.random.PRNGKey(0), (n, L))
+    paa, codes = ops.sax_summarize(raw, cfg, mode="jnp")
+    q_paa = paa[0]
+
+    us = timeit(lambda: block(ops.sax_summarize(raw, cfg, mode="jnp")[1]))
+    emit("kernels/sax_summarize/jnp", us,
+         f"GBps={(n * L * 4) / (us * 1e-6) / 1e9:.2f}")
+
+    codes8 = codes.astype(jnp.uint8)
+    us = timeit(lambda: block(ops.zorder(codes8, cfg, mode="jnp")))
+    emit("kernels/zorder/jnp", us,
+         f"GBps={(n * 16) / (us * 1e-6) / 1e9:.2f}")
+
+    us = timeit(lambda: block(ops.mindist(q_paa, codes, cfg, mode="jnp")))
+    emit("kernels/mindist_scan/jnp", us,
+         f"GBps={(n * 16) / (us * 1e-6) / 1e9:.2f};"
+         f"series_per_s={n / (us * 1e-6):.3e}")
+
+    q = raw[0]
+    us = timeit(lambda: block(ops.batch_euclid(q, raw, mode="jnp")))
+    emit("kernels/batch_euclid/jnp", us,
+         f"GBps={(n * L * 4) / (us * 1e-6) / 1e9:.2f}")
+
+    # interpret-mode parity spot check (tiny n — interpret is slow)
+    small = raw[:512]
+    for name, fn_i, fn_j in (
+        ("mindist", lambda: ops.mindist(q_paa, codes[:512], cfg,
+                                        mode="interpret"),
+         lambda: ops.mindist(q_paa, codes[:512], cfg, mode="jnp")),
+    ):
+        a = np.asarray(fn_i())
+        b = np.asarray(fn_j())
+        ok = bool(np.allclose(a, b, rtol=1e-5, atol=1e-5))
+        emit(f"kernels/{name}/interpret_parity", 0.0, f"allclose={ok}")
+
+
+def main() -> None:
+    bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

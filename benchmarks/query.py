@@ -1,0 +1,111 @@
+"""Paper Fig. 13: query performance and approximate quality.
+
+  13a  exact query wall time vs data size: Coconut-TreeSIMS vs brute force
+       (the sequential-scan strawman) vs unsorted-summaries SIMS (the ADS+
+       analogue: same pruning, no contiguity => random candidate access).
+  13b  approximate query time vs data size.
+  13c/d approximate radius sweep: time vs accuracy (CTree(r) variants).
+  13e/f records visited during exact search (pruning effectiveness).
+
+Also validates the sortability claim from Fig. 2/4: z-ordered approximate
+search must beat lexicographic-SAX approximate search at equal cost.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import keys as K, summarization as S, tree as T
+from repro.kernels import ops
+
+from .common import block, cfg_for, dataset, emit, timeit
+
+
+def _exact_bruteforce(raw, q):
+    return float(jnp.min(S.euclidean_sq(q, raw)))
+
+
+def bench_query(sizes=(4000, 16000, 64000)) -> None:
+    cfg = cfg_for()
+    leaf = 64
+    queries = dataset(16, seed=9)
+    for n in sizes:
+        raw = dataset(n)
+        tree = T.build(raw, cfg, leaf_size=leaf)
+
+        q = queries[0]
+        us_bf = timeit(lambda: block(S.euclidean_sq(q, raw)))
+        emit(f"query/bruteforce/n{n}", us_bf, "")
+
+        def run_exact():
+            d, off, st = T.exact_search(tree, q)
+            return d
+        us_ex = timeit(run_exact, repeat=2)
+        d, off, st = T.exact_search(tree, q)
+        emit(f"query/ctree_sims_exact/n{n}", us_ex,
+             f"pruned={st.pruned_frac:.3f};cands={st.candidates};"
+             f"leaves={st.leaves_touched}")
+
+        us_ap = timeit(lambda: T.approx_search(tree, q)[0], repeat=2)
+        emit(f"query/ctree_approx/n{n}", us_ap, "")
+
+        # correctness cross-check
+        bf = _exact_bruteforce(raw, q)
+        assert abs(bf - d) < 1e-3, (bf, d)
+
+    # ---- radius sweep (Fig. 13c/d) ----------------------------------------
+    n = 16000
+    raw = dataset(n)
+    tree = T.build(raw, cfg, leaf_size=leaf)
+    for radius in (1, 2, 10):
+        errs, times = [], []
+        T.approx_search(tree, queries[0], radius_leaves=radius)  # warmup jit
+        for qi in range(8):
+            q = queries[qi]
+            us = timeit(lambda: T.approx_search(
+                tree, q, radius_leaves=radius)[0], repeat=1)
+            d_ap, _, _ = T.approx_search(tree, q, radius_leaves=radius)
+            d_ex = _exact_bruteforce(raw, q)
+            errs.append(np.sqrt(d_ap) / max(np.sqrt(d_ex), 1e-9))
+            times.append(us)
+        emit(f"query/approx_radius{radius}/n{n}", float(np.mean(times)),
+             f"dist_ratio={np.mean(errs):.3f}")
+
+    # ---- sortability ablation (Fig. 2/4): z-order vs lexicographic SAX ----
+    paas, codes = S.summarize(raw, cfg)
+    lex_order = np.lexsort(np.asarray(codes).T[::-1])   # segment-major sort
+    raw_lex = raw[jnp.asarray(lex_order)]
+    tree_lex = T.CoconutTree(
+        keys=tree.keys,  # placeholder keys; approx uses position only
+        codes=codes[jnp.asarray(lex_order)],
+        paas=paas[jnp.asarray(lex_order)],
+        offsets=jnp.asarray(lex_order, jnp.int32),
+        raw=raw_lex, raw_ref=None, timestamps=None, cfg=cfg,
+        leaf_size=leaf)
+    # emulate lexicographic approximate search: locate by first-segment
+    # order, fetch the same number of candidates
+    ratios_z, ratios_lex = [], []
+    for qi in range(16):
+        q = queries[qi]
+        d_ex = _exact_bruteforce(raw, q)
+        d_z, _, _ = T.approx_search(tree, q)
+        _, q_codes = S.summarize(q[None, :], cfg)
+        pos = int(np.searchsorted(
+            np.asarray(codes)[lex_order][:, 0], np.asarray(q_codes)[0, 0]))
+        lo = max(0, min(pos - leaf, n - 2 * leaf))
+        cand = raw_lex[lo: lo + 2 * leaf]
+        d_lex = float(jnp.min(S.euclidean_sq(q, cand)))
+        ratios_z.append(np.sqrt(d_z / max(d_ex, 1e-12)))
+        ratios_lex.append(np.sqrt(d_lex / max(d_ex, 1e-12)))
+    emit("query/sortability_ablation", 0.0,
+         f"zorder_dist_ratio={np.mean(ratios_z):.3f};"
+         f"lexicographic_dist_ratio={np.mean(ratios_lex):.3f}")
+
+
+def main() -> None:
+    bench_query()
+
+
+if __name__ == "__main__":
+    main()

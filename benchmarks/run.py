@@ -1,0 +1,36 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+
+  construction   Fig. 11a/b/d/e   bulk-load vs top-down build
+  space          Fig. 11c         fill factors / leaf counts
+  segments       Fig. 10/12       segment-count sweep
+  query          Fig. 13a-f       exact/approx performance + quality
+  insertions     Fig. 15          LSM vs rebuild vs top-down model
+  windows        Fig. 16-19       PP / TP / BTP sliding windows
+  workload       Fig. 14          complete workload, seismic-like data
+  kernels        (infra)          hot-loop throughput + kernel parity
+  roofline       (assignment)     arch x shape terms from the dry-run
+"""
+import sys
+
+
+def main() -> None:
+    from . import (construction, distributed_bench, insertions,
+                   kernels_bench, query, roofline, segments, space,
+                   windows, workload)
+    mods = {
+        "construction": construction, "space": space,
+        "segments": segments, "query": query, "insertions": insertions,
+        "windows": windows, "workload": workload,
+        "kernels": kernels_bench, "distributed": distributed_bench,
+        "roofline": roofline,
+    }
+    only = sys.argv[1:] or list(mods)
+    print("name,us_per_call,derived")
+    for name in only:
+        mods[name].main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 10/12: the segment-count sweep.
+
+More segments = better pruning but bigger summaries (slower construction,
+more key words).  The paper picks 16 segments as the knee; this bench
+reproduces the trade-off curve: construction time, exact-query pruning
+power, and summary bytes per series.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import keys as K, summarization as S, tree as T
+
+from .common import block, dataset, emit, timeit
+
+
+def bench_segments(n: int = 16000, L: int = 256,
+                   segment_counts=(4, 8, 16, 32)) -> None:
+    raw = dataset(n, L=L)
+    queries = dataset(32, L=L, seed=7)
+    for w in segment_counts:
+        cfg = S.SummaryConfig(series_len=L, segments=w, bits=8)
+        us = timeit(lambda: block(T.build(raw, cfg, leaf_size=256).keys))
+        tree = T.build(raw, cfg, leaf_size=256)
+        # pruning power: fraction of the dataset below the exact-NN bound
+        pruned = []
+        for qi in range(queries.shape[0]):
+            q = queries[qi]
+            q_paa = S.paa(q[None, :], w)[0]
+            md = np.asarray(S.mindist_sq(q_paa, tree.codes, cfg))
+            ed = np.asarray(S.euclidean_sq(q, raw)).min()
+            pruned.append((md > ed).mean())
+        emit(f"segments/w{w}", us,
+             f"pruned={np.mean(pruned):.3f};"
+             f"summary_bytes={w};key_words={cfg.n_words}")
+
+
+def main() -> None:
+    bench_segments()
+
+
+if __name__ == "__main__":
+    main()

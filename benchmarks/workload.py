@@ -1,0 +1,74 @@
+"""Paper Fig. 14: complete workload (construction + 100 exact queries) on a
+"real-like" dataset (synthetic seismic: overlapping sliding windows, denser
+value distribution => harder pruning, as the paper observes for
+astronomy/seismic data).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import summarization as S, tree as T
+from repro.core.metrics import IOStats
+from repro.core.trie import ISaxIndex
+
+from .common import cfg_for, emit, seismic_like, timeit
+
+
+def bench_workload(n: int = 24000, n_queries: int = 20) -> None:
+    cfg = cfg_for()
+    leaf = 64
+    raw = seismic_like(n)
+    queries = seismic_like(n_queries, seed=11)
+
+    def full_ctree():
+        io = IOStats(leaf)
+        tree = T.build(raw, cfg, leaf_size=leaf, io=io)
+        pruned = []
+        for qi in range(n_queries):
+            _, _, st = T.exact_search(tree, queries[qi], io=io)
+            pruned.append(st.pruned_frac)
+        return io, float(np.mean(pruned))
+
+    us = timeit(full_ctree, repeat=1)
+    io, pruned = full_ctree()
+    emit("workload/ctree_seismic", us,
+         f"pruned={pruned:.3f};io_blocks={io.total_blocks}")
+
+    # query-only phase (index already built) — the steady-state cost
+    tree = T.build(raw, cfg, leaf_size=leaf)
+    T.exact_search(tree, queries[0])      # warmup jit
+
+    def queries_only():
+        for qi in range(n_queries):
+            T.exact_search(tree, queries[qi])
+
+    us_q = timeit(queries_only, repeat=1)
+    emit("workload/ctree_seismic_queries_only", us_q,
+         f"per_query_us={us_q / n_queries:.0f}")
+
+    # brute-force full workload for scale
+    def full_bf():
+        for qi in range(n_queries):
+            jnp.min(S.euclidean_sq(queries[qi], raw)).block_until_ready()
+
+    us_bf = timeit(full_bf, repeat=1)
+    emit("workload/bruteforce_seismic", us_bf, "")
+
+    # construction-only comparison on the harder data
+    _, codes = S.summarize(raw, cfg)
+    io = IOStats(leaf)
+    isax = ISaxIndex(cfg, leaf_size=leaf, io=io)
+    us = timeit(lambda: ISaxIndex(cfg, leaf_size=leaf).bulk_insert(
+        np.asarray(codes[:8000])), repeat=1)
+    emit("workload/isax_build8k_seismic", us,
+         f"(subset: top-down is the bottleneck the paper removes)")
+
+
+def main() -> None:
+    bench_workload()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: build a Coconut-Tree over a million-point series collection
+and answer exact + approximate nearest-neighbor queries.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SummaryConfig, build, approx_search, exact_search
+from repro.core import summarization as S
+from repro.data.series import query_workload, random_walk
+
+N, L = 50_000, 256
+
+
+def main() -> None:
+    cfg = SummaryConfig(series_len=L, segments=16, bits=8)
+    print(f"generating {N} random-walk series of length {L} ...")
+    raw = random_walk(jax.random.PRNGKey(0), N, L)
+
+    t0 = time.perf_counter()
+    tree = build(raw, cfg, leaf_size=256)
+    print(f"bulk-loaded Coconut-Tree in {time.perf_counter()-t0:.2f}s "
+          f"({tree.n} entries, {tree.n_leaves} leaves, 100% contiguous)")
+
+    queries = query_workload(jax.random.PRNGKey(1), raw, 5)
+    for i in range(queries.shape[0]):
+        q = queries[i]
+        t0 = time.perf_counter()
+        d_ap, off_ap, _ = approx_search(tree, q)
+        t_ap = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        d_ex, off_ex, st = exact_search(tree, q)
+        t_ex = time.perf_counter() - t0
+        bf = float(jnp.min(S.euclidean_sq(q, raw)))
+        print(f"q{i}: approx d={d_ap:9.4f} ({t_ap*1e3:6.1f} ms)  "
+              f"exact d={d_ex:9.4f} ({t_ex*1e3:6.1f} ms, "
+              f"pruned {st.pruned_frac:5.1%})  brute={bf:9.4f}")
+        assert abs(d_ex - bf) < 1e-3
+
+
+if __name__ == "__main__":
+    main()

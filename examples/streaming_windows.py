@@ -1,0 +1,63 @@
+"""Streaming ingestion + variable-size window queries with Coconut-LSM.
+
+Simulates an infrastructure-monitoring stream: batches of series arrive
+continuously; exact nearest-neighbor queries run over sliding windows of
+different sizes.  BTP (the paper's bounded temporal partitioning) is
+compared live against TP and PP on the same stream.
+
+Run:  PYTHONPATH=src python examples/streaming_windows.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SummaryConfig
+from repro.core.lsm import CoconutLSM
+from repro.core.metrics import IOStats
+from repro.data.series import series_batches
+
+L = 128
+BATCHES = 12
+BATCH = 1500
+
+
+def main() -> None:
+    cfg = SummaryConfig(series_len=L, segments=16, bits=8)
+    engines = {}
+    for mode in ("pp", "tp", "btp"):
+        engines[mode] = CoconutLSM(cfg, buffer_capacity=2048,
+                                   leaf_size=128, mode=mode,
+                                   io=IOStats(128))
+
+    rng = np.random.RandomState(0)
+    stream = series_batches(jax.random.PRNGKey(0),
+                            BATCHES * BATCH, BATCH, L)
+    totals = {m: 0.0 for m in engines}
+    touched = {m: 0 for m in engines}
+    for bi, batch in enumerate(stream):
+        for mode, lsm in engines.items():
+            lsm.insert(batch)
+            lsm.flush()
+        q = batch[rng.randint(len(batch))]
+        for window in (2000, 8000):
+            for mode, lsm in engines.items():
+                t0 = time.perf_counter()
+                d, off, st = lsm.search_exact(q, window=window)
+                totals[mode] += time.perf_counter() - t0
+                touched[mode] += st["partitions_touched"]
+        if bi % 4 == 3:
+            print(f"[batch {bi+1:2d}] runs: "
+                  + "  ".join(f"{m}={len(l.runs)}"
+                              for m, l in engines.items()))
+    print("\nper-mode totals over the stream (lower is better):")
+    for m in engines:
+        print(f"  {m.upper():4s} query_time={totals[m]*1e3:8.1f} ms   "
+              f"partitions_touched={touched[m]:4d}   "
+              f"io_blocks={engines[m].io.total_blocks}")
+    assert touched["btp"] <= touched["tp"]
+    print("\nBTP touches the fewest partitions — the paper's Sec. 5 claim.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model for a
+few hundred steps on CPU with the full production runtime — sharded-state
+train step, AdamW with warmup+cosine, async checkpointing, fault-tolerant
+loop, stateless data pipeline.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+(defaults trimmed so the example finishes in minutes on one CPU core; pass
+--d-model 768 --layers 12 for the full ~100M config on real hardware)
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models.steps import init_train_state, make_train_step
+from repro.models.transformer import make_model
+from repro.data.tokens import TokenPipeline
+from repro.train.optimizer import AdamWConfig
+from repro.train.runtime import RuntimeConfig, TrainRuntime
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="llama-mini", family="dense", n_layers=args.layers,
+        d_model=args.d_model, n_heads=max(args.d_model // 64, 2),
+        n_kv_heads=max(args.d_model // 128, 1),
+        d_ff=4 * args.d_model, vocab=2048, param_dtype="float32")
+    model = make_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} {n_params/1e6:.1f}M params")
+
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, opt_cfg=opt, remat=False))
+    data = TokenPipeline(cfg.vocab, batch=args.batch, seq_len=args.seq)
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        rt = TrainRuntime(
+            step, state, data, ckdir,
+            RuntimeConfig(total_steps=args.steps, checkpoint_every=50,
+                          log_every=20))
+        report = rt.run()
+    first, last = rt.metrics_log[0], rt.metrics_log[-1]
+    print(f"\nloss {first['loss']:.3f} (step {first['step']}) -> "
+          f"{last['loss']:.3f} (step {last['step']})")
+    print(f"runtime report: {report}")
+    assert last["loss"] < first["loss"], "training failed to learn"
+
+
+if __name__ == "__main__":
+    main()

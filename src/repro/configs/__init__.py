@@ -1,0 +1,6 @@
+"""Architecture configs: the 10 assigned archs + the paper's index config.
+
+Each module exports CONFIG (exact published numbers) and SMOKE (reduced,
+same family) — see registry.get().
+"""
+from .registry import ARCHS, get  # noqa: F401

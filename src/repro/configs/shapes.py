@@ -1,0 +1,93 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Four LM shapes (seq_len x global_batch):
+    train_4k     4,096 x 256    -> lowers train_step
+    prefill_32k  32,768 x 32    -> lowers prefill_step
+    decode_32k   32,768 x 128   -> lowers serve_step (1 token, 32k cache)
+    long_500k    524,288 x 1    -> lowers serve_step; sub-quadratic archs only
+
+``input_specs`` returns (step_kind, specs) where specs are ShapeDtypeStructs
+— weak-type-correct, shardable, and never allocated (dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import Model
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "applicable",
+           "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    """Shape applicability rules (see DESIGN.md §Arch-applicability)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    if applicable(cfg, shape_name):
+        return None
+    return (f"{cfg.name} is a pure full-attention architecture; long_500k "
+            f"requires sub-quadratic decode state (SSM/hybrid only)")
+
+
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str
+                ) -> Tuple[str, Dict[str, Any]]:
+    """Build dry-run input specs for (arch x shape).
+
+    Returns (step_kind, kwargs) where kwargs feed .lower():
+      train:   {"batch": {...}}
+      prefill: {"batch": {...}}
+      decode:  {"cache": ..., "tokens": ..., "pos": ...}
+    Parameters are supplied separately (from jax.eval_shape of init).
+    """
+    ss = SHAPES[shape_name]
+    if not applicable(cfg, shape_name):
+        raise ValueError(skip_reason(cfg, shape_name))
+    B, T = ss.global_batch, ss.seq_len
+    model = Model(cfg)
+    if ss.step in ("train", "prefill"):
+        batch: Dict[str, Any] = {
+            "tokens": _tok((B, T)),
+        }
+        if ss.step == "train":
+            batch["labels"] = _tok((B, T))
+        if cfg.frontend != "none":
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return ss.step, {"batch": batch}
+    # decode: single token against a T-length cache
+    enc_len = cfg.frontend_tokens if cfg.is_encdec else 0
+    cache = model.decode_cache_specs(B, T, enc_len=enc_len)
+    return "decode", {
+        "cache": cache,
+        "tokens": _tok((B, 1)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

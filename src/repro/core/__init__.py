@@ -1,0 +1,18 @@
+"""Coconut core: sortable summarizations + the index family built on them.
+
+Paper: "Coconut: sortable summarizations for scalable indexes over static
+and streaming data series" (Kondylakis, Dayan, Zoumpatianos, Palpanas).
+
+Layers:
+  * :mod:`repro.core.keys`            z-order (invSAX) multi-word keys
+  * :mod:`repro.core.summarization`   PAA / SAX / mindist lower bounds
+  * :mod:`repro.core.tree`            Coconut-Tree (median split, SIMS exact)
+  * :mod:`repro.core.trie`            Coconut-Trie + iSAX top-down baseline
+  * :mod:`repro.core.lsm`             Coconut-LSM + PP/TP/BTP windowing
+  * :mod:`repro.core.metrics`         disk-access-model accounting
+"""
+from . import keys, metrics, summarization  # noqa: F401
+from .lsm import CoconutLSM  # noqa: F401
+from .summarization import SummaryConfig  # noqa: F401
+from .tree import CoconutTree, approx_search, build, exact_search  # noqa: F401
+from .trie import CoconutTrie, ISaxIndex, build_trie  # noqa: F401

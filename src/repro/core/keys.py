@@ -1,0 +1,184 @@
+"""Multi-word z-order (Morton) keys for sortable summarizations.
+
+The paper's Algorithm 1 (``invertSum``) interleaves the bits of the ``w`` SAX
+segments so that all most-significant bits precede all less-significant bits.
+With the paper's default of ``w=16`` segments at ``b=8`` bits each, the
+interleaved key is 128 bits wide.  JAX (x64 disabled) has no native uint64
+arithmetic, so keys are represented as ``[N, n_words]`` arrays of uint32
+words, **big-endian**: word 0 holds the 32 most-significant interleaved bits.
+
+Bit layout (MSB-first global bit position p in [0, w*b)):
+    p = i * w + j   <=>   bit (b-1-i) of segment j        (i=0 is each
+segment's most-significant bit), exactly the paper's inverted layout.
+
+Everything here is pure jnp and jit-friendly; the Pallas kernel in
+``repro.kernels.zorder`` implements the same packing for the hot path and is
+validated against :func:`interleave_codes`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "n_key_words",
+    "interleave_codes",
+    "deinterleave_key",
+    "lexsort_keys",
+    "key_less",
+    "key_less_equal",
+    "searchsorted_keys",
+    "keys_to_bigint",
+    "bigint_to_key",
+]
+
+
+def n_key_words(w: int, b: int) -> int:
+    """Number of 32-bit words needed for a ``w``-segment, ``b``-bit key."""
+    return max(1, -(-(w * b) // 32))
+
+
+@functools.partial(jax.jit, static_argnames=("w", "b"))
+def interleave_codes(codes: jax.Array, *, w: int, b: int) -> jax.Array:
+    """Pack SAX codes ``[N, w]`` (values < 2**b) into z-order keys ``[N, words]``.
+
+    Pure-jnp reference implementation of the paper's ``invertSum``: global bit
+    ``p = i*w + j`` (MSB first) takes bit ``(b-1-i)`` of segment ``j``.
+    """
+    if codes.ndim != 2 or codes.shape[1] != w:
+        raise ValueError(f"codes must be [N, {w}], got {codes.shape}")
+    codes = codes.astype(jnp.uint32)
+    nw = n_key_words(w, b)
+    total = w * b
+    words = [jnp.zeros(codes.shape[:1], jnp.uint32) for _ in range(nw)]
+    for p in range(total):
+        i, j = divmod(p, w)  # i-th significance level, segment j
+        src_bit = (codes[:, j] >> jnp.uint32(b - 1 - i)) & jnp.uint32(1)
+        word_idx, bit_idx = divmod(p, 32)
+        shift = jnp.uint32(31 - bit_idx)
+        words[word_idx] = words[word_idx] | (src_bit << shift)
+    # If total bits don't fill the last word, bits are left-aligned (MSB side),
+    # which preserves lexicographic order.
+    return jnp.stack(words, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "b"))
+def deinterleave_key(keys: jax.Array, *, w: int, b: int) -> jax.Array:
+    """Inverse of :func:`interleave_codes`: keys ``[N, words]`` -> codes ``[N, w]``.
+
+    The paper stresses that sortable summarizations carry *identical*
+    information (Sec. 4.1): this inverse recovers the SAX word exactly.
+    """
+    nw = n_key_words(w, b)
+    if keys.ndim != 2 or keys.shape[1] != nw:
+        raise ValueError(f"keys must be [N, {nw}], got {keys.shape}")
+    keys = keys.astype(jnp.uint32)
+    segs = [jnp.zeros(keys.shape[:1], jnp.uint32) for _ in range(w)]
+    for p in range(w * b):
+        i, j = divmod(p, w)
+        word_idx, bit_idx = divmod(p, 32)
+        bit = (keys[:, word_idx] >> jnp.uint32(31 - bit_idx)) & jnp.uint32(1)
+        segs[j] = segs[j] | (bit << jnp.uint32(b - 1 - i))
+    return jnp.stack(segs, axis=1)
+
+
+def lexsort_keys(keys: jax.Array) -> jax.Array:
+    """Return the permutation sorting multi-word keys lexicographically.
+
+    ``jnp.lexsort`` treats the *last* key as primary, so feed words reversed.
+    This is the "external sort" of the paper realized on-device.
+    """
+    cols = tuple(keys[:, k] for k in range(keys.shape[1] - 1, -1, -1))
+    return jnp.lexsort(cols)
+
+
+def key_less(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Lexicographic ``a < b`` for ``[..., words]`` uint32 keys (broadcasts)."""
+    nw = a.shape[-1]
+    less = jnp.zeros(jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]), bool)
+    eq = jnp.ones_like(less)
+    for k in range(nw):
+        ak, bk = a[..., k], b[..., k]
+        less = less | (eq & (ak < bk))
+        eq = eq & (ak == bk)
+    return less
+
+
+def key_less_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    return ~key_less(b, a)
+
+
+@functools.partial(jax.jit, static_argnames=("side",))
+def searchsorted_keys(sorted_keys: jax.Array, query_keys: jax.Array,
+                      side: str = "left") -> jax.Array:
+    """Vectorized lexicographic binary search over multi-word keys.
+
+    ``sorted_keys``: ``[N, words]`` sorted ascending (lexicographically).
+    ``query_keys``:  ``[Q, words]``.
+    Returns ``[Q]`` int32 insertion points.  This replaces the paper's B-tree
+    root-to-leaf descent: a static sorted array + fence pointers needs only
+    binary search (log2 N "internal node" probes, zero pointer chasing).
+    """
+    n = sorted_keys.shape[0]
+    q = query_keys.shape[0]
+    lo = jnp.zeros((q,), jnp.int32)
+    hi = jnp.full((q,), n, jnp.int32)
+    steps = max(1, int(np.ceil(np.log2(max(n, 1) + 1))) + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        mid_keys = sorted_keys[jnp.clip(mid, 0, max(n - 1, 0))]
+        if side == "left":
+            go_right = key_less(mid_keys, query_keys)          # a[mid] <  q
+        else:
+            go_right = key_less_equal(mid_keys, query_keys)    # a[mid] <= q
+        lo = jnp.where(go_right & (lo < hi), mid + 1, lo)
+        hi = jnp.where((~go_right) & (lo < hi), mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# Host-side oracles (numpy / python bigint) for property tests.
+# ---------------------------------------------------------------------------
+
+def keys_to_bigint(keys: np.ndarray) -> list:
+    """[N, words] uint32 -> python big ints (for oracle comparisons)."""
+    keys = np.asarray(keys, dtype=np.uint32)
+    out = []
+    for row in keys:
+        v = 0
+        for word in row:
+            v = (v << 32) | int(word)
+        out.append(v)
+    return out
+
+
+def bigint_to_key(v: int, n_words: int) -> np.ndarray:
+    words = []
+    for k in range(n_words - 1, -1, -1):
+        words.append((v >> (32 * k)) & 0xFFFFFFFF)
+    return np.array(words, dtype=np.uint32)
+
+
+def interleave_oracle(codes: np.ndarray, w: int, b: int) -> list:
+    """Python big-int oracle of the paper's Algorithm 1 (MSB-first)."""
+    codes = np.asarray(codes)
+    out = []
+    total = w * b
+    pad = n_key_words(w, b) * 32 - total
+    for row in codes:
+        v = 0
+        for p in range(total):
+            i, j = divmod(p, w)
+            bit = (int(row[j]) >> (b - 1 - i)) & 1
+            v = (v << 1) | bit
+        out.append(v << pad)  # left-align into the word grid
+    return out

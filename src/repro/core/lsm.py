@@ -1,0 +1,214 @@
+"""Coconut-LSM (Sec. 4.4): the first write-optimized data-series index.
+
+Incoming series are buffered; each buffer flush becomes a sorted run (a
+Coconut-Tree).  Runs are organized in levels of exponentially increasing
+capacity with size ratio ``r=2`` and sort-merged as levels fill, bounding the
+run count at O(log2 N) and the amortized insert cost at O(log2(N)/B) block
+transfers — only possible because sortable summarizations allow *merging*
+temporal partitions instead of re-inserting them top-down.
+
+Window-query modes (Sec. 5) are implemented on this one structure:
+  * ``pp``  — post-processing: merge everything into one run; filter by
+    timestamp after retrieval (the only option for unsortable baselines).
+  * ``tp``  — temporal partitioning: never merge; one run per flush.
+  * ``btp`` — bounded temporal partitioning (the paper's contribution):
+    ratio-2 merging; window queries skip runs older than the window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import summarization as S
+from . import tree as T
+from .metrics import IOStats
+
+__all__ = ["CoconutLSM", "Run"]
+
+
+@dataclasses.dataclass
+class Run:
+    tree: T.CoconutTree
+    level: int
+    t_min: int
+    t_max: int
+
+    @property
+    def n(self) -> int:
+        return self.tree.n
+
+
+class CoconutLSM:
+    """Log-structured Coconut index with pluggable windowing mode."""
+
+    def __init__(self, cfg: S.SummaryConfig, *,
+                 buffer_capacity: int = 4096,
+                 leaf_size: int = 256,
+                 size_ratio: int = 2,
+                 mode: str = "btp",
+                 materialized: bool = True,
+                 io: Optional[IOStats] = None):
+        if mode not in ("pp", "tp", "btp"):
+            raise ValueError(f"unknown windowing mode {mode!r}")
+        self.cfg = cfg
+        self.buffer_capacity = buffer_capacity
+        self.leaf_size = leaf_size
+        self.size_ratio = size_ratio
+        self.mode = mode
+        self.materialized = materialized
+        self.io = io if io is not None else IOStats(leaf_size)
+        self.runs: List[Run] = []          # newest first
+        self._buf_raw: List[np.ndarray] = []
+        self._buf_ts: List[np.ndarray] = []
+        self._buf_count = 0
+        self.clock = 0                     # logical insertion time
+        self.merges = 0
+
+    # ------------------------------------------------------------------ write
+    def insert(self, raw: np.ndarray,
+               timestamps: Optional[np.ndarray] = None) -> None:
+        """Insert a batch of series ``[n, L]`` (buffered; may trigger flush)."""
+        raw = np.asarray(raw, np.float32)
+        n = raw.shape[0]
+        if timestamps is None:
+            timestamps = np.arange(self.clock, self.clock + n, dtype=np.int64)
+        self.clock = int(timestamps.max()) + 1
+        self._buf_raw.append(raw)
+        self._buf_ts.append(np.asarray(timestamps, np.int64))
+        self._buf_count += n
+        while self._buf_count >= self.buffer_capacity:
+            self._flush()
+
+    def flush(self) -> None:
+        """Force-flush the in-memory buffer (e.g. before a snapshot)."""
+        if self._buf_count:
+            self._flush(force=True)
+
+    def _flush(self, force: bool = False) -> None:
+        raw = np.concatenate(self._buf_raw)
+        ts = np.concatenate(self._buf_ts)
+        take = len(raw) if force else self.buffer_capacity
+        head_raw, rest_raw = raw[:take], raw[take:]
+        head_ts, rest_ts = ts[:take], ts[take:]
+        self._buf_raw = [rest_raw] if len(rest_raw) else []
+        self._buf_ts = [rest_ts] if len(rest_ts) else []
+        self._buf_count = len(rest_raw)
+        tree = T.build(jnp.asarray(head_raw), self.cfg,
+                       leaf_size=self.leaf_size,
+                       materialized=self.materialized,
+                       timestamps=jnp.asarray(head_ts),
+                       io=self.io)
+        self.runs.insert(0, Run(tree=tree, level=0,
+                                t_min=int(head_ts.min()),
+                                t_max=int(head_ts.max())))
+        if self.mode != "tp":
+            self._compact()
+
+    def _compact(self) -> None:
+        """Ratio-2 leveling: merge pairs of same-level runs until unique.
+        In ``pp`` mode, merge *everything* into one run (full index)."""
+        if self.mode == "pp":
+            while len(self.runs) > 1:
+                self._merge_pair(len(self.runs) - 2, len(self.runs) - 1)
+            return
+        changed = True
+        while changed:
+            changed = False
+            by_level = {}
+            for i, run in enumerate(self.runs):
+                by_level.setdefault(run.level, []).append(i)
+            for level, idxs in sorted(by_level.items()):
+                if len(idxs) >= self.size_ratio:
+                    self._merge_pair(idxs[0], idxs[1])
+                    changed = True
+                    break
+
+    def _merge_pair(self, i: int, j: int) -> None:
+        a, b = self.runs[i], self.runs[j]
+        merged = T.merge_trees(a.tree, b.tree, io=self.io)
+        self.merges += 1
+        new = Run(tree=merged, level=max(a.level, b.level) + 1,
+                  t_min=min(a.t_min, b.t_min), t_max=max(a.t_max, b.t_max))
+        for k in sorted((i, j), reverse=True):
+            del self.runs[k]
+        # keep newest-first ordering by t_max
+        pos = 0
+        while pos < len(self.runs) and self.runs[pos].t_max > new.t_max:
+            pos += 1
+        self.runs.insert(pos, new)
+
+    # ------------------------------------------------------------------- read
+    @property
+    def n(self) -> int:
+        return sum(r.n for r in self.runs) + self._buf_count
+
+    def _qualifying_runs(self, window: Optional[int]) -> List[Run]:
+        """Runs a query must touch.  BTP/TP skip runs older than the window;
+        PP must touch its single full run regardless (paper Sec. 5)."""
+        if window is None or self.mode == "pp":
+            return list(self.runs)
+        t_lo = self.clock - window
+        return [r for r in self.runs if r.t_max >= t_lo]
+
+    def search_approx(self, query: np.ndarray, *,
+                      window: Optional[int] = None,
+                      radius_leaves: int = 1) -> Tuple[float, int, dict]:
+        """Approximate 1-NN over the qualifying runs (Algorithm 4 per run)."""
+        runs = self._qualifying_runs(window)
+        best = (np.inf, -1)
+        for r in runs:
+            d, off, _ = T.approx_search(r.tree, jnp.asarray(query),
+                                        radius_leaves=radius_leaves,
+                                        io=self.io)
+            if d < best[0]:
+                best = (d, off)
+        return best[0], best[1], {"partitions_touched": len(runs)}
+
+    def search_exact(self, query: np.ndarray, *,
+                     window: Optional[int] = None,
+                     radius_leaves: int = 1) -> Tuple[float, int, dict]:
+        """Exact 1-NN: SIMS per qualifying run with a carried bsf
+        (Algorithm 7), plus timestamp post-filtering in ``pp`` mode."""
+        runs = self._qualifying_runs(window)
+        ts_min = None
+        if window is not None:
+            ts_min = self.clock - window
+        bsf, bsf_off = np.inf, -1
+        touched = 0
+        cands = 0
+        for r in runs:
+            if window is not None and self.mode != "pp" \
+                    and r.t_min >= ts_min:
+                run_ts_min = None        # run entirely inside window
+            else:
+                run_ts_min = ts_min      # straddling run: post-filter
+            d, off, st = T.exact_search(
+                r.tree, jnp.asarray(query), radius_leaves=radius_leaves,
+                io=self.io, ts_min=run_ts_min,
+                bsf=bsf if np.isfinite(bsf) else None)
+            touched += 1
+            cands += st.candidates
+            if d < bsf:
+                bsf, bsf_off = d, off
+        return bsf, bsf_off, {"partitions_touched": touched,
+                              "candidates": cands}
+
+    # ------------------------------------------------------------ diagnostics
+    def level_histogram(self) -> dict:
+        hist = {}
+        for r in self.runs:
+            hist[r.level] = hist.get(r.level, 0) + 1
+        return hist
+
+    def check_invariants(self) -> None:
+        """Ratio-2 leveling invariant: at most one run per level (btp/pp)."""
+        if self.mode == "tp":
+            return
+        hist = self.level_histogram()
+        for level, cnt in hist.items():
+            assert cnt < self.size_ratio + 1, \
+                f"level {level} has {cnt} runs (ratio {self.size_ratio})"

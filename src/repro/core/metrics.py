@@ -1,0 +1,71 @@
+"""Disk-access-model accounting, ported to the TPU memory hierarchy.
+
+The paper analyzes construction/query/update cost in the disk access model
+(Aggarwal & Vitter): cost = #blocks moved between memory and storage, with
+sequential runs far cheaper than random block touches.  On TPU the analogous
+costs are contiguous HBM streams vs gathers.  We keep the paper's *counts* so
+its complexity claims (O(N/B) bulk-load vs O(N) top-down, etc.) can be
+validated numerically, and translate to bytes for the roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict
+
+
+@dataclasses.dataclass
+class IOStats:
+    """Block-level accounting.  ``block_series``: entries per block (paper: B)."""
+    block_series: int = 2000
+    counters: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+    def seq_read(self, n_entries: int) -> None:
+        self.counters["seq_read_blocks"] += self._blocks(n_entries)
+
+    def seq_write(self, n_entries: int) -> None:
+        self.counters["seq_write_blocks"] += self._blocks(n_entries)
+
+    def rand_read(self, n_blocks: int = 1) -> None:
+        self.counters["rand_read_blocks"] += n_blocks
+
+    def rand_write(self, n_blocks: int = 1) -> None:
+        self.counters["rand_write_blocks"] += n_blocks
+
+    def _blocks(self, n_entries: int) -> int:
+        return max(1, -(-n_entries // self.block_series))
+
+    @property
+    def total_blocks(self) -> int:
+        return sum(self.counters.values())
+
+    @property
+    def random_blocks(self) -> int:
+        return (self.counters["rand_read_blocks"]
+                + self.counters["rand_write_blocks"])
+
+    @property
+    def sequential_blocks(self) -> int:
+        return (self.counters["seq_read_blocks"]
+                + self.counters["seq_write_blocks"])
+
+    def merged(self, other: "IOStats") -> "IOStats":
+        out = IOStats(self.block_series)
+        for k, v in self.counters.items():
+            out.counters[k] += v
+        for k, v in other.counters.items():
+            out.counters[k] += v
+        return out
+
+    def as_dict(self) -> Dict[str, int]:
+        d = dict(self.counters)
+        d["total_blocks"] = self.total_blocks
+        return d
+
+
+def fill_factor(leaf_sizes, capacity: int) -> float:
+    """Mean leaf occupancy (paper Fig. 11c: ~10% prefix vs ~97% median)."""
+    if len(leaf_sizes) == 0:
+        return 0.0
+    return float(sum(leaf_sizes)) / (len(leaf_sizes) * capacity)

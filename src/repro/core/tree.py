@@ -1,0 +1,314 @@
+"""Coconut-Tree: bottom-up bulk-loaded, median-split, contiguous index.
+
+Paper Sec. 4.3.  The index is a *sorted array* of (invSAX key, offset[, raw])
+plus fence pointers — the static equivalent of a bulk-loaded UB-tree.  Because
+the data is totally ordered by the z-order key:
+
+* construction = summarize + sort (the external sort of Algorithm 3),
+* every "leaf" (block of ``leaf_size`` consecutive entries) is 100% full
+  except the last — median splitting taken to its limit,
+* approximate search = binary search + a radius of adjacent leaves
+  (Algorithm 4),
+* exact search = SIMS (Algorithm 5): scan the in-memory summarizations with
+  the mindist lower bound, fetch only unpruned raw series.
+
+Materialized (``Coconut-Tree-Full``) stores raw series co-sorted with keys;
+non-materialized stores offsets into the caller's raw array (gathers at query
+time — the paper's extra I/O to the raw file, which our benchmarks surface as
+gather cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import keys as K
+from . import summarization as S
+from .metrics import IOStats
+
+__all__ = ["CoconutTree", "build", "approx_search", "exact_search",
+           "exact_search_budgeted", "merge_trees", "SearchStats"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CoconutTree:
+    """Sorted, contiguous Coconut-Tree index (arrays live on device)."""
+    keys: jax.Array                 # [N, n_words] uint32, z-order sorted
+    codes: jax.Array                # [N, w] uint8 SAX words (sorted order)
+    paas: jax.Array                 # [N, w] float32 PAA (sorted order)
+    offsets: jax.Array              # [N] int32: position in original raw file
+    raw: Optional[jax.Array]        # [N, L] sorted raw series (materialized)
+    raw_ref: Optional[jax.Array]    # [N, L] *unsorted* raw (non-materialized)
+    timestamps: Optional[jax.Array]  # [N] int32 insertion times (optional)
+    cfg: S.SummaryConfig = dataclasses.field(
+        default_factory=S.SummaryConfig)
+    leaf_size: int = 256
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.keys, self.codes, self.paas, self.offsets,
+                    self.raw, self.raw_ref, self.timestamps)
+        aux = (self.cfg, self.leaf_size)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cfg, leaf_size = aux
+        return cls(*children, cfg=cfg, leaf_size=leaf_size)
+
+    # -- conveniences --------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return -(-self.n // self.leaf_size)
+
+    @property
+    def materialized(self) -> bool:
+        return self.raw is not None
+
+    def series(self, idx: jax.Array) -> jax.Array:
+        """Fetch raw series rows for sorted-order indices ``idx``."""
+        if self.raw is not None:
+            return self.raw[idx]
+        return self.raw_ref[self.offsets[idx]]
+
+    @property
+    def fences(self) -> jax.Array:
+        """First key of every leaf — the (implicit) internal-node layer."""
+        return self.keys[:: self.leaf_size]
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Per-query accounting for the paper's query-cost experiments."""
+    candidates: int = 0          # raw series whose true ED was computed
+    pruned_frac: float = 0.0     # fraction of index pruned by mindist
+    leaves_touched: int = 0      # distinct leaf blocks read
+    exact: bool = True
+
+
+def build(raw: jax.Array,
+          cfg: S.SummaryConfig,
+          *,
+          leaf_size: int = 256,
+          materialized: bool = True,
+          timestamps: Optional[jax.Array] = None,
+          io: Optional[IOStats] = None,
+          znorm: bool = False) -> CoconutTree:
+    """Bulk-load a Coconut-Tree from raw series ``[N, L]`` (Algorithm 3).
+
+    summarize -> invert (z-order) -> sort -> (optionally) co-sort raw.
+    O(N/B) block transfers in the paper's model: we stream the raw file once
+    (seq read), write the sorted summaries once (seq write), and for the
+    materialized variant also rewrite the raw data once.
+    """
+    raw = jnp.asarray(raw, jnp.float32)
+    if znorm:
+        raw = S.znormalize(raw)
+    n = raw.shape[0]
+    paas, codes = S.summarize(raw, cfg)
+    keys = S.invsax_keys(codes, cfg)
+    order = K.lexsort_keys(keys)
+    keys = keys[order]
+    codes = codes[order]
+    paas = paas[order]
+    offsets = order.astype(jnp.int32)
+    ts = timestamps[order] if timestamps is not None else None
+    if io is not None:
+        io.seq_read(n)            # pass over the raw file (summarize)
+        io.seq_write(n)           # write sorted summaries
+        io.seq_read(n)            # merge pass read
+        io.seq_write(n)           # merge pass write
+        if materialized:
+            io.seq_read(n)        # extra pass: co-sort raw into leaves
+            io.seq_write(n)
+    return CoconutTree(
+        keys=keys, codes=codes, paas=paas, offsets=offsets,
+        raw=raw[order] if materialized else None,
+        raw_ref=None if materialized else raw,
+        timestamps=ts, cfg=cfg, leaf_size=leaf_size)
+
+
+# ---------------------------------------------------------------------------
+# Approximate search (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("radius_leaves",))
+def _approx_candidates(tree: CoconutTree, query: jax.Array,
+                       radius_leaves: int = 1):
+    """Return (cand_dists_sq, cand_sorted_idx) for the leaves around the
+    query's z-order insertion point.  Fixed-size => jit-friendly."""
+    cfg = tree.cfg
+    q = query.astype(jnp.float32)
+    q_paa = S.paa(q[None, :], cfg.segments)[0]
+    q_codes = S.sax_encode(q_paa[None, :], cfg.bits)
+    q_key = K.interleave_codes(q_codes, w=cfg.segments, b=cfg.bits)
+    pos = K.searchsorted_keys(tree.keys, q_key)[0]
+    span = 2 * radius_leaves * tree.leaf_size
+    start = jnp.clip(pos - span // 2, 0, jnp.maximum(tree.n - span, 0))
+    idx = start + jnp.arange(span, dtype=jnp.int32)
+    idx = jnp.clip(idx, 0, tree.n - 1)
+    cand = tree.series(idx)
+    d = S.euclidean_sq(q, cand)
+    return d, idx
+
+
+def approx_search(tree: CoconutTree, query: jax.Array, *,
+                  radius_leaves: int = 1,
+                  io: Optional[IOStats] = None
+                  ) -> Tuple[float, int, SearchStats]:
+    """Approximate 1-NN: visit the leaves around the query's sorted position.
+
+    Returns (best ED^2, offset into the original raw file, stats).
+    """
+    d, idx = _approx_candidates(tree, query, radius_leaves=radius_leaves)
+    best = int(jnp.argmin(d))
+    stats = SearchStats(candidates=int(d.shape[0]),
+                        leaves_touched=2 * radius_leaves,
+                        exact=False)
+    if io is not None:
+        io.rand_read(2 * radius_leaves)
+    return float(d[best]), int(tree.offsets[idx[best]]), stats
+
+
+# ---------------------------------------------------------------------------
+# Exact search: SIMS (Algorithm 5)
+# ---------------------------------------------------------------------------
+
+def exact_search(tree: CoconutTree, query: jax.Array, *,
+                 radius_leaves: int = 1,
+                 chunk: int = 4096,
+                 io: Optional[IOStats] = None,
+                 mindist_fn=None,
+                 ts_min: Optional[int] = None,
+                 bsf: Optional[float] = None,
+                 ) -> Tuple[float, int, SearchStats]:
+    """Exact 1-NN via skip-sequential SIMS scan.
+
+    1. approximate search seeds the best-so-far (bsf);
+    2. mindist lower bounds for *all* in-memory summaries (Pallas hot loop);
+    3. only unpruned series are fetched and verified, in sorted-offset chunks
+       (skip-sequential access, as in the paper).
+
+    ``ts_min``: if set, restrict to entries with timestamp >= ts_min
+    (post-processing window filtering, Sec. 5.1).
+    ``bsf``: optionally seed with an externally-known bound (LSM run chaining).
+    """
+    q = jnp.asarray(query, jnp.float32)
+    d0, off0, _ = approx_search(tree, q, radius_leaves=radius_leaves, io=io)
+    best_d, best_off = d0, off0
+    if bsf is not None and bsf < best_d:
+        best_d, best_off = bsf, -1
+
+    cfg = tree.cfg
+    q_paa = S.paa(q[None, :], cfg.segments)[0]
+    if mindist_fn is None:
+        mindist_fn = lambda qp, codes: S.mindist_sq(qp, codes, cfg)
+    md = np.asarray(mindist_fn(q_paa, tree.codes))
+
+    if ts_min is not None and tree.timestamps is not None:
+        alive = np.asarray(tree.timestamps) >= ts_min
+    else:
+        alive = np.ones(tree.n, bool)
+
+    cand = np.nonzero((md < best_d) & alive)[0]
+    stats = SearchStats(candidates=0, exact=True)
+    stats.pruned_frac = 1.0 - len(cand) / max(tree.n, 1)
+    stats.leaves_touched = len(np.unique(cand // tree.leaf_size))
+    if io is not None and len(cand):
+        # skip-sequential: runs of adjacent leaves count as sequential blocks
+        io.seq_read(len(cand))
+
+    # verify in chunks, re-pruning against the improving bsf (skip-sequential)
+    for s in range(0, len(cand), chunk):
+        block = cand[s:s + chunk]
+        block = block[md[block] < best_d]
+        if len(block) == 0:
+            continue
+        rows = tree.series(jnp.asarray(block))
+        d = np.asarray(S.euclidean_sq(q, rows))
+        stats.candidates += len(block)
+        i = int(np.argmin(d))
+        if d[i] < best_d:
+            best_d = float(d[i])
+            best_off = int(np.asarray(tree.offsets)[block[i]])
+    return best_d, best_off, stats
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "radius_leaves"))
+def exact_search_budgeted(tree: CoconutTree, query: jax.Array, *,
+                          budget: int = 1024, radius_leaves: int = 1):
+    """Jit-friendly exact search with a fixed verification budget.
+
+    Verifies the ``budget`` smallest-mindist candidates.  Returns
+    (best_d, best_offset, certified) where ``certified`` is True iff the
+    (budget)-th smallest mindist already exceeds the best found distance —
+    i.e. the answer is provably exact.  Used on the serving path where
+    data-dependent shapes are not allowed.
+    """
+    q = jnp.asarray(query, jnp.float32)
+    d0, idx = _approx_candidates(tree, q, radius_leaves=radius_leaves)
+    seed = jnp.min(d0)
+    cfg = tree.cfg
+    q_paa = S.paa(q[None, :], cfg.segments)[0]
+    md = S.mindist_sq(q_paa, tree.codes, cfg)
+    neg_md, order = jax.lax.top_k(-md, budget)
+    cand_md = -neg_md
+    rows = tree.series(order)
+    d = S.euclidean_sq(q, rows)
+    d = jnp.where(cand_md < jnp.minimum(seed, d.min()), d, jnp.inf)
+    best_i = jnp.argmin(d)
+    best_d = jnp.minimum(d[best_i], seed)
+    from_seed = seed <= d[best_i]
+    seed_off = tree.offsets[idx[jnp.argmin(d0)]]
+    best_off = jnp.where(from_seed, seed_off, tree.offsets[order[best_i]])
+    certified = cand_md[budget - 1] >= best_d
+    return best_d, best_off, certified
+
+
+# ---------------------------------------------------------------------------
+# Merging (LSM compaction building block)
+# ---------------------------------------------------------------------------
+
+def merge_trees(a: CoconutTree, b: CoconutTree, *,
+                io: Optional[IOStats] = None) -> CoconutTree:
+    """Sort-merge two Coconut-Trees into one (LSM compaction, Sec. 4.4).
+
+    On device this is concat + lexsort; in the paper's I/O model it is a
+    sequential read of both runs and a sequential write of the result.
+    """
+    if a.cfg != b.cfg:
+        raise ValueError("cannot merge trees with different summary configs")
+    if a.materialized != b.materialized:
+        raise ValueError("cannot merge materialized with non-materialized")
+    keys = jnp.concatenate([a.keys, b.keys])
+    codes = jnp.concatenate([a.codes, b.codes])
+    paas = jnp.concatenate([a.paas, b.paas])
+    # offsets in the merged view address a virtual concatenated raw file
+    offs = jnp.concatenate([a.offsets, b.offsets + a.n])
+    ts = None
+    if a.timestamps is not None and b.timestamps is not None:
+        ts = jnp.concatenate([a.timestamps, b.timestamps])
+    order = K.lexsort_keys(keys)
+    raw = raw_ref = None
+    if a.materialized:
+        raw = jnp.concatenate([a.raw, b.raw])[order]
+    else:
+        raw_ref = jnp.concatenate([a.raw_ref, b.raw_ref])
+    if io is not None:
+        io.seq_read(a.n + b.n)
+        io.seq_write(a.n + b.n)
+    return CoconutTree(
+        keys=keys[order], codes=codes[order], paas=paas[order],
+        offsets=offs[order].astype(jnp.int32), raw=raw, raw_ref=raw_ref,
+        timestamps=None if ts is None else ts[order],
+        cfg=a.cfg, leaf_size=a.leaf_size)

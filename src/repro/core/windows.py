@@ -1,0 +1,40 @@
+"""Window-query engines (paper Sec. 5): PP / TP / BTP as a uniform API.
+
+The mechanics live in :class:`repro.core.lsm.CoconutLSM` (each mode is a
+compaction policy + qualifying-run filter); this module gives them the
+paper's names and a single constructor for experiments:
+
+    engine = window_engine("btp", cfg, buffer_capacity=4096)
+    engine.insert(batch); engine.flush()
+    d, off, stats = engine.search_exact(q, window=1_000_000)
+
+  * PP  (post-processing)          — one fully-merged index; timestamp
+    filtering after retrieval; cannot save bandwidth on old data.
+  * TP  (temporal partitioning)    — one partition per flush, never merged;
+    small windows cheap, large windows touch O(N/buffer) partitions.
+  * BTP (bounded temporal part.)   — the paper's contribution: ratio-2
+    merging bounds partitions at O(log N) while windows skip old runs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .lsm import CoconutLSM
+from .metrics import IOStats
+from .summarization import SummaryConfig
+
+__all__ = ["window_engine", "WINDOW_MODES"]
+
+WINDOW_MODES = ("pp", "tp", "btp")
+
+
+def window_engine(mode: str, cfg: SummaryConfig, *,
+                  buffer_capacity: int = 4096, leaf_size: int = 256,
+                  materialized: bool = True,
+                  io: Optional[IOStats] = None) -> CoconutLSM:
+    """Build a window-query engine; ``mode`` in {"pp", "tp", "btp"}."""
+    if mode not in WINDOW_MODES:
+        raise ValueError(f"mode must be one of {WINDOW_MODES}, got {mode!r}")
+    return CoconutLSM(cfg, buffer_capacity=buffer_capacity,
+                      leaf_size=leaf_size, mode=mode,
+                      materialized=materialized, io=io)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the Coconut hot paths (+ jnp oracles).
+
+Kernels (each <name>.py has the pl.pallas_call; ops.py dispatches; ref.py
+is the pure-jnp oracle the tests compare against):
+  * mindist_scan   — SIMS lower-bound scan (exact-search hot loop)
+  * sax_summarize  — fused PAA + SAX quantization (construction pass)
+  * zorder         — invSAX bit interleave (Algorithm 1)
+  * batch_euclid   — candidate verification / brute force
+"""
+from . import ops, ref  # noqa: F401

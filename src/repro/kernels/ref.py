@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose).  They are
+also the production fallback on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import keys as K
+from ..core import summarization as S
+
+__all__ = ["mindist_ref", "sax_summarize_ref", "zorder_ref",
+           "batch_euclid_ref"]
+
+
+def mindist_ref(q_paa: jax.Array, codes: jax.Array, lower: jax.Array,
+                upper: jax.Array, scale: float) -> jax.Array:
+    """Squared iSAX lower bound; q_paa [w], codes [N, w] -> [N] float32."""
+    lb = lower[codes.astype(jnp.int32)]
+    ub = upper[codes.astype(jnp.int32)]
+    q = q_paa[None, :]
+    below = jnp.where(q < lb, lb - q, 0.0)
+    above = jnp.where(q > ub, q - ub, 0.0)
+    d = below + above
+    return scale * jnp.sum(d * d, axis=-1).astype(jnp.float32)
+
+
+def sax_summarize_ref(x: jax.Array, bps: jax.Array, segments: int):
+    """Raw series [N, L] -> (paa [N, w] f32, codes [N, w] int32)."""
+    p = S.paa(x.astype(jnp.float32), segments)
+    codes = jnp.searchsorted(bps, p, side="right").astype(jnp.int32)
+    return p, codes
+
+
+def zorder_ref(codes: jax.Array, *, w: int, b: int) -> jax.Array:
+    """SAX codes [N, w] -> z-order keys [N, n_words] uint32."""
+    return K.interleave_codes(codes, w=w, b=b)
+
+
+def batch_euclid_ref(query: jax.Array, series: jax.Array) -> jax.Array:
+    """query [L], series [N, L] -> squared ED [N] float32."""
+    diff = series.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)

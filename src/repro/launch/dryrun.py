@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. resolves the architecture config for TP=16 (head/vocab padding),
+  3. materializes *only* ShapeDtypeStructs (params via jax.eval_shape — no
+     allocation anywhere),
+  4. ``jax.jit(step, in_shardings=...).lower(...).compile()``,
+  5. records memory_analysis / cost_analysis / collective traffic (HLO
+     parse) into experiments/dryrun/<arch>_<shape>_<mesh>.json.
+
+Failures here (sharding mismatch, non-divisible dims, unsupported
+collective) are bugs in the system — the point of the exercise.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, get
+from ..configs.registry import (GRAD_ACCUM_DTYPE, OPT_MOMENT_DTYPE,
+                                TRAIN_MICROBATCHES)
+from ..configs.shapes import SHAPES, applicable, input_specs, skip_reason
+from ..models.steps import make_prefill_step, make_serve_step, \
+    make_train_step
+from ..models.transformer import make_model
+from ..train.optimizer import AdamWConfig, adamw_init
+from .flops import model_flops_6nd, step_flops
+from .hlo import collective_stats
+from .mesh import make_production_mesh
+from .sharding import batch_pspec, cache_pspecs, make_shardings, \
+    param_pspecs, state_shardings
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+OPT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun_opt"
+
+# archs whose largest layer fits a single chip use pure DP+FSDP for
+# train/prefill (§Perf iteration 4) — no TP activation collectives at all.
+DP_POLICY_MAX_PARAMS = 8e9
+
+# measured per-family result (§Perf iteration 2): dropping intra-block
+# constraints ("lean") helps MoE (GSPMD picks better EP layouts: 80->39s)
+# but hurts very large dense TP (GSPMD loses the plot without them:
+# 279->717s).  Dense keeps the baseline constraint set.
+OPT_SHARDING_MODE = {"moe": "lean"}
+
+# v5e hardware model (per chip) for the roofline terms
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def _eval_state_specs(model, train: bool, moment_dtype="float32"):
+    """ShapeDtypeStructs for params (+opt state) without allocation."""
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if not train:
+        return params
+    opt = jax.eval_shape(lambda p: adamw_init(p, moment_dtype), params)
+    return {"params": params, "opt": opt}
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             microbatches: int | None = None,
+             save: bool = True, verbose: bool = True,
+             opt: bool = False) -> dict:
+    t0 = time.time()
+    base_cfg = get(arch)
+    ss = SHAPES[shape]
+    if not applicable(base_cfg, shape):
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped", "reason": skip_reason(base_cfg, shape)}
+    # --- optimization bundle (§Perf): policy / constraint mode / attention
+    policy, sh_mode = "tp", "baseline"
+    n_mesh_chips = 512 if mesh_kind == "multi" else 256
+    if opt:
+        sh_mode = OPT_SHARDING_MODE.get(base_cfg.family, "baseline")
+        # §Perf iteration 6: pure-DP requires the global batch to divide the
+        # full device count — otherwise the batch silently replicates
+        # (caught as a 223 GB/device temp in the phi-3 prefill artifact).
+        if ss.step in ("train", "prefill") \
+                and base_cfg.param_count() <= DP_POLICY_MAX_PARAMS \
+                and ss.global_batch % n_mesh_chips == 0:
+            policy = "dp"
+        base_cfg = dataclasses.replace(base_cfg, attn_dense_threshold=2048)
+    cfg = base_cfg if policy == "dp" else base_cfg.resolve_for_tp(16)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    model = make_model(cfg)
+    kind, kwargs = input_specs(cfg, shape)
+
+    with mesh:
+        if kind == "train":
+            mb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+            sh = make_shardings(mesh, sp=(policy != "dp"), mode=sh_mode
+                                if policy != "dp" else "dp")
+            moment_dt = OPT_MOMENT_DTYPE.get(arch, "float32")
+            accum_dt = GRAD_ACCUM_DTYPE.get(arch, "float32")
+            opt_cfg = AdamWConfig(moment_dtype=moment_dt)
+            step = make_train_step(model, sh=sh, microbatches=mb,
+                                   remat=True, opt_cfg=opt_cfg,
+                                   accum_dtype=accum_dt)
+            state = _eval_state_specs(model, train=True,
+                                      moment_dtype=moment_dt)
+            in_sh = (state_shardings(state, mesh, policy),
+                     batch_pspec(mesh, kwargs["batch"], ss.global_batch,
+                                 policy))
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=(0,)).lower(
+                state, kwargs["batch"])
+        elif kind == "prefill":
+            sh = make_shardings(mesh, sp=(policy != "dp"), mode=sh_mode
+                                if policy != "dp" else "dp")
+            step = make_prefill_step(model, sh=sh)
+            params = _eval_state_specs(model, train=False)
+            pspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                  param_pspecs(params, mesh, policy),
+                                  is_leaf=lambda x: isinstance(x, P))
+            in_sh = (pspecs,
+                     batch_pspec(mesh, kwargs["batch"], ss.global_batch,
+                                 policy))
+            lowered = jax.jit(step, in_shardings=in_sh).lower(
+                params, kwargs["batch"])
+        else:  # decode
+            dp = n_chips // mesh.shape["model"]
+            shardable = ss.global_batch % dp == 0
+            if opt:
+                sh_mode = "decode2d"
+            sh = make_shardings(mesh, sp=False, batch_shardable=shardable,
+                                mode=sh_mode)
+            step = make_serve_step(model, sh=sh)
+            params = _eval_state_specs(model, train=False)
+            pspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                  param_pspecs(params, mesh),
+                                  is_leaf=lambda x: isinstance(x, P))
+            cache_sh = cache_pspecs(mesh, kwargs["cache"], cfg,
+                                    ss.global_batch)
+            tok_sh = batch_pspec(mesh, kwargs["tokens"], ss.global_batch)
+            pos_sh = NamedSharding(mesh, P())
+            lowered = jax.jit(
+                step, in_shardings=(pspecs, cache_sh, tok_sh, pos_sh),
+                donate_argnums=(1,)).lower(
+                params, kwargs["cache"], kwargs["tokens"], kwargs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis counts while-loop bodies once (layer scan, microbatch
+    # scan) => undercounts; the analytic model supplies the true executed
+    # flops.  The compute term takes the max of both, per device.
+    analytic_global = step_flops(cfg, ss.global_batch, ss.seq_len, kind,
+                                 remat=(kind == "train"))
+    flops_dev = max(flops, analytic_global / n_chips)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    # CPU FloatNormalization promotes bf16 compute to f32 before SPMD
+    # partitioning, so collectives appear 2x wider than TPU HLO would emit;
+    # correct the f32 share for bf16-parameter models (see EXPERIMENTS.md
+    # §Perf iteration 1).
+    link_bytes = coll.link_bytes
+    if cfg.param_dtype == "bfloat16":
+        link_bytes -= 0.5 * coll.link_bytes_f32
+    collective_s = link_bytes / ICI_BW
+    model_flops = model_flops_6nd(cfg, ss.global_batch, ss.seq_len, kind)
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "status": "ok", "step_kind": kind,
+        "optimized": opt, "policy": policy, "sharding_mode": sh_mode,
+        "n_chips": n_chips,
+        "microbatches": (microbatches or TRAIN_MICROBATCHES.get(arch, 1))
+        if kind == "train" else None,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "memory": _mem_dict(mem),
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll.as_dict(),
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                (("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)), key=lambda kv: kv[1])[0],
+            "model_flops_global": model_flops,
+            "hlo_flops_per_device": flops,
+            "analytic_flops_global": analytic_global,
+            "useful_flop_ratio":
+                model_flops / max(analytic_global, 1.0),
+        },
+        "timings": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    if save:
+        out_dir = OPT_DIR if opt else OUT_DIR
+        out_dir.mkdir(parents=True, exist_ok=True)
+        path = out_dir / f"{arch}_{shape}_{mesh_kind}.json"
+        path.write_text(json.dumps(result, indent=2))
+    if verbose:
+        r = result["roofline"]
+        print(f"[{arch} | {shape} | {mesh_kind}] OK "
+              f"compile={t_compile:.1f}s "
+              f"compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms "
+              f"coll={r['collective_s']*1e3:.2f}ms "
+              f"dom={r['dominant']} "
+              f"useful={r['useful_flop_ratio']:.2f}")
+        print("  memory_analysis:", result["memory"])
+        print("  cost_analysis: flops/dev=%.3e bytes/dev=%.3e"
+              % (flops, bytes_acc))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf optimization bundle")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            try:
+                res = run_cell(arch, shape, mk,
+                               microbatches=args.microbatches,
+                               opt=args.opt)
+                if res["status"] == "skipped":
+                    print(f"[{arch} | {shape} | {mk}] SKIP: "
+                          f"{res['reason']}")
+                    OUT_DIR.mkdir(parents=True, exist_ok=True)
+                    (OUT_DIR / f"{arch}_{shape}_{mk}.json").write_text(
+                        json.dumps(res, indent=2))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape, mk, repr(e)))
+                print(f"[{arch} | {shape} | {mk}] FAIL: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} cell(s) FAILED:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

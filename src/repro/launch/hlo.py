@@ -1,0 +1,182 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective bytes, so
+we parse the (SPMD-partitioned, per-device, scheduled) HLO for every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+
+Scheduled HLO references operands by name only, so byte counts derive from
+each op's RESULT shape plus its replica-group size g:
+
+    op                  operand bytes      modeled ICI link bytes (ring)
+    all-reduce          result             2 (g-1)/g x result
+    all-gather          result / g         (g-1)/g x result
+    reduce-scatter      result x g         (g-1)/g x (result x g)
+    all-to-all          result             (g-1)/g x result
+    collective-permute  result             result
+
+Collectives inside while-loop bodies (layer scans, microbatch accumulation)
+appear once in the text but execute trip-count times; multipliers propagate
+through the while call graph via ``known_trip_count`` annotations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+__all__ = ["CollectiveStats", "collective_stats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_OP_RE = re.compile(r"=\s+(.*?)\s+(" + "|".join(_OPS) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(
+    r'known_trip_count["\s:=]*\{?\s*"?n"?\s*[:=]\s*"?(\d+)')
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: int = 0                  # spec metric: sum operand sizes
+    link_bytes: float = 0.0                 # modeled ring ICI traffic
+    link_bytes_f32: float = 0.0             # f32 share (CPU FloatNormalization
+                                            # promotes bf16 compute to f32 pre-
+                                            # partitioning; TPU keeps bf16)
+    by_op_bytes: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    by_op_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    top_ops: List[dict] = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "operand_bytes": int(self.operand_bytes),
+            "link_bytes": float(self.link_bytes),
+            "link_bytes_f32": float(self.link_bytes_f32),
+            "link_bytes_bf16_adjusted": float(
+                self.link_bytes - 0.5 * self.link_bytes_f32),
+            "by_op_bytes": {k: int(v) for k, v in self.by_op_bytes.items()},
+            "by_op_count": dict(self.by_op_count),
+            "top_ops": self.top_ops[:20],
+        }
+
+
+def _result_bytes(result_seg: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result_seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _accounting(op: str, result_bytes: int, g: int) -> Tuple[float, float]:
+    """(operand_bytes, link_bytes) for one execution of the op."""
+    if op == "all-reduce":
+        return result_bytes, 2.0 * (g - 1) / max(g, 1) * result_bytes
+    if op == "all-gather":
+        return result_bytes / max(g, 1), (g - 1) / max(g, 1) * result_bytes
+    if op == "reduce-scatter":
+        inp = result_bytes * g
+        return inp, (g - 1) / max(g, 1) * inp
+    if op == "all-to-all":
+        return result_bytes, (g - 1) / max(g, 1) * result_bytes
+    return result_bytes, float(result_bytes)     # collective-permute
+
+
+def collective_stats(hlo_text: str,
+                     loop_trip_counts: bool = True) -> CollectiveStats:
+    stats = CollectiveStats()
+    lines = hlo_text.splitlines()
+
+    # ---- pass 1: computation spans + while-body edges ---------------------
+    comp_of_line: List[str] = []
+    current = "__entry__"
+    edges: List[Tuple[str, str, int]] = []
+    for line in lines:
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            head = line.split("(", 1)[0].strip()
+            head = head.replace("ENTRY", "").strip().lstrip("%")
+            if head:
+                current = head
+        comp_of_line.append(current)
+        if " while(" in line:
+            mt = _TRIP_RE.search(line)
+            trip = int(mt.group(1)) if mt else 1
+            for role in ("body", "condition"):
+                mb = re.search(role + r"=%?([\w.\-]+)", line)
+                if mb:
+                    edges.append((current, mb.group(1), trip))
+        for mcall in re.finditer(
+                r"(?:call|to_apply|calls)=%?([\w.\-]+)", line):
+            edges.append((current, mcall.group(1), 1))
+
+    # ---- multipliers through the while call graph -------------------------
+    mult: Dict[str, int] = defaultdict(lambda: 1)
+    if loop_trip_counts:
+        for _ in range(50):
+            changed = False
+            for parent, child, trip in edges:
+                want = mult[parent] * trip
+                if mult[child] < want:
+                    mult[child] = want
+                    changed = True
+            if not changed:
+                break
+
+    # ---- pass 2: sum collectives ------------------------------------------
+    details = []
+    for line, comp in zip(lines, comp_of_line):
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        if f"{op}-done" in line:
+            continue
+        rbytes = _result_bytes(m.group(1))
+        g = _group_size(line)
+        operand, link = _accounting(op, rbytes, g)
+        k = mult[comp] if loop_trip_counts else 1
+        stats.operand_bytes += operand * k
+        stats.link_bytes += link * k
+        if "f32[" in m.group(1):
+            stats.link_bytes_f32 += link * k
+        stats.by_op_bytes[op] += int(operand * k)
+        stats.by_op_count[op] += k
+        details.append({
+            "op": op, "link_bytes": link * k, "trips": k, "groups": g,
+            "result": m.group(1)[:120],
+            "where": _metadata_opname(line),
+        })
+    details.sort(key=lambda d: -d["link_bytes"])
+    stats.top_ops = details[:20]
+    return stats
+
+
+def _metadata_opname(line: str) -> str:
+    m = re.search(r'op_name="([^"]+)"', line)
+    return m.group(1)[-100:] if m else ""

@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods; the
+``pod`` axis carries data parallelism (gradient all-reduce crosses DCI) and
+FSDP sharding of parameters/optimizer state.
+
+A FUNCTION, not a module constant, so importing this module never touches
+jax device state (device count is locked at first jax init — the dry-run
+sets XLA_FLAGS before any import).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes", "fsdp_axes", "tp_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"run under XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    # more devices than the mesh needs (single-pod mesh under the 512-device
+    # dry-run env): carve the leading sub-grid
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke runs of the sharded code."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes carrying data parallelism (batch sharding)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Axes over which parameters/optimizer state are fully sharded."""
+    return dp_axes(mesh)
+
+
+def tp_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,263 @@
+"""Sharding-rule engine: logical axes -> mesh axes for params, activations,
+optimizer state, and dry-run inputs.
+
+Parallelism mapping (DESIGN.md §6):
+  * DP     — batch over ('pod','data')
+  * FSDP   — every weight's non-TP dim over ('pod','data') (ZeRO-3)
+  * TP     — heads / mlp-hidden / vocab / rnn-width over 'model'
+  * SP     — residual-stream sequence over 'model' between blocks
+  * EP     — MoE experts over 'model'
+
+Parameter specs are derived from leaf *names* (the model keeps a flat naming
+discipline), applied to the trailing dims so layer-stacked leaves
+([n_layers, ...]) inherit a leading None automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+__all__ = ["Shardings", "make_shardings", "param_pspecs", "state_shardings",
+           "batch_pspec", "cache_pspecs"]
+
+
+def _axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return fsdp, "model"
+
+
+@dataclasses.dataclass
+class Shardings:
+    """Activation-constraint helper threaded through the model code."""
+    mesh: Optional[Mesh]
+    rules: Dict[str, Any]
+
+    def act(self, x, *logical):
+        if self.mesh is None:
+            return x
+        spec = []
+        for ax in logical:
+            m = self.rules.get(ax) if ax else None
+            spec.append(m)
+        spec += [None] * (x.ndim - len(spec))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+
+def make_shardings(mesh: Optional[Mesh], *, sp: bool = True,
+                   batch_shardable: bool = True,
+                   mode: str = "baseline") -> Optional[Shardings]:
+    """Build activation rules.
+
+    ``sp=False`` for decode (seq dim == 1); ``batch_shardable=False`` when
+    global batch < DP degree (long_500k).
+
+    Modes (§Perf iterations 2/4):
+      * baseline — constraint on every logical axis (paper-faithful first
+        cut; forces explicit reshards at each transition).
+      * lean     — constraints only where GSPMD propagation needs help:
+        batch/seq on the residual stream, experts for EP, vocab for the
+        logits.  Intra-attention/mlp layouts left to the partitioner.
+      * dp       — pure data parallelism: batch over ALL mesh axes, no TP
+        constraints at all (small archs; kills TP activation collectives).
+    """
+    if mesh is None:
+        return None
+    fsdp, tp = _axes(mesh)
+    if mode == "dp":
+        all_axes = tuple(fsdp) + (tp,)
+        rules = {
+            "batch": all_axes if batch_shardable else None,
+            "seq": None, "seq_unsharded": None, "embed": None,
+            "heads": None, "kv_heads": None, "mlp": None,
+            "vocab": None, "experts": None, "rnn": None,
+        }
+        return Shardings(mesh, rules)
+    if mode == "decode2d":
+        # weight-stationary decode (§Perf iteration 5): shard the residual
+        # FEATURE dim over the FSDP axes so each matmul contracts matching
+        # sharded dims -> partial sums + psum of tiny [B,1,*] activations,
+        # instead of re-gathering every FSDP-sharded weight per token.
+        rules = {
+            "batch": None,   # batch stays with the replicated token dim
+            "seq": None, "seq_unsharded": None,
+            "embed": fsdp,
+            "heads": tp, "kv_heads": tp, "mlp": tp,
+            "vocab": tp, "experts": tp, "rnn": tp,
+        }
+        return Shardings(mesh, rules)
+    rules = {
+        "batch": fsdp if batch_shardable else None,
+        "seq": tp if sp else None,
+        "seq_unsharded": None,
+        "embed": None,
+        "heads": tp if mode == "baseline" else None,
+        "kv_heads": tp if mode == "baseline" else None,
+        "mlp": tp if mode == "baseline" else None,
+        "vocab": tp,
+        "experts": tp,
+        "rnn": tp if mode == "baseline" else None,
+    }
+    return Shardings(mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by leaf name (trailing-dims convention)
+# ---------------------------------------------------------------------------
+
+def _leaf_rule(name: str, fsdp, tp) -> Tuple:
+    """PartitionSpec entries for the *trailing* dims of a named leaf."""
+    F, M = fsdp, tp
+    table = {
+        # embeddings
+        "embed": (M, F),             # [V, d] vocab-parallel
+        "unembed": (F, M),           # [d, V]
+        "frontend_adapter": (F, None),
+        # attention
+        "wq": (F, M), "wk": (F, M), "wv": (F, M),
+        "bq": (M,), "bk": (M,), "bv": (M,),
+        "wo": (M, F),
+        # dense mlp
+        "w_gate": (F, M), "w_up": (F, M), "w_down": (M, F),
+        # norms / small vectors
+        "norm1": (None,), "norm2": (None,), "norm": (None,),
+        "final_norm": (None,), "enc_norm": (None,),
+        # moe (experts over model)
+        "router": (F, None),
+        # ssm
+        "in_proj": (F, None),
+        "conv_w": (None, None), "conv_b": (None,),
+        "A_log": (M,), "D": (M,), "dt_bias": (M,),
+        "out_proj": (M, F),
+        # rg-lru
+        "w_in_x": (F, M), "w_in_y": (F, M),
+        "w_a": (None, M), "b_a": (M,), "w_x": (None, M), "b_x": (M,),
+        "Lambda": (M,),
+        "w_out": (M, F),
+    }
+    return table.get(name)
+
+
+def _moe_leaf_rule(name: str, fsdp, tp) -> Optional[Tuple]:
+    """Inside a `moe` subtree experts own the model axis."""
+    F, M = fsdp, tp
+    table = {
+        "w_gate": (M, F, None), "w_up": (M, F, None),
+        "w_down": (M, None, F),
+        "router": (F, None),
+    }
+    return table.get(name)
+
+
+def param_pspecs(params_tree, mesh: Mesh, policy: str = "tp"):
+    """Map a params (or ShapeDtypeStruct) tree to PartitionSpecs.
+
+    ``policy="dp"``: no tensor parallelism — every weight is FSDP-sharded
+    over ALL mesh axes (gathered transiently per layer); right for archs
+    whose largest layer fits one chip (§Perf iteration 4)."""
+    fsdp, tp = _axes(mesh)
+    if policy == "dp":
+        fsdp = tuple(fsdp) + (tp,)
+        tp = None
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "idx", None))
+                 for k in path]
+        leaf_name = names[-1] if names else None
+        in_moe = "moe" in names
+        rule = None
+        if in_moe:
+            rule = _moe_leaf_rule(leaf_name, fsdp, tp)
+        if rule is None:
+            rule = _leaf_rule(leaf_name, fsdp, tp)
+        if rule is None:
+            rule = (None,) * leaf.ndim
+        lead = leaf.ndim - len(rule)
+        if lead < 0:
+            rule = rule[-leaf.ndim:]
+            lead = 0
+        spec = (None,) * lead + tuple(rule)
+        # drop shardings that do not divide the dim (e.g. tiny smoke configs)
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec):
+            size = 1
+            for a in ((ax,) if isinstance(ax, str) else (ax or ())):
+                size *= mesh.shape[a]
+            fixed.append(ax if size > 1 and dim % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def state_shardings(state_tree, mesh: Mesh, policy: str = "tp"):
+    """NamedShardings for the full train state (opt moments mirror params)."""
+    params_specs = param_pspecs(state_tree["params"], mesh, policy)
+    m_specs = param_pspecs(state_tree["opt"]["m"], mesh, policy)
+    v_specs = param_pspecs(state_tree["opt"]["v"], mesh, policy)
+    out = {
+        "params": params_specs,
+        "opt": {"m": m_specs, "v": v_specs, "step": P()},
+    }
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), out,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, batch_tree, global_batch: int,
+                policy: str = "tp"):
+    """Shard batch dims over DP axes (replicate if not divisible)."""
+    fsdp, tp = _axes(mesh)
+    if policy == "dp":
+        fsdp = tuple(fsdp) + (tp,)
+    dp = int(np.prod([mesh.shape[a] for a in fsdp]))
+    ax = fsdp if global_batch % dp == 0 else None
+
+    def spec(leaf):
+        s = (ax,) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(mesh: Mesh, cache_tree, cfg: ModelConfig,
+                 global_batch: int):
+    """Decode-cache shardings: batch over DP, heads/state over model.
+
+    Cache leaves (layer-stacked): attn (k|v) [n, B, S, KV, D];
+    ssm conv [n, B, K, C] + state [n, B, H, P, S];
+    rec conv [n, B, K, r] + state [n, B, r];
+    cross k/v [n, B, Senc, KV, D]; memory [B, Senc, d].
+    """
+    fsdp, tp = _axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in fsdp]))
+    b_ax = fsdp if global_batch % dp == 0 else None
+    tp_n = mesh.shape[tp]
+
+    def spec(leaf):
+        shape = leaf.shape
+        # find the batch dim: first dim equal to global_batch
+        dims = [None] * leaf.ndim
+        try:
+            b_i = shape.index(global_batch)
+        except ValueError:
+            b_i = None
+        if b_i is not None:
+            dims[b_i] = b_ax
+        # shard the "heads-like" dim over model: pick the trailing dim
+        # whose size is divisible by tp and matches a known head count
+        candidates = {cfg.n_kv_heads, cfg.ssm_heads if cfg.ssm_state else -1,
+                      cfg.rnn_width_ if cfg.family == "hybrid" else -1,
+                      cfg.d_model}
+        for i in range(leaf.ndim - 1, (b_i if b_i is not None else -1), -1):
+            if dims[i] is None and shape[i] in candidates \
+                    and shape[i] % tp_n == 0:
+                dims[i] = tp
+                break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec, cache_tree)

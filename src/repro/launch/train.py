@@ -1,0 +1,62 @@
+"""Training launcher: --arch <id> with the production runtime.
+
+On this CPU container it runs the *smoke* config of the chosen arch end to
+end (data pipeline -> sharded train step -> checkpoints -> fault-tolerant
+loop).  On a real pod the same driver takes the full config plus
+``make_production_mesh`` shardings (exercised compile-only by dryrun.py).
+
+Usage: PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+           --steps 100 [--ckpt-dir /tmp/ck]
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+
+from ..configs import ARCHS, get
+from ..data.tokens import TokenPipeline
+from ..models.steps import init_train_state, make_train_step
+from ..models.transformer import make_model
+from ..train.optimizer import AdamWConfig
+from ..train.runtime import RuntimeConfig, TrainRuntime
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch, smoke=True)
+    model = make_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, opt_cfg=opt, remat=False))
+    data = TokenPipeline(cfg.vocab_unpadded, batch=args.batch,
+                         seq_len=args.seq,
+                         frontend_tokens=cfg.frontend_tokens
+                         if cfg.frontend != "none" else 0,
+                         d_model=cfg.d_model)
+
+    ckdir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ck_")
+    rt = TrainRuntime(step, state, data, ckdir,
+                      RuntimeConfig(total_steps=args.steps,
+                                    checkpoint_every=args.checkpoint_every,
+                                    log_every=10))
+    if rt.try_resume():
+        print(f"resumed from step {rt.step}")
+    report = rt.run()
+    print(f"arch={args.arch} ({cfg.name}) report={report}")
+    if rt.metrics_log:
+        print(f"loss {rt.metrics_log[0]['loss']:.3f} -> "
+              f"{rt.metrics_log[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Attention: GQA/MQA/MHA, causal / sliding-window / cross, KV-cache decode.
+
+Two execution paths:
+  * dense — materializes [B, H, Tq, Tk] scores; used for short sequences and
+    single-token decode (where Tq == 1).
+  * blockwise — online-softmax scan over KV chunks with query chunking; keeps
+    peak memory at O(q_chunk × kv_chunk) per (B, H) and is the path taken for
+    long prefill (32k+).  Pure jax.lax; flash-style without a custom kernel
+    so it lowers on every backend (a Pallas flash kernel would slot in here).
+
+All softmax math in fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Initializer, dense_init, rope
+
+__all__ = ["attention_params", "attention", "decode_attention", "KVCache"]
+
+_NEG_INF = -2.0 ** 30
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stack KV cache: [n_layers, B, S, KV, D] (+ write position)."""
+    k: jax.Array
+    v: jax.Array
+
+
+def attention_params(init: Initializer, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": dense_init(init.next(), (d, H * hd), dtype),
+        "wk": dense_init(init.next(), (d, KV * hd), dtype),
+        "wv": dense_init(init.next(), (d, KV * hd), dtype),
+        "wo": dense_init(init.next(), (H * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions, xk=None):
+    """Project to q, k, v heads (k/v from ``xk`` for cross-attention)."""
+    B, T, _ = x.shape
+    hd = cfg.head_dim_
+    src = x if xk is None else xk
+    S = src.shape[1]
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if positions is not None and xk is None:      # no RoPE on cross-attn
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, KV, D] -> [B, S, H, D] by repeating KV groups."""
+    B, S, KV, D = k.shape
+    rep = n_heads // KV
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _dense_attention(q, k, v, *, causal: bool, window: int,
+                     q_offset: jax.Array | int = 0) -> jax.Array:
+    """q: [B,T,H,D]; k,v: [B,S,H,D] -> [B,T,H,D].  fp32 softmax."""
+    D = q.shape[-1]
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    scores = scores * (D ** -0.5)
+    T, S = scores.shape[-2], scores.shape[-1]
+    tpos = jnp.arange(T)[:, None] + q_offset
+    spos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= spos <= tpos
+    if window:
+        mask &= spos > tpos - window
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+def _blockwise_attention(q, k, v, *, causal: bool, window: int,
+                         q_chunk: int, kv_chunk: int) -> jax.Array:
+    """Online-softmax blockwise attention (flash-style, pure lax).
+
+    Scans over query chunks (lax.map); per query chunk scans KV chunks with a
+    running (max, denom, acc) triple.  Non-contributing KV chunks (beyond the
+    causal frontier or outside the window) are skipped with lax.cond so their
+    FLOPs are not spent.
+    """
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    nq = -(-T // q_chunk)
+    nk = -(-S // kv_chunk)
+    Tp, Sp = nq * q_chunk, nk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qp = qp.reshape(B, nq, q_chunk, H, D)
+    kp = kp.reshape(B, nk, kv_chunk, H, D)
+    vp = vp.reshape(B, nk, kv_chunk, H, D)
+    scale = D ** -0.5
+
+    def q_block(qi):
+        qb = qp[:, qi]                                     # [B, qc, H, D]
+        q_lo = qi * q_chunk
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_lo = ki * kv_chunk
+
+            def compute(_):
+                kb, vb = kp[:, ki], vp[:, ki]
+                s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb)
+                s = s.astype(jnp.float32) * scale
+                tpos = q_lo + jnp.arange(q_chunk)[:, None]
+                spos = k_lo + jnp.arange(kv_chunk)[None, :]
+                mask = spos < S
+                if causal:
+                    mask &= spos <= tpos
+                if window:
+                    mask &= spos > tpos - window
+                s = jnp.where(mask[None, None], s, _NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhqk,bkhd->bhqd", p.astype(qb.dtype), vb
+                ).astype(jnp.float32)
+                return m_new, l_new, acc_new
+
+            # chunk participates iff it intersects the causal/window band
+            needed = jnp.array(True)
+            if causal:
+                needed &= k_lo <= q_lo + q_chunk - 1
+            if window:
+                needed &= (k_lo + kv_chunk) > (q_lo - window + 1)
+            carry = jax.lax.cond(needed, compute,
+                                 lambda _: (m, l, acc), operand=None)
+            return carry, None
+
+        m0 = jnp.full((B, H, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)                          # [B, H, qc, D]
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))             # [nq, B, H, qc, D]
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Tp, D)
+    return jnp.moveaxis(out, 1, 2)[:, :T]                   # [B, T, H, D]
+
+
+def attention(x: jax.Array, p: dict, cfg: ModelConfig, *,
+              positions: jax.Array, causal: bool = True,
+              window: int = 0, memory: Optional[jax.Array] = None,
+              sh=None, dense_threshold: int = -1,
+              q_chunk: int = 1024, kv_chunk: int = 1024
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full attention over a sequence (train / prefill).
+
+    Returns (output [B, T, d], (k, v) for cache population).
+    ``memory``: encoder output for cross-attention (disables causal+RoPE).
+    """
+    if memory is not None:
+        causal = False
+    q, k, v = _project_qkv(x, p, cfg, positions, xk=memory)
+    if sh is not None:
+        q = sh.act(q, "batch", "seq_unsharded", "heads", None)
+        k = sh.act(k, "batch", "seq_unsharded", "kv_heads", None)
+        v = sh.act(v, "batch", "seq_unsharded", "kv_heads", None)
+    kr = _repeat_kv(k, cfg.n_heads)
+    vr = _repeat_kv(v, cfg.n_heads)
+    T, S = q.shape[1], kr.shape[1]
+    if dense_threshold < 0:
+        dense_threshold = cfg.attn_dense_threshold
+    if max(T, S) <= dense_threshold:
+        o = _dense_attention(q, kr, vr, causal=causal, window=window)
+    else:
+        o = _blockwise_attention(q, kr, vr, causal=causal, window=window,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B = x.shape[0]
+    out = jnp.einsum("bthd,hde->bte", o,
+                     p["wo"].reshape(cfg.n_heads, cfg.head_dim_,
+                                     cfg.d_model))
+    return out, (k, v)
+
+
+def decode_attention(x: jax.Array, p: dict, cfg: ModelConfig, *,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array, window: int = 0,
+                     memory: Optional[jax.Array] = None, sh=None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode step.
+
+    x: [B, 1, d]; cache_k/v: [B, S, KV, D] ring buffers; pos: [] or [B]
+    current absolute position.  Returns (out [B, 1, d], new_k, new_v).
+    For sliding-window layers the cache holds only ``window`` slots and is
+    written at ``pos % window`` (ring indexing) — this is what keeps
+    long_500k hybrid decode state bounded.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (B, 1))
+    if memory is not None:
+        # cross-attention during decode reads the (static, pre-projected)
+        # encoder memory from the cache; no RoPE on cross-attn queries.
+        q, _, _ = _project_qkv(x, p, cfg, None, xk=x)
+        k, v = cache_k, cache_v
+        new_k, new_v = cache_k, cache_v
+    else:
+        q, k1, v1 = _project_qkv(x, p, cfg, positions)
+        S = cache_k.shape[1]
+        slot = jnp.asarray(pos) % S if window else jnp.asarray(pos)
+        slot = jnp.clip(slot, 0, S - 1)
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k1.astype(cache_k.dtype), slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v1.astype(cache_v.dtype), slot, axis=1)
+        k, v = new_k, new_v
+    kr = _repeat_kv(k.astype(x.dtype), cfg.n_heads)
+    vr = _repeat_kv(v.astype(x.dtype), cfg.n_heads)
+    D = q.shape[-1]
+    scores = jnp.einsum("bthd,bshd->bhts", q, kr).astype(jnp.float32)
+    scores = scores * (D ** -0.5)
+    S = kr.shape[1]
+    spos = jnp.arange(S)[None, None, None, :]
+    cur = jnp.asarray(pos).reshape(-1, 1, 1, 1)
+    if memory is not None:
+        mask = jnp.ones_like(scores, bool)
+    elif window:
+        # ring buffer: valid slots are those already written (< pos+1) and
+        # within the window; slot ages are implicit in ring arithmetic.
+        age = (cur - spos) % S
+        mask = age < jnp.minimum(cur + 1, window)
+    else:
+        mask = spos <= cur
+    scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhts,bshd->bthd", probs, vr)
+    out = jnp.einsum("bthd,hde->bte",
+                     o.reshape(B, 1, cfg.n_heads, cfg.head_dim_),
+                     p["wo"].reshape(cfg.n_heads, cfg.head_dim_,
+                                     cfg.d_model))
+    return out, new_k, new_v

@@ -1,0 +1,110 @@
+"""Shared building blocks: RMSNorm, RoPE, gated MLP, initializers.
+
+Params are plain nested dicts (pytrees); every leaf is created through
+``dense_init`` so shapes are introspectable by the sharding-rule engine
+(`repro.launch.sharding`) without a framework dependency.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "gated_mlp", "dense_init", "Initializer",
+           "dtype_anchor"]
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _anchor_for(dtype_str: str):
+    @jax.custom_vjp
+    def anchor(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        return (g.astype(dtype_str),)
+
+    anchor.defvjp(fwd, bwd)
+    return anchor
+
+
+def dtype_anchor(x):
+    """Identity whose backward casts the cotangent to the primal dtype.
+
+    Placed at layer boundaries it stops fp32 cotangent leaks (from fp32
+    loss/norm/router internals) from widening every backward activation
+    collective and buffer to 2x (§Perf iteration 1).
+    """
+    return _anchor_for(str(x.dtype))(x)
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in initializer."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+class Initializer:
+    """Splittable rng stream: ``init.next()`` hands out fresh keys."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array,
+         theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: [B, T, H, D], positions: [B, T] or [T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]          # [B, T, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, p: dict, sh=None) -> jax.Array:
+    """SwiGLU feed-forward: silu(x W_g) * (x W_u) W_d."""
+    g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+    u = jnp.einsum("btd,df->btf", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    if sh is not None:
+        h = sh.act(h, "batch", "seq_unsharded", "mlp")
+    return jnp.einsum("btf,fd->btd", h, p["w_down"])
+
+
+def gated_mlp_init(init: Initializer, d: int, ff: int, dtype) -> dict:
+    return {
+        "w_gate": dense_init(init.next(), (d, ff), dtype),
+        "w_up": dense_init(init.next(), (d, ff), dtype),
+        "w_down": dense_init(init.next(), (ff, d), dtype),
+    }

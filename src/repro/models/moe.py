@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-friendly).
+
+Dispatch avoids the O(T·E·C) one-hot tensors of the classic Flaxformer
+formulation (which explode for high top-k): tokens' expert choices are
+*sorted by expert id*, slot positions are ranks within each expert's
+contiguous run, and dispatch/combine are batched gathers.  Expert buffers
+are ``[B, E, C, d]`` with experts sharded over the ``model`` axis (expert
+parallelism); per-row capacity ``C = ceil(T·k·cf/E)`` drops overflow tokens
+(standard capacity-factor semantics) and keeps every tensor static-shaped.
+
+Router extras: softmax probs renormalized over the top-k, load-balance aux
+loss (Switch-style) and router z-loss, both returned for the train step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Initializer, dense_init
+
+__all__ = ["moe_params", "moe_block"]
+
+
+def moe_params(init: Initializer, cfg: ModelConfig, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": dense_init(init.next(), (d, E), jnp.float32, scale=0.02),
+        "w_gate": dense_init(init.next(), (E, d, ff), dtype),
+        "w_up": dense_init(init.next(), (E, d, ff), dtype),
+        "w_down": dense_init(init.next(), (E, ff, d), dtype),
+    }
+
+
+def _capacity(T: int, k: int, E: int, cf: float) -> int:
+    c = int(-(-T * k * cf // E))
+    return max(c, 1)
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig, sh=None
+              ) -> Tuple[jax.Array, dict]:
+    """x: [B, T, d] -> (y: [B, T, d], aux losses dict)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(T, k, E, cfg.capacity_factor)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # [B, T, E]
+    top_p, top_e = jax.lax.top_k(probs, k)                   # [B, T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (fp32) --------------------------------------------------
+    me = probs.mean(axis=(0, 1))                             # mean router prob
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (B * T * k))                                   # assignment frac
+    aux = {
+        "load_balance": E * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+
+    # ---- sort-based slotting ------------------------------------------------
+    # flatten the k choices per row: [B, Tk]
+    e_flat = top_e.reshape(B, T * k)
+    p_flat = top_p.reshape(B, T * k)
+    order = jnp.argsort(e_flat, axis=-1, stable=True)        # group by expert
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    # rank within each expert's run = position - start_of_run
+    idx = jnp.arange(T * k)[None, :]
+    # start of each expert's run via searchsorted on the sorted expert ids
+    starts = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(
+        e_sorted)                                            # [B, E]
+    slot_sorted = idx - jnp.take_along_axis(starts, e_sorted, axis=-1)
+    # invert the sort: slot for each original choice position
+    inv = jnp.argsort(order, axis=-1)
+    slot = jnp.take_along_axis(slot_sorted, inv, axis=-1)    # [B, Tk]
+    valid = slot < C
+    tok = idx // k                                           # token of choice j
+
+    # scatter (token -> expert buffer) indices: for each (b, e, c) which token
+    flat_pos = jnp.where(valid, e_flat * C + slot, E * C)    # overflow -> sink
+    token_for_slot = jnp.full((B, E * C + 1), 0, jnp.int32)
+    token_for_slot = jax.vmap(
+        lambda tfs, fp, t: tfs.at[fp].set(t.astype(jnp.int32)))(
+            token_for_slot, flat_pos, jnp.broadcast_to(tok, (B, T * k)))
+    occupied = jnp.zeros((B, E * C + 1), bool)
+    occupied = jax.vmap(lambda oc, fp: oc.at[fp].set(True))(
+        occupied, flat_pos)
+    token_for_slot = token_for_slot[:, : E * C].reshape(B, E, C)
+    occupied = occupied[:, : E * C].reshape(B, E, C)
+
+    # ---- dispatch: gather token activations into expert buffers -------------
+    xe = jax.vmap(lambda xb, ib: xb[ib])(x, token_for_slot)  # [B, E, C, d]
+    xe = jnp.where(occupied[..., None], xe, 0.0)
+    if sh is not None:
+        xe = sh.act(xe, "batch", "experts", None, None)
+
+    # ---- expert FFN (SwiGLU), experts sharded over `model` ------------------
+    g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"])        # [B, E, C, d]
+    if sh is not None:
+        ye = sh.act(ye, "batch", "experts", None, None)
+
+    # ---- combine: gather expert outputs back to (token, choice) -------------
+    gather_pos = jnp.where(valid, e_flat * C + slot, 0)
+    ye_flat = ye.reshape(B, E * C, d)
+    y_choice = jax.vmap(lambda yb, gp: yb[gp])(ye_flat, gather_pos)
+    y_choice = y_choice * (p_flat * valid)[..., None].astype(x.dtype)
+    y = y_choice.reshape(B, T, k, d).sum(axis=2)
+    return y, aux

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)             (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)             (input gate)
+    a_t = a ** (c * r_t) ,  a = sigmoid(Lambda),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/train uses an associative scan (log-depth on sequence); decode is a
+single O(1) update — the property that makes long_500k decode viable for
+this family.  The surrounding residual block follows Griffin: a gated
+branch (GeLU) multiplied into the conv + RG-LRU branch.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Initializer, dense_init
+
+__all__ = ["rglru_params", "rglru_block", "rglru_decode_step",
+           "rglru_init_state"]
+
+_C = 8.0
+
+
+def rglru_params(init: Initializer, cfg: ModelConfig, dtype) -> dict:
+    d, r = cfg.d_model, cfg.rnn_width_
+    return {
+        "w_in_x": dense_init(init.next(), (d, r), dtype),
+        "w_in_y": dense_init(init.next(), (d, r), dtype),
+        "conv_w": dense_init(init.next(), (cfg.conv_width, r), dtype,
+                             scale=cfg.conv_width ** -0.5),
+        "conv_b": jnp.zeros((r,), dtype),
+        "w_a": dense_init(init.next(), (r, r), jnp.float32, scale=0.02),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "w_x": dense_init(init.next(), (r, r), jnp.float32, scale=0.02),
+        "b_x": jnp.zeros((r,), jnp.float32),
+        # Lambda init so that a = sigmoid(Lambda) in (0.9, 0.999)
+        "Lambda": jnp.full((r,), 4.0, jnp.float32),
+        "w_out": dense_init(init.next(), (r, d), dtype),
+    }
+
+
+def _gates(xr: jax.Array, p: dict):
+    """xr: [B, T, r] (fp32) -> (log_a_t, gated_input), both fp32."""
+    r_gate = jax.nn.sigmoid(xr @ p["w_a"] + p["b_a"])
+    i_gate = jax.nn.sigmoid(xr @ p["w_x"] + p["b_x"])
+    # a_t = sigmoid(Lambda)^(c * r_t); log sigmoid(L) = -softplus(-L)
+    log_a = _C * r_gate * (-jax.nn.softplus(-p["Lambda"]))
+    a_t = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_t ** 2, 1e-12)) * (i_gate * xr)
+    return a_t, gated
+
+
+def _rglru_scan(xr: jax.Array, p: dict,
+                h0: Optional[jax.Array] = None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t.  xr: [B, T, r] fp32."""
+    a_t, b_t = _gates(xr, p)
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b_t = b_t.at[:, 0].add(a_t[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(x: jax.Array, p: dict, cfg: ModelConfig, *,
+                conv_state=None, rnn_state=None, sh=None
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Griffin recurrent block over a full sequence.  x: [B, T, d]."""
+    B, T, _ = x.shape
+    K = cfg.conv_width
+    y_branch = jax.nn.gelu(
+        jnp.einsum("btd,dr->btr", x, p["w_in_y"]).astype(jnp.float32))
+    xb = jnp.einsum("btd,dr->btr", x, p["w_in_x"])
+    if sh is not None:
+        xb = sh.act(xb, "batch", "seq_unsharded", "rnn")
+    # causal depthwise conv
+    if conv_state is None:
+        xp = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(xb.dtype), xb], axis=1)
+    xc = sum(xp[:, i: i + T] * p["conv_w"][i][None, None, :]
+             for i in range(K)) + p["conv_b"]
+    new_conv_state = xp[:, -(K - 1):] if K > 1 else None
+    h, last_h = _rglru_scan(xc.astype(jnp.float32), p, rnn_state)
+    out = (h * y_branch).astype(x.dtype)
+    return jnp.einsum("btr,rd->btd", out, p["w_out"]), \
+        (new_conv_state, last_h)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    r = cfg.rnn_width_
+    return (jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+            jnp.zeros((batch, r), jnp.float32))
+
+
+def rglru_decode_step(x: jax.Array, p: dict, cfg: ModelConfig, *,
+                      conv_state: jax.Array, rnn_state: jax.Array, sh=None):
+    """One-token decode.  x: [B, 1, d]."""
+    B = x.shape[0]
+    y_branch = jax.nn.gelu(
+        jnp.einsum("btd,dr->btr", x, p["w_in_y"]).astype(jnp.float32))
+    xb = jnp.einsum("btd,dr->btr", x, p["w_in_x"])            # [B, 1, r]
+    window = jnp.concatenate([conv_state.astype(xb.dtype), xb], axis=1)
+    xc = jnp.einsum("bkr,kr->br", window, p["conv_w"]) + p["conv_b"]
+    new_conv_state = window[:, 1:]
+    a_t, b_t = _gates(xc[:, None].astype(jnp.float32), p)
+    h = a_t[:, 0] * rnn_state + b_t[:, 0]
+    out = (h[:, None] * y_branch).astype(x.dtype)
+    return jnp.einsum("btr,rd->btd", out, p["w_out"]), \
+        (new_conv_state, h)

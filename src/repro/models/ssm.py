@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked train/prefill + O(1)
+decode.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) computes the selective
+state-space recurrence
+
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t x_t ,   y_t = C_t s_t + D x_t
+
+in chunks: quadratic attention-like math *within* a chunk (MXU-friendly
+[Q x Q] tiles) and a linear scan over per-chunk states *between* chunks.
+Per-device memory is O(chunk^2 + state) instead of O(T^2), which is what
+makes the long_500k shapes tractable for this family.
+
+Decode is a single recurrence step on the [B, H, P, S] state — constant
+memory regardless of context length.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Initializer, dense_init, rms_norm
+
+__all__ = ["ssm_params", "ssm_block", "ssm_decode_step", "ssm_init_state"]
+
+
+def ssm_params(init: Initializer, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    S, G, H = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    conv_ch = di + 2 * G * S
+    return {
+        "in_proj": dense_init(init.next(),
+                              (d, 2 * di + 2 * G * S + H), dtype),
+        "conv_w": dense_init(init.next(), (cfg.conv_width, conv_ch), dtype,
+                             scale=cfg.conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(init.next(), (di, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di, S, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di: 2 * di]
+    Bm = zxbcdt[..., 2 * di: 2 * di + G * S]
+    Cm = zxbcdt[..., 2 * di + G * S: 2 * di + 2 * G * S]
+    dt = zxbcdt[..., 2 * di + 2 * G * S:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  x: [B, T, C]; w: [K, C].
+
+    Returns (y, new_state) where state is the last K-1 inputs (for decode).
+    """
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :]
+            for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, cfg: ModelConfig,
+                 init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:  [B, T, H, P]   (P = ssm_head_dim)
+    dt: [B, T, H]      (already softplus'd, positive)
+    A:  [H]            (negative)
+    Bm, Cm: [B, T, G, S] broadcast over heads within a group.
+    Returns (y [B, T, H, P], final_state [B, H, P, S]).
+    """
+    B, T, H, P = x.shape
+    G, S = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssm_chunk, T)
+    nc = -(-T // Q)
+    Tp = nc * Q
+    pad = Tp - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rep = H // G
+    xb = x.reshape(B, nc, Q, H, P)
+    dtb = dt.reshape(B, nc, Q, H)
+    Bb = jnp.repeat(Bm.reshape(B, nc, Q, G, S), rep, axis=3)   # [B,nc,Q,H,S]
+    Cb = jnp.repeat(Cm.reshape(B, nc, Q, G, S), rep, axis=3)
+
+    da = dtb * A[None, None, None, :]                          # [B,nc,Q,H]
+    cum = jnp.cumsum(da, axis=2)                               # within chunk
+
+    def chunk_step(state, inp):
+        xq, dtq, bq, cq, daq, cumq = inp
+        # decay from token l to end of chunk / from start to token l
+        seg_end = jnp.exp(cumq[:, -1:, :] - cumq)              # [B,Q,H]
+        seg_start = jnp.exp(cumq)                              # [B,Q,H]
+        # intra-chunk (attention-like) term
+        # L[l, m] = exp(cum_l - cum_m) for m <= l
+        rel = cumq[:, :, None, :] - cumq[:, None, :, :]        # [B,Q,Q,H]
+        li = jnp.tril(jnp.ones((Q, Q)))[None, :, :, None]
+        Lmat = jnp.where(li > 0, jnp.exp(rel), 0.0)
+        sc = jnp.einsum("blhs,bmhs->blmh", cq, bq)             # C_l . B_m
+        y_diag = jnp.einsum("blmh,blmh,bmh,bmhp->blhp",
+                            sc, Lmat, dtq, xq)
+        # contribution of the carried state
+        y_off = jnp.einsum("blhs,bhps,blh->blhp", cq, state, seg_start)
+        # state update: decay old state over the chunk + inject chunk
+        chunk_decay = jnp.exp(cumq[:, -1, :])                  # [B,H]
+        new_state = state * chunk_decay[:, :, None, None] + jnp.einsum(
+            "blhs,blh,blh,blhp->bhps", bq, seg_end, dtq, xq)
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    state0 = (jnp.zeros((B, H, P, S), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+    inputs = (
+        jnp.moveaxis(xb, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dtb, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bb, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Cb, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(cum, 1, 0).astype(jnp.float32),
+    )
+    final_state, ys = jax.lax.scan(chunk_step, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Tp, H, P)[:, :T]
+    return y, final_state
+
+
+def ssm_block(x: jax.Array, p: dict, cfg: ModelConfig, *,
+              conv_state=None, ssm_state=None, sh=None
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence Mamba-2 block.  x: [B, T, d] -> [B, T, d].
+
+    Returns (y, (conv_state, ssm_state)) so prefill can seed decode.
+    """
+    B, T, d = x.shape
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, S = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, new_conv_state = _causal_conv(conv_in, p["conv_w"],
+                                            p["conv_b"], conv_state)
+    xs = conv_out[..., :di].reshape(B, T, H, P)
+    Bm = conv_out[..., di: di + G * S].reshape(B, T, G, S)
+    Cm = conv_out[..., di + G * S:].reshape(B, T, G, S)
+    if sh is not None:
+        xs = sh.act(xs, "batch", "seq_unsharded", "heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = _ssd_chunked(xs, dt, A, Bm, Cm, cfg,
+                                  init_state=ssm_state)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B, T, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, (new_conv_state, final_state)
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, S = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * G * S
+    return (jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+            jnp.zeros((batch, H, P, S), jnp.float32))
+
+
+def ssm_decode_step(x: jax.Array, p: dict, cfg: ModelConfig, *,
+                    conv_state: jax.Array, ssm_state: jax.Array, sh=None):
+    """One-token decode.  x: [B, 1, d]; states as from ssm_init_state."""
+    B = x.shape[0]
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, S = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)          # [B, 1, C]
+    window = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in],
+                             axis=1)                           # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)[:, None]
+    new_conv_state = window[:, 1:]
+    xs = conv_out[..., :di].reshape(B, H, P)
+    Bm = conv_out[..., di: di + G * S].reshape(B, G, S)
+    Cm = conv_out[..., di + G * S:].reshape(B, G, S)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)      # [B, H, S]
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                           # [B, H]
+    xf = xs.astype(jnp.float32)
+    new_state = (ssm_state * decay[:, :, None, None]
+                 + jnp.einsum("bhs,bh,bhp->bhps", Bh, dt, xf))
+    yt = jnp.einsum("bhs,bhps->bhp", Ch, new_state)
+    yt = yt + A_skip(p, xf)
+    yt = yt.reshape(B, 1, di).astype(x.dtype)
+    yt = rms_norm(yt * jax.nn.silu(z.astype(jnp.float32)).astype(yt.dtype),
+                  p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bte,ed->btd", yt, p["out_proj"])
+    return out, (new_conv_state, new_state)
+
+
+def A_skip(p: dict, xf: jax.Array) -> jax.Array:
+    """D-term skip connection: D[h] * x."""
+    return p["D"][None, :, None] * xf

@@ -1,0 +1,466 @@
+"""Model assembly: embedding, pattern-blocked scan-over-layers, enc-dec,
+modality frontends, and the three execution modes (train / prefill / decode).
+
+Layer stacking.  Layers are grouped by the config's block pattern (uniform
+families have a length-1 pattern; RecurrentGemma uses ("rec","rec","attn")).
+Parameters for each pattern position are stacked along a leading axis and the
+full blocks are driven by one ``lax.scan`` — a 126-layer llama compiles a
+single layer body.  Pattern remainders (e.g. 26 = 8*3 + 2) are unrolled.
+
+Modality frontends are stubs by assignment: ``input_specs`` provides
+precomputed patch/frame embeddings at d_model; a linear adapter maps them
+into the residual stream.  For enc-dec (seamless) the encoder consumes the
+frames and the decoder cross-attends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as ATT
+from . import moe as MOE
+from . import rglru as RG
+from . import ssm as SSM
+from .config import ModelConfig
+from .layers import Initializer, dense_init, dtype_anchor, gated_mlp, \
+    gated_mlp_init, rms_norm
+
+__all__ = ["Model", "make_model"]
+
+_KIND_HAS_FFN = {"attn": True, "moe": True, "rec": True, "ssm": False}
+
+
+def _dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _block_params(init: Initializer, cfg: ModelConfig, kind: str,
+                  dtype) -> dict:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": jnp.zeros((d,), dtype)}
+    if kind == "attn":
+        p["attn"] = ATT.attention_params(init, cfg, dtype)
+        p["mlp"] = gated_mlp_init(init, d, cfg.d_ff, dtype)
+        p["norm2"] = jnp.zeros((d,), dtype)
+    elif kind == "moe":
+        p["attn"] = ATT.attention_params(init, cfg, dtype)
+        p["moe"] = MOE.moe_params(init, cfg, dtype)
+        p["norm2"] = jnp.zeros((d,), dtype)
+    elif kind == "ssm":
+        p["ssm"] = SSM.ssm_params(init, cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = RG.rglru_params(init, cfg, dtype)
+        p["mlp"] = gated_mlp_init(init, d, cfg.d_ff, dtype)
+        p["norm2"] = jnp.zeros((d,), dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _cross_params(init: Initializer, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": ATT.attention_params(init, cfg, dtype),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class _StackPlan:
+    pattern: Tuple[str, ...]
+    n_full: int
+    remainder: Tuple[str, ...]
+
+    @classmethod
+    def for_cfg(cls, cfg: ModelConfig) -> "_StackPlan":
+        kinds = cfg.layer_kinds()
+        pattern = cfg.block_pattern or (kinds[0],)
+        n_full = len(kinds) // len(pattern)
+        rem = kinds[n_full * len(pattern):]
+        return cls(tuple(pattern), n_full, tuple(rem))
+
+
+def _stacked_init(init_one, n: int):
+    """Initialize ``n`` copies of a param tree, stacked on axis 0."""
+    trees = [init_one(i) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Architecture-agnostic model built from a ModelConfig.
+
+    All methods are pure functions of (params, inputs); ``sh`` is an optional
+    sharding-constraint helper threaded through every block.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = _StackPlan.for_cfg(cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: jax.Array) -> dict:
+        cfg = self.cfg
+        dtype = _dtype_of(cfg)
+        init = Initializer(rng)
+        params: Dict[str, Any] = {
+            "embed": dense_init(init.next(), (cfg.vocab, cfg.d_model),
+                                dtype, scale=0.02),
+            "unembed": dense_init(init.next(), (cfg.d_model, cfg.vocab),
+                                  dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if cfg.frontend != "none":
+            params["frontend_adapter"] = dense_init(
+                init.next(), (cfg.d_model, cfg.d_model), dtype)
+
+        plan = self.plan
+        params["blocks"] = {
+            str(pi): _stacked_init(
+                lambda _i, kind=kind: _block_params(init, cfg, kind, dtype),
+                plan.n_full)
+            for pi, kind in enumerate(plan.pattern)
+        }
+        params["rem"] = [
+            _block_params(init, cfg, kind, dtype) for kind in plan.remainder]
+
+        if cfg.is_encdec:
+            params["enc_blocks"] = _stacked_init(
+                lambda _i: _block_params(init, cfg, "attn", dtype),
+                cfg.enc_layers)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+            params["cross"] = {
+                str(pi): _stacked_init(
+                    lambda _i: _cross_params(init, cfg, dtype), plan.n_full)
+                for pi in range(len(plan.pattern))
+            }
+            params["cross_rem"] = [
+                _cross_params(init, cfg, dtype) for _ in plan.remainder]
+        return params
+
+    # --------------------------------------------------------------- helpers
+    def _embed(self, params, tokens, sh):
+        x = params["embed"][tokens]                    # gather [B, T, d]
+        x = x * (self.cfg.d_model ** 0.5)
+        if sh is not None:
+            x = sh.act(x, "batch", "seq", "embed")
+        return x
+
+    def _frontend(self, params, frontend_embeds, sh):
+        x = jnp.einsum("bpd,de->bpe",
+                       frontend_embeds.astype(params["embed"].dtype),
+                       params["frontend_adapter"])
+        if sh is not None:
+            x = sh.act(x, "batch", "seq", "embed")
+        return x
+
+    def _logits(self, params, x, sh):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = jnp.einsum("btd,dv->btv", x, params["unembed"])
+        if sh is not None:
+            logits = sh.act(logits, "batch", "seq_unsharded", "vocab")
+        if cfg.vocab_real and cfg.vocab_real != cfg.vocab:
+            mask = jnp.arange(cfg.vocab) < cfg.vocab_real
+            logits = jnp.where(mask[None, None, :], logits, -1e9)
+        return logits
+
+    def _block(self, x, bp, kind, *, positions, sh, window_override=None,
+               memory=None, cross_p=None, collect_cache=False,
+               states=None):
+        """One decoder block (full-sequence mode).
+
+        Returns (x, new_state, aux) — aux is a (load_balance, router_z)
+        pair of fp32 scalars (zeros for non-MoE blocks) so it can be
+        accumulated through the layer scan carry without leaking tracers.
+        """
+        cfg = self.cfg
+        h = rms_norm(x, bp["norm1"], cfg.rms_eps)
+        new_state = None
+        aux = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        if kind in ("attn", "moe"):
+            window = cfg.window if cfg.family == "hybrid" else 0
+            if window_override is not None:
+                window = window_override
+            y, (k, v) = ATT.attention(h, bp["attn"], cfg,
+                                      positions=positions,
+                                      causal=not self._bidirectional,
+                                      window=window, sh=sh)
+            if collect_cache:
+                new_state = self._make_attn_cache(k, v, window)
+        elif kind == "ssm":
+            cs, ss = (None, None) if states is None else states
+            y, (cs2, ss2) = SSM.ssm_block(h, bp["ssm"], cfg, conv_state=cs,
+                                          ssm_state=ss, sh=sh)
+            new_state = (cs2, ss2) if collect_cache else None
+        elif kind == "rec":
+            cs, ss = (None, None) if states is None else states
+            y, (cs2, ss2) = RG.rglru_block(h, bp["rec"], cfg, conv_state=cs,
+                                           rnn_state=ss, sh=sh)
+            new_state = (cs2, ss2) if collect_cache else None
+        else:
+            raise ValueError(kind)
+        x = x + y
+        if sh is not None:
+            x = sh.act(x, "batch", "seq", "embed")
+
+        if memory is not None and cross_p is not None:
+            hc = rms_norm(x, cross_p["norm"], cfg.rms_eps)
+            yc, (ck, cv) = ATT.attention(hc, cross_p["attn"], cfg,
+                                         positions=None, memory=memory,
+                                         sh=sh)
+            x = x + yc
+            if collect_cache:
+                new_state = (new_state, (ck, cv))
+
+        if _KIND_HAS_FFN[kind]:
+            h2 = rms_norm(x, bp["norm2"], cfg.rms_eps)
+            if kind == "moe":
+                y2, moe_aux = MOE.moe_block(h2, bp["moe"], cfg, sh=sh)
+                aux = (moe_aux["load_balance"], moe_aux["router_z"])
+            else:
+                y2 = gated_mlp(h2, bp["mlp"], sh=sh)
+            x = x + y2
+            if sh is not None:
+                x = sh.act(x, "batch", "seq", "embed")
+        return x, new_state, aux
+
+    def _make_attn_cache(self, k, v, window):
+        """Trim/align prefill K,V into the decode cache layout."""
+        if not window:
+            return (k, v)
+        B, T = k.shape[0], k.shape[1]
+        W = window
+        take = min(T, W)
+        ksl = k[:, T - take:]
+        vsl = v[:, T - take:]
+        pos = jnp.arange(T - take, T) % W
+        ck = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, pos].set(ksl)
+        cv = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, pos].set(vsl)
+        return (ck, cv)
+
+    # ----------------------------------------------------------- full passes
+    def forward(self, params, tokens, *, frontend_embeds=None, sh=None,
+                collect_cache=False, remat: bool = False,
+                bidirectional: bool = False):
+        """Full-sequence forward.
+
+        Returns (logits, cache_or_None, aux) with aux = dict of summed MoE
+        auxiliary losses (zeros for non-MoE families).
+        """
+        cfg = self.cfg
+        self._bidirectional = bidirectional
+
+        memory = None
+        if cfg.is_encdec:
+            memory = self._encode(params, frontend_embeds, sh, remat)
+            x = self._embed(params, tokens, sh)
+        elif cfg.frontend != "none" and frontend_embeds is not None:
+            fx = self._frontend(params, frontend_embeds, sh)
+            tx = self._embed(params, tokens, sh)
+            x = jnp.concatenate([fx, tx], axis=1)
+        else:
+            x = self._embed(params, tokens, sh)
+
+        T = x.shape[1]
+        positions = jnp.arange(T)
+        plan = self.plan
+
+        def pattern_block(x, slices):
+            x = dtype_anchor(x)          # keep the backward in bf16
+            state_out = []
+            aux_acc = (jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32))
+            for pi, kind in enumerate(plan.pattern):
+                bp = slices["blocks"][str(pi)]
+                cp = slices.get("cross", {}).get(str(pi))
+                x, st, aux = self._block(x, bp, kind, positions=positions,
+                                         sh=sh, memory=memory, cross_p=cp,
+                                         collect_cache=collect_cache)
+                aux_acc = (aux_acc[0] + aux[0], aux_acc[1] + aux[1])
+                state_out.append(st)
+            return x, tuple(state_out), aux_acc
+
+        if remat:
+            pattern_block = jax.checkpoint(
+                pattern_block,
+                policy=jax.checkpoint_policies.nothing_saveable)
+
+        def scan_body(carry, slices):
+            x, aux_sum = carry
+            x, states, aux = pattern_block(x, slices)
+            carry = (x, (aux_sum[0] + aux[0], aux_sum[1] + aux[1]))
+            return carry, states if collect_cache else None
+
+        xs = {"blocks": params["blocks"]}
+        if cfg.is_encdec:
+            xs["cross"] = params["cross"]
+        aux0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        (x, aux_sum), stacked_states = jax.lax.scan(scan_body, (x, aux0), xs)
+
+        rem_states = []
+        for li, kind in enumerate(plan.remainder):
+            cp = params.get("cross_rem", [None] * 99)[li] \
+                if cfg.is_encdec else None
+            x, st, aux = self._block(x, params["rem"][li], kind,
+                                     positions=positions, sh=sh,
+                                     memory=memory, cross_p=cp,
+                                     collect_cache=collect_cache)
+            aux_sum = (aux_sum[0] + aux[0], aux_sum[1] + aux[1])
+            rem_states.append(st)
+
+        logits = self._logits(params, x, sh)
+        cache = None
+        if collect_cache:
+            cache = {"stacked": stacked_states, "rem": rem_states,
+                     "memory": memory}
+        aux = {"load_balance": aux_sum[0], "router_z": aux_sum[1]}
+        return logits, cache, aux
+
+    def _encode(self, params, frames, sh, remat):
+        """Encoder stack over frontend frames (bidirectional attention)."""
+        cfg = self.cfg
+        x = self._frontend(params, frames, sh) \
+            if "frontend_adapter" in params else frames
+        self._bidirectional = True
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, bp):
+            x, _, _ = self._block(x, bp, "attn", positions=positions, sh=sh)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        x = rms_norm(x, params["enc_norm"], cfg.rms_eps)
+        self._bidirectional = False
+        return x
+
+    # ------------------------------------------------------------ decode path
+    def decode_cache_specs(self, batch: int, cache_len: int,
+                           enc_len: int = 0):
+        """ShapeDtypeStructs for a decode cache (dry-run input_specs)."""
+        cfg = self.cfg
+        dtype = _dtype_of(cfg)
+        plan = self.plan
+        D, KV = cfg.head_dim_, cfg.n_kv_heads
+
+        def one(kind, stacked_n=None):
+            def shp(s, dt=dtype):
+                s = (stacked_n,) + s if stacked_n else s
+                return jax.ShapeDtypeStruct(s, dt)
+            if kind in ("attn", "moe"):
+                W = cfg.window if (cfg.family == "hybrid" and cfg.window) \
+                    else cache_len
+                st = (shp((batch, W, KV, D)), shp((batch, W, KV, D)))
+            elif kind == "ssm":
+                ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+                st = (shp((batch, cfg.conv_width - 1, ch)),
+                      shp((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32))
+            elif kind == "rec":
+                st = (shp((batch, cfg.conv_width - 1, cfg.rnn_width_)),
+                      shp((batch, cfg.rnn_width_), jnp.float32))
+            else:
+                raise ValueError(kind)
+            if cfg.is_encdec:
+                cross = (shp((batch, enc_len, KV, D)),
+                         shp((batch, enc_len, KV, D)))
+                st = (st, cross)
+            return st
+
+        stacked = tuple(one(kind, plan.n_full) for kind in plan.pattern)
+        rem = [one(kind) for kind in plan.remainder]
+        mem = None
+        if cfg.is_encdec:
+            mem = jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model), dtype)
+        return {"stacked": stacked, "rem": rem, "memory": mem}
+
+    def decode_step(self, params, cache, tokens, pos, *, sh=None):
+        """One-token decode.  tokens: [B, 1]; pos: scalar absolute position.
+
+        Returns (logits [B, 1, V], new_cache).
+        """
+        cfg = self.cfg
+        self._bidirectional = False
+        x = self._embed(params, tokens, sh)
+        plan = self.plan
+        memory = cache.get("memory")
+
+        def block_step(x, bp, kind, state, cross_p):
+            h = rms_norm(x, bp["norm1"], cfg.rms_eps)
+            if cfg.is_encdec:
+                state, cross_state = state
+            if kind in ("attn", "moe"):
+                W = cfg.window if cfg.family == "hybrid" else 0
+                ck, cv = state
+                y, nk, nv = ATT.decode_attention(
+                    h, bp["attn"], cfg, cache_k=ck, cache_v=cv, pos=pos,
+                    window=W, sh=sh)
+                new_state = (nk, nv)
+            elif kind == "ssm":
+                y, new_state = SSM.ssm_decode_step(
+                    h, bp["ssm"], cfg, conv_state=state[0],
+                    ssm_state=state[1], sh=sh)
+            elif kind == "rec":
+                y, new_state = RG.rglru_decode_step(
+                    h, bp["rec"], cfg, conv_state=state[0],
+                    rnn_state=state[1], sh=sh)
+            x = x + y
+            if cfg.is_encdec and cross_p is not None:
+                hc = rms_norm(x, cross_p["norm"], cfg.rms_eps)
+                yc, _, _ = ATT.decode_attention(
+                    hc, cross_p["attn"], cfg, cache_k=cross_state[0],
+                    cache_v=cross_state[1], pos=pos, memory=memory, sh=sh)
+                x = x + yc
+                new_state = (new_state, cross_state)
+            if _KIND_HAS_FFN[kind]:
+                h2 = rms_norm(x, bp["norm2"], cfg.rms_eps)
+                if kind == "moe":
+                    y2, _ = MOE.moe_block(h2, bp["moe"], cfg, sh=sh)
+                else:
+                    y2 = gated_mlp(h2, bp["mlp"], sh=sh)
+                x = x + y2
+            return x, new_state
+
+        def scan_body(x, slices):
+            new_states = []
+            for pi, kind in enumerate(plan.pattern):
+                bp = slices["blocks"][str(pi)]
+                cp = slices.get("cross", {}).get(str(pi))
+                x, ns = block_step(x, bp, kind, slices["cache"][pi], cp)
+                new_states.append(ns)
+            return x, tuple(new_states)
+
+        xs = {"blocks": params["blocks"], "cache": cache["stacked"]}
+        if cfg.is_encdec:
+            xs["cross"] = params["cross"]
+        x, new_stacked = jax.lax.scan(scan_body, x, xs)
+
+        new_rem = []
+        for li, kind in enumerate(plan.remainder):
+            cp = params.get("cross_rem", [None] * 99)[li] \
+                if cfg.is_encdec else None
+            x, ns = block_step(x, params["rem"][li], kind,
+                               cache["rem"][li], cp)
+            new_rem.append(ns)
+
+        logits = self._logits(params, x, sh)
+        new_cache = {"stacked": new_stacked, "rem": new_rem,
+                     "memory": memory}
+        return logits, new_cache
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,127 @@
+"""Sharded checkpointing with async save, atomic publish, and resharding
+restore.
+
+Layout: ``<dir>/step_<n>/`` containing ``arrays.npz`` (flattened pytree
+leaves, keyed by path) + ``meta.json`` (step, mesh shape, leaf treedef).
+Writes go to ``step_<n>.tmp`` and are renamed only when complete, so a
+crash mid-save never corrupts the latest checkpoint — the fault-tolerance
+loop (runtime.py) restarts from the newest *published* step.
+
+On a multi-host pod each host would write its local shards
+(``process_index`` suffix); this container is single-host so arrays are
+gathered to host RAM.  Restore accepts a different mesh than the one that
+saved — state is re-device_put with the new sharding (elastic resume).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, arrays: Dict[str, np.ndarray]):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        leaves.append(arr.astype(dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, *, blocking: bool = False) -> None:
+        # snapshot to host *synchronously* (device buffers may be donated
+        # by the next train step), write to disk asynchronously.
+        flat = _flatten(state)
+        meta = {"step": int(step), "time": time.time(),
+                "leaves": sorted(flat)}
+        if self.async_save and not blocking:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, meta)
+
+    def _write(self, step: int, flat, meta) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **flat)
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                      # atomic publish
+        self.save_count += 1
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp") \
+                    and (p / "meta.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``template`` (host arrays), then
+        optionally device_put with ``shardings`` (possibly a *different*
+        mesh than the writer's — elastic resume)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        arrays = dict(np.load(path / "arrays.npz"))
+        state = _unflatten_into(template, arrays)
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        return state, step

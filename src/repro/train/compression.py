@@ -1,0 +1,81 @@
+"""Gradient compression: per-leaf top-k sparsification with error feedback.
+
+For 1000+-node data parallelism the gradient all-reduce dominates the
+inter-pod (DCI) link; top-k + error feedback (Deep Gradient Compression,
+Lin et al.) cuts wire bytes ~ratio x while the residual buffer keeps the
+optimizer unbiased in the long run.
+
+XLA has no sparse collectives, so on-wire sparsity is *modeled*: the step
+reduces the densified sparse tensor (numerically identical to a sparse
+reduce) and reports the modeled compressed bytes, which the roofline's
+collective term consumes.  The error-feedback dynamics — the part that
+affects convergence — are exact, and tested (tests/test_train_runtime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "compress_init", "compress_grads",
+           "modeled_wire_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    ratio: float = 0.01          # keep top 1% of entries per leaf
+    min_k: int = 32              # floor per leaf
+
+
+def compress_init(params):
+    """Error-feedback residual buffers, zero-initialized, param-sharded."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    k = min(max(k, 1), flat.shape[0])
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_grads(grads, residual, cfg: CompressionConfig
+                   ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    """(grads, residual) -> (compressed_grads, new_residual, stats).
+
+    compressed = top-k(grads + residual); residual keeps the remainder.
+    The caller reduces ``compressed`` across DP (dense psum == sparse
+    reduce numerically since dropped entries are exactly zero).
+    """
+    kept = []
+    total = []
+
+    def one(g, e):
+        a = g.astype(jnp.float32) + e
+        k = max(int(cfg.ratio * a.size), cfg.min_k)
+        mask = _topk_mask(a, k)
+        send = a * mask
+        kept.append(jnp.sum(mask))
+        total.append(a.size)
+        return send.astype(g.dtype), a - send
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(residual)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_res = jax.tree.unflatten(treedef, [o[1] for o in out])
+    stats = {
+        "kept_entries": sum(kept),
+        "total_entries": float(sum(total)),
+    }
+    return comp, new_res, stats
+
+
+def modeled_wire_bytes(stats: Dict[str, Any],
+                       value_bytes: int = 4,
+                       index_bytes: int = 4) -> float:
+    """Bytes a sparse collective would move: (value + index) per kept."""
+    return float(stats["kept_entries"]) * (value_bytes + index_bytes)

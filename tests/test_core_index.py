@@ -1,0 +1,189 @@
+"""Core index behavior: Coconut-Tree / Trie / LSM / windows correctness.
+
+The gold standard throughout is brute force over the raw series; exact
+search must match it bit-for-bit on every query, under every structure and
+windowing mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import keys as K, summarization as S, tree as T
+from repro.core.lsm import CoconutLSM
+from repro.core.metrics import IOStats
+from repro.core.trie import ISaxIndex, build_trie
+from repro.data.series import query_workload, random_walk
+
+CFG = S.SummaryConfig(series_len=64, segments=8, bits=4)
+N = 3000
+
+
+@pytest.fixture(scope="module")
+def data():
+    raw = random_walk(jax.random.PRNGKey(0), N, 64)
+    queries = query_workload(jax.random.PRNGKey(1), raw, 8)
+    return raw, queries
+
+
+@pytest.fixture(scope="module")
+def tree(data):
+    raw, _ = data
+    return T.build(raw, CFG, leaf_size=64)
+
+
+def brute(q, raw):
+    d = np.asarray(S.euclidean_sq(q, raw))
+    return float(d.min()), int(d.argmin())
+
+
+def test_exact_search_matches_bruteforce(data, tree):
+    raw, queries = data
+    for i in range(queries.shape[0]):
+        d, off, st = T.exact_search(tree, queries[i])
+        bf_d, _ = brute(queries[i], raw)
+        assert abs(d - bf_d) < 1e-3
+        assert st.exact
+
+
+def test_exact_search_nonmaterialized(data):
+    raw, queries = data
+    nm = T.build(raw, CFG, leaf_size=64, materialized=False)
+    for i in range(4):
+        d, off, _ = T.exact_search(nm, queries[i])
+        bf_d, _ = brute(queries[i], raw)
+        assert abs(d - bf_d) < 1e-3
+
+
+def test_budgeted_exact_certification(data, tree):
+    raw, queries = data
+    for i in range(4):
+        d, off, cert = T.exact_search_budgeted(tree, queries[i],
+                                               budget=1024)
+        bf_d, _ = brute(queries[i], raw)
+        if bool(cert):
+            assert abs(float(d) - bf_d) < 1e-3
+
+
+def test_approx_search_quality(data, tree):
+    """Approximate answers must be within a small factor of exact
+    (paper: z-ordering keeps similar series adjacent)."""
+    raw, queries = data
+    ratios = []
+    for i in range(queries.shape[0]):
+        d_ap, _, _ = T.approx_search(tree, queries[i])
+        bf_d, _ = brute(queries[i], raw)
+        ratios.append(np.sqrt(max(d_ap, 1e-12) / max(bf_d, 1e-12)))
+    assert np.mean(ratios) < 2.0
+
+
+def test_merge_trees_preserves_exactness(data):
+    raw, queries = data
+    a = T.build(raw[: N // 2], CFG, leaf_size=64)
+    b = T.build(raw[N // 2:], CFG, leaf_size=64)
+    m = T.merge_trees(a, b)
+    assert m.n == N
+    # merged keys sorted
+    big = K.keys_to_bigint(np.asarray(m.keys))
+    assert big == sorted(big)
+    d, off, _ = T.exact_search(m, queries[0])
+    bf_d, _ = brute(queries[0], raw)
+    assert abs(d - bf_d) < 1e-3
+
+
+def test_tree_leaves_are_dense_and_contiguous(tree):
+    assert tree.n_leaves == -(-tree.n // tree.leaf_size)
+    fill = tree.n / (tree.n_leaves * tree.leaf_size)
+    assert fill > 0.95
+
+
+def test_trie_prefix_partition(data, tree):
+    raw, _ = data
+    trie = build_trie(np.asarray(tree.keys), w=CFG.segments, b=CFG.bits,
+                      leaf_size=64)
+    # leaves tile [0, N) contiguously
+    spans = sorted((l.start, l.end) for l in trie.leaves)
+    assert spans[0][0] == 0 and spans[-1][1] == tree.n
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 == s2
+    assert all(l.count <= 64 for l in trie.leaves)
+    # prefix-split is sparser than median-split (the paper's Fig. 11c)
+    assert trie.fill < 0.95
+
+
+def test_isax_topdown_io_model(data):
+    raw, _ = data
+    _, codes = S.summarize(raw, CFG)
+    io = IOStats(64)
+    idx = ISaxIndex(CFG, leaf_size=64, io=io)
+    idx.bulk_insert(np.asarray(codes))
+    # O(1) random I/O per insert (paper Sec. 3.1)
+    assert io.random_blocks >= N
+    assert idx.fill < 0.9
+    # every entry is in exactly one leaf
+    total = sum(len(l.entries) for l in idx.leaves())
+    assert total == N
+
+
+def test_lsm_exact_and_window(data):
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    lsm = CoconutLSM(CFG, buffer_capacity=512, leaf_size=64, mode="btp")
+    lsm.insert(raw_np)
+    lsm.flush()
+    lsm.check_invariants()
+    d, off, _ = lsm.search_exact(np.asarray(queries[0]))
+    bf_d, _ = brute(queries[0], raw)
+    assert abs(d - bf_d) < 1e-3
+    # window query == brute force over the window
+    W = 700
+    d_w, _, _ = lsm.search_exact(np.asarray(queries[0]), window=W)
+    bf_w = float(np.asarray(
+        S.euclidean_sq(queries[0], jnp.asarray(raw_np[-W:]))).min())
+    assert abs(d_w - bf_w) < 1e-3
+
+
+@pytest.mark.parametrize("mode", ["pp", "tp", "btp"])
+def test_window_modes_agree(data, mode):
+    """All three windowing strategies return the same (exact) answer."""
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    lsm = CoconutLSM(CFG, buffer_capacity=512, leaf_size=64, mode=mode)
+    for s in range(0, N, 500):
+        lsm.insert(raw_np[s: s + 500])
+    lsm.flush()
+    W = 900
+    d, _, st = lsm.search_exact(np.asarray(queries[1]), window=W)
+    bf_w = float(np.asarray(
+        S.euclidean_sq(queries[1], jnp.asarray(raw_np[-W:]))).min())
+    assert abs(d - bf_w) < 1e-3
+    if mode == "btp":
+        lsm.check_invariants()
+
+
+def test_btp_touches_fewer_partitions_than_tp(data):
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    touched = {}
+    for mode in ("tp", "btp"):
+        lsm = CoconutLSM(CFG, buffer_capacity=256, leaf_size=64, mode=mode)
+        for s in range(0, N, 300):
+            lsm.insert(raw_np[s: s + 300])
+        lsm.flush()
+        _, _, st = lsm.search_exact(np.asarray(queries[0]), window=500)
+        touched[mode] = st["partitions_touched"]
+    assert touched["btp"] <= touched["tp"]
+
+
+def test_pruning_power_parity_sorted_vs_unsorted(data):
+    """Sec. 4.1: sortable summarizations keep IDENTICAL pruning power —
+    mindist depends only on the SAX word, which the z-order key preserves
+    bit-for-bit."""
+    raw, queries = data
+    _, codes = S.summarize(raw, CFG)
+    keys = S.invsax_keys(codes, CFG)
+    codes_back = K.deinterleave_key(keys, w=CFG.segments, b=CFG.bits)
+    q_paa = S.paa(queries[0][None], CFG.segments)[0]
+    md1 = np.asarray(S.mindist_sq(q_paa, codes, CFG))
+    md2 = np.asarray(S.mindist_sq(q_paa, codes_back.astype(jnp.uint8), CFG))
+    np.testing.assert_array_equal(md1, md2)

@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle.
+
+Every Pallas kernel body is executed on CPU via interpret=True and must be
+allclose to its ref.py oracle across a sweep of (N, L, w, b) shapes,
+including non-multiples of the block size (padding paths).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import summarization as S
+from repro.kernels import ops, ref
+from repro.kernels.batch_euclid import batch_euclid_pallas
+from repro.kernels.mindist_scan import mindist_pallas
+from repro.kernels.sax_summarize import sax_summarize_pallas
+from repro.kernels.zorder import zorder_pallas
+
+SWEEP = [
+    # (n, L, w, b)
+    (17, 32, 4, 2),
+    (256, 64, 8, 4),
+    (300, 128, 16, 8),
+    (1, 256, 16, 8),
+    (513, 64, 8, 8),
+]
+
+
+def _data(n, L, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, L))
+    return S.znormalize(x)
+
+
+@pytest.mark.parametrize("n,L,w,b", SWEEP)
+def test_sax_summarize_kernel(n, L, w, b):
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    bps = S.breakpoints(b)
+    paa_k, codes_k = sax_summarize_pallas(x, bps, segments=w,
+                                          block_n=64, interpret=True)
+    paa_r, codes_r = ref.sax_summarize_ref(x, bps, w)
+    np.testing.assert_allclose(np.asarray(paa_k), np.asarray(paa_r),
+                               rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(codes_k), np.asarray(codes_r))
+
+
+@pytest.mark.parametrize("n,L,w,b", SWEEP)
+def test_zorder_kernel(n, L, w, b):
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    _, codes = S.summarize(x, cfg)
+    k_k = zorder_pallas(codes, w=w, b=b, block_n=128, interpret=True)
+    k_r = ref.zorder_ref(codes, w=w, b=b)
+    assert np.array_equal(np.asarray(k_k), np.asarray(k_r))
+
+
+@pytest.mark.parametrize("n,L,w,b", SWEEP)
+def test_mindist_kernel(n, L, w, b):
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    paa, codes = S.summarize(x, cfg)
+    q_paa = paa[0]
+    lower = jnp.nan_to_num(S.region_bounds(b)[0], neginf=-1e30)
+    upper = jnp.nan_to_num(S.region_bounds(b)[1], posinf=1e30)
+    scale = L / w
+    m_k = mindist_pallas(q_paa, codes.astype(jnp.int32), lower, upper,
+                         scale=scale, block_n=128, interpret=True)
+    m_r = ref.mindist_ref(q_paa, codes, lower, upper, scale)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-5)
+    # lower-bound property against true distances
+    ed = np.asarray(ref.batch_euclid_ref(x[0], x))
+    assert np.all(np.asarray(m_k) <= ed + 1e-3)
+
+
+@pytest.mark.parametrize("n,L", [(17, 32), (256, 64), (1000, 256), (1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batch_euclid_kernel(n, L, dtype):
+    x = _data(n, L).astype(dtype)
+    q = x[0]
+    e_k = batch_euclid_pallas(q, x, block_n=128, interpret=True)
+    e_r = ref.batch_euclid_ref(q, x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r),
+                               rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_modes_agree():
+    cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+    x = _data(200, 64)
+    for mode in ("jnp", "interpret"):
+        paa, codes = ops.sax_summarize(x, cfg, mode=mode)
+        keys = ops.zorder(codes.astype(jnp.uint8), cfg, mode=mode)
+        md = ops.mindist(paa[0], codes, cfg, mode=mode)
+        ed = ops.batch_euclid(x[0], x, mode=mode)
+        if mode == "jnp":
+            base = (paa, codes, keys, md, ed)
+        else:
+            for a, b in zip(base, (paa, codes, keys, md, ed)):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float64), np.asarray(b, np.float64),
+                    rtol=1e-5, atol=1e-5)
+
+
+def test_fused_summarize_and_key():
+    cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+    x = _data(100, 64)
+    paa, codes, keys = ops.summarize_and_key(x, cfg, mode="interpret")
+    keys_want = S.invsax_keys(codes.astype(jnp.uint8), cfg)
+    assert np.array_equal(np.asarray(keys), np.asarray(keys_want))
+
+
+@pytest.mark.parametrize("n,L,w,b", [(100, 64, 8, 4), (257, 256, 16, 8)])
+def test_fused_build_kernel(n, L, w, b):
+    """Fused raw->keys kernel == the three-op reference pipeline."""
+    from repro.kernels.fused_build import fused_build_pallas
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    bps = S.breakpoints(b)
+    paa_k, codes_k, keys_k = fused_build_pallas(
+        x, bps, segments=w, bits=b, block_n=64, interpret=True)
+    paa_r, codes_r = ref.sax_summarize_ref(x, bps, w)
+    keys_r = ref.zorder_ref(codes_r, w=w, b=b)
+    np.testing.assert_allclose(np.asarray(paa_k), np.asarray(paa_r),
+                               rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    assert np.array_equal(np.asarray(keys_k), np.asarray(keys_r))

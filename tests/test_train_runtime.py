@@ -1,0 +1,170 @@
+"""Fault-tolerance / checkpoint / compression behavior tests (toy scale)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.tokens import TokenPipeline
+from repro.models.config import ModelConfig
+from repro.models.steps import init_train_state, make_train_step
+from repro.models.transformer import make_model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (CompressionConfig, compress_grads,
+                                     compress_init, modeled_wire_bytes)
+from repro.train.runtime import RuntimeConfig, TrainRuntime
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                  param_dtype="float32")
+
+
+@pytest.fixture()
+def setup(tmp_path):
+    model = make_model(CFG)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, remat=False))
+    data = TokenPipeline(CFG.vocab, batch=4, seq_len=16, seed=1)
+    return model, state, step, data, tmp_path
+
+
+def test_checkpoint_roundtrip(setup):
+    model, state, step, data, tmp = setup
+    mgr = CheckpointManager(tmp / "ckpt", keep=2, async_save=False)
+    state2, _ = step(state, data(0))
+    mgr.save(1, state2)
+    restored, at = mgr.restore(state2)
+    assert at == 1
+    for a, b in zip(jax.tree.leaves(state2), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_atomicity(setup):
+    model, state, step, data, tmp = setup
+    mgr = CheckpointManager(tmp / "ckpt", keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.steps() == [3, 4]
+    # a .tmp dir (simulated crash mid-save) must be invisible to restore
+    (tmp / "ckpt" / "step_00000099.tmp").mkdir()
+    assert mgr.latest_step() == 4
+
+
+def test_async_checkpoint(setup):
+    model, state, step, data, tmp = setup
+    mgr = CheckpointManager(tmp / "ckpt", keep=3, async_save=True)
+    mgr.save(1, state)
+    mgr.wait()
+    assert mgr.steps() == [1]
+
+
+def test_fault_injection_restart(setup):
+    """Crash at steps 7 and 13; the loop must resume from checkpoints and
+    finish all 20 steps with restarts recorded."""
+    model, state, step, data, tmp = setup
+    crashed = set()
+
+    def fault_hook(s):
+        if s in (7, 13) and s not in crashed:
+            crashed.add(s)
+            raise RuntimeError(f"injected fault at {s}")
+
+    rt = TrainRuntime(step, state, data, tmp / "ck",
+                      RuntimeConfig(total_steps=20, checkpoint_every=5,
+                                    log_every=5),
+                      fault_hook=fault_hook)
+    report = rt.run()
+    assert report["final_step"] == 20
+    assert report["restarts"] == 2
+    assert report["checkpoints"] >= 3
+    losses = [m["loss"] for m in rt.metrics_log]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_resume_reproducibility(setup):
+    """Stateless pipeline + checkpoint => identical state with/without a
+    mid-run restart (exactly-once step semantics)."""
+    model, state, step, data, tmp = setup
+
+    # uninterrupted run of 10
+    s_ref = state
+    for i in range(10):
+        s_ref, _ = step(s_ref, data(i))
+
+    # interrupted run: 5 steps, checkpoint, "crash", resume, 5 more
+    mgr = CheckpointManager(tmp / "ck2", async_save=False)
+    s = state
+    for i in range(5):
+        s, _ = step(s, data(i))
+    mgr.save(5, s)
+    restored, at = mgr.restore(s)
+    for i in range(at, 10):
+        restored, _ = step(restored, data(i))
+
+    for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_straggler_detection(setup):
+    model, state, step, data, tmp = setup
+    import time
+
+    calls = {"n": 0}
+    real_step = step
+
+    def slow_step(st, b):
+        calls["n"] += 1
+        if calls["n"] == 10:
+            time.sleep(1.0)       # synthetic straggler
+        return real_step(st, b)
+
+    rt = TrainRuntime(slow_step, state, data, tmp / "ck3",
+                      RuntimeConfig(total_steps=12, checkpoint_every=100,
+                                    straggler_factor=3.0))
+    rt.run()
+    assert rt.stragglers >= 1
+
+
+def test_compression_error_feedback():
+    rng = np.random.RandomState(0)
+    grads = {"w": jnp.asarray(rng.randn(64, 64), jnp.float32)}
+    res = compress_init(grads)
+    cfg = CompressionConfig(ratio=0.05)
+    comp, res2, stats = compress_grads(grads, res, cfg)
+    # sparsity honored
+    nz = int(jnp.sum(comp["w"] != 0))
+    assert nz <= max(int(0.05 * 64 * 64), 32) + 1
+    # compressed + residual == original (lossless accounting)
+    np.testing.assert_allclose(
+        np.asarray(comp["w"] + res2["w"]), np.asarray(grads["w"]),
+        rtol=1e-6, atol=1e-6)
+    assert modeled_wire_bytes(stats) < 64 * 64 * 4 * 0.15
+    # over repeated rounds nothing is lost: sum(sent) + residual == sum(grads)
+    total = jnp.zeros_like(grads["w"])
+    res = compress_init(grads)
+    for _ in range(80):
+        comp, res, _ = compress_grads(grads, res, cfg)
+        total = total + comp["w"]
+    np.testing.assert_allclose(np.asarray(total + res["w"]),
+                               np.asarray(80 * grads["w"]),
+                               rtol=1e-3, atol=1e-3)
+    # and the residual is bounded (error feedback does not diverge)
+    assert float(jnp.max(jnp.abs(res["w"]))) < 80 * float(
+        jnp.max(jnp.abs(grads["w"])))
+
+
+def test_elastic_reshard_restore(setup):
+    """Restore a checkpoint into a differently-sharded target (elastic)."""
+    model, state, step, data, tmp = setup
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(tmp / "ck4", async_save=False)
+    mgr.save(1, state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), state)
+    restored, _ = mgr.restore(state, shardings=shardings)
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding.mesh.shape == {"data": 1, "model": 1}

@@ -197,6 +197,82 @@ class CoconutLSM:
         return bsf, bsf_off, {"partitions_touched": touched,
                               "candidates": cands}
 
+    # ------------------------------------------------------- batched queries
+    @staticmethod
+    def _merge_run_topk(cur_d: np.ndarray, cur_off: np.ndarray,
+                        new_d: np.ndarray, new_off: np.ndarray, k: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Merge two per-query ``[Q, k]`` pools.  No offset dedup: offsets
+        from different runs address different raw files.  Stable sort keeps
+        the earlier (newer-run) entry on ties, matching the strict
+        ``d < bsf`` rule of the single-query chain."""
+        d = np.concatenate([cur_d, new_d], axis=1)
+        off = np.concatenate([cur_off, new_off], axis=1)
+        sel = np.argsort(d, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(d, sel, axis=1),
+                np.take_along_axis(off, sel, axis=1))
+
+    def search_approx_batch(self, queries: np.ndarray, *,
+                            k: int = 1,
+                            window: Optional[int] = None,
+                            radius_leaves: int = 1
+                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Batched approximate k-NN: one probe per run serves all Q queries.
+
+        Returns (dists ``[Q, k]``, offsets ``[Q, k]``, info).  With k=1,
+        row qi equals ``search_approx(queries[qi])``.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = queries.shape[0]
+        runs = self._qualifying_runs(window)
+        best_d = np.full((nq, k), np.inf, np.float32)
+        best_off = np.full((nq, k), -1, np.int64)
+        for r in runs:
+            d, off, _ = T.approx_search_batch(
+                r.tree, jnp.asarray(queries), k=k,
+                radius_leaves=radius_leaves, io=self.io)
+            best_d, best_off = self._merge_run_topk(best_d, best_off,
+                                                    d, off, k)
+        return best_d, best_off, {"partitions_touched": len(runs)}
+
+    def search_exact_batch(self, queries: np.ndarray, *,
+                           k: int = 1,
+                           window: Optional[int] = None,
+                           radius_leaves: int = 1
+                           ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
+        for the whole batch (vs Q scans in the single-query loop), with the
+        per-query k-th-best bound carried run to run (Algorithm 7) and a
+        cross-run top-k merge.  With k=1, row qi equals
+        ``search_exact(queries[qi])``.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = queries.shape[0]
+        runs = self._qualifying_runs(window)
+        ts_min = None
+        if window is not None:
+            ts_min = self.clock - window
+        best_d = np.full((nq, k), np.inf, np.float32)
+        best_off = np.full((nq, k), -1, np.int64)
+        touched = 0
+        cands = 0
+        for r in runs:
+            if window is not None and self.mode != "pp" \
+                    and r.t_min >= ts_min:
+                run_ts_min = None        # run entirely inside window
+            else:
+                run_ts_min = ts_min      # straddling run: post-filter
+            d, off, st = T.exact_search_batch(
+                r.tree, jnp.asarray(queries), k=k,
+                radius_leaves=radius_leaves, io=self.io,
+                ts_min=run_ts_min, bsf=best_d[:, -1])
+            touched += 1
+            cands += st.candidates
+            best_d, best_off = self._merge_run_topk(best_d, best_off,
+                                                    d, off, k)
+        return best_d, best_off, {"partitions_touched": touched,
+                                  "candidates": cands}
+
     # ------------------------------------------------------------ diagnostics
     def level_histogram(self) -> dict:
         hist = {}

@@ -35,7 +35,9 @@ __all__ = [
     "summarize",
     "invsax_keys",
     "mindist_sq",
+    "mindist_sq_batch",
     "euclidean_sq",
+    "euclidean_sq_batch",
 ]
 
 
@@ -158,9 +160,33 @@ def mindist_sq(query_paa: jax.Array, codes: jax.Array,
     return (cfg.series_len / cfg.segments) * jnp.sum(d * d, axis=-1)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def mindist_sq_batch(query_paas: jax.Array, codes: jax.Array,
+                     cfg: SummaryConfig) -> jax.Array:
+    """Batched iSAX lower bound: queries ``[Q, w]``, codes ``[N, w]`` -> ``[Q, N]``.
+
+    Semantically ``vmap(mindist_sq)`` — one pass over the codes serves the
+    whole query batch (the batched SIMS scan of ``exact_search_batch``).
+    """
+    lower, upper = region_bounds(cfg.bits)
+    lb = lower[codes.astype(jnp.int32)]          # [N, w]
+    ub = upper[codes.astype(jnp.int32)]
+    q = query_paas[:, None, :]                   # [Q, 1, w]
+    below = jnp.where(q < lb[None], lb[None] - q, 0.0)
+    above = jnp.where(q > ub[None], q - ub[None], 0.0)
+    d = below + above
+    return (cfg.series_len / cfg.segments) * jnp.sum(d * d, axis=-1)
+
+
 def euclidean_sq(query: jax.Array, series: jax.Array) -> jax.Array:
     """Squared ED between query ``[L]`` and series ``[N, L]`` -> ``[N]``."""
     diff = series - query[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def euclidean_sq_batch(queries: jax.Array, series: jax.Array) -> jax.Array:
+    """Squared ED between queries ``[Q, L]`` and series ``[N, L]`` -> ``[Q, N]``."""
+    diff = series[None, :, :] - queries[:, None, :]
     return jnp.sum(diff * diff, axis=-1)
 
 

@@ -32,6 +32,7 @@ from . import summarization as S
 from .metrics import IOStats
 
 __all__ = ["CoconutTree", "build", "approx_search", "exact_search",
+           "approx_search_batch", "exact_search_batch",
            "exact_search_budgeted", "merge_trees", "SearchStats"]
 
 
@@ -89,11 +90,19 @@ class CoconutTree:
 
 @dataclasses.dataclass
 class SearchStats:
-    """Per-query accounting for the paper's query-cost experiments."""
+    """Per-query accounting for the paper's query-cost experiments.
+
+    The batched entry points return ONE SearchStats for the whole batch
+    (``queries`` > 1): ``candidates`` counts distinct raw rows fetched
+    (shared across the batch), ``pruned_frac`` is the mean pruned fraction
+    over queries, and ``leaves_touched`` counts distinct leaf blocks in the
+    union of all queries' candidate sets.
+    """
     candidates: int = 0          # raw series whose true ED was computed
     pruned_frac: float = 0.0     # fraction of index pruned by mindist
     leaves_touched: int = 0      # distinct leaf blocks read
     exact: bool = True
+    queries: int = 1             # batch size this accounting covers
 
 
 def build(raw: jax.Array,
@@ -204,8 +213,23 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
     ``bsf``: optionally seed with an externally-known bound (LSM run chaining).
     """
     q = jnp.asarray(query, jnp.float32)
-    d0, off0, _ = approx_search(tree, q, radius_leaves=radius_leaves, io=io)
-    best_d, best_off = d0, off0
+    if ts_min is not None and tree.timestamps is not None:
+        alive = np.asarray(tree.timestamps) >= ts_min
+    else:
+        alive = np.ones(tree.n, bool)
+
+    # seed from the approximate probe, restricted to in-window entries —
+    # an out-of-window seed would undercut the true window answer
+    d0_all, idx0 = _approx_candidates(tree, q, radius_leaves=radius_leaves)
+    if io is not None:
+        io.rand_read(2 * radius_leaves)
+    d0_np = np.asarray(d0_all)
+    idx0_np = np.asarray(idx0)
+    d0_np = np.where(alive[idx0_np], d0_np, np.inf)
+    seed_i = int(np.argmin(d0_np))
+    best_d = float(d0_np[seed_i])
+    best_off = (int(np.asarray(tree.offsets)[idx0_np[seed_i]])
+                if np.isfinite(best_d) else -1)
     if bsf is not None and bsf < best_d:
         best_d, best_off = bsf, -1
 
@@ -214,11 +238,6 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
     if mindist_fn is None:
         mindist_fn = lambda qp, codes: S.mindist_sq(qp, codes, cfg)
     md = np.asarray(mindist_fn(q_paa, tree.codes))
-
-    if ts_min is not None and tree.timestamps is not None:
-        alive = np.asarray(tree.timestamps) >= ts_min
-    else:
-        alive = np.ones(tree.n, bool)
 
     cand = np.nonzero((md < best_d) & alive)[0]
     stats = SearchStats(candidates=0, exact=True)
@@ -273,6 +292,170 @@ def exact_search_budgeted(tree: CoconutTree, query: jax.Array, *,
     best_off = jnp.where(from_seed, seed_off, tree.offsets[order[best_i]])
     certified = cand_md[budget - 1] >= best_d
     return best_d, best_off, certified
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-query search: one summarization pass serves a whole batch
+# ---------------------------------------------------------------------------
+
+def _merge_topk(dists: np.ndarray, offsets: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k of a candidate pool, dedup'd by offset (same row may appear in
+    both the approximate window and the verified set).  Stable: on equal
+    distances the earlier pool entry wins, matching the strict ``d < bsf``
+    update rule of the single-query path.  Pads to k with (inf, -1)."""
+    offsets = np.asarray(offsets)
+    dists = np.asarray(dists, np.float32)
+    _, first = np.unique(offsets, return_index=True)
+    first.sort()                       # keep original pool order
+    d, o = dists[first], offsets[first]
+    sel = np.argsort(d, kind="stable")[:k]
+    out_d = np.full(k, np.inf, np.float32)
+    out_o = np.full(k, -1, np.int64)
+    out_d[: len(sel)] = d[sel]
+    out_o[: len(sel)] = o[sel]
+    return out_d, out_o
+
+
+@functools.partial(jax.jit, static_argnames=("radius_leaves",))
+def _approx_candidates_batch(tree: CoconutTree, queries: jax.Array,
+                             radius_leaves: int = 1):
+    """Vectorized Algorithm 4 probe: one binary-search + gather for the
+    whole batch.  queries ``[Q, L]`` -> (dists ``[Q, span]``, idx ``[Q, span]``)."""
+    cfg = tree.cfg
+    q = queries.astype(jnp.float32)
+    q_paa = S.paa(q, cfg.segments)                       # [Q, w]
+    q_codes = S.sax_encode(q_paa, cfg.bits)
+    q_keys = K.interleave_codes(q_codes, w=cfg.segments, b=cfg.bits)
+    pos = K.searchsorted_keys(tree.keys, q_keys)         # [Q]
+    span = 2 * radius_leaves * tree.leaf_size
+    start = jnp.clip(pos - span // 2, 0, jnp.maximum(tree.n - span, 0))
+    idx = start[:, None] + jnp.arange(span, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(idx, 0, tree.n - 1)                   # [Q, span]
+    cand = tree.series(idx)                              # [Q, span, L]
+    d = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+    return d, idx
+
+
+def approx_search_batch(tree: CoconutTree, queries: jax.Array, *,
+                        k: int = 1, radius_leaves: int = 1,
+                        io: Optional[IOStats] = None
+                        ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Batched approximate k-NN (generalizes :func:`approx_search` to Q
+    queries and top-k answers).
+
+    Returns (dists ``[Q, k]``, offsets ``[Q, k]``, stats); ``offsets`` index
+    the original raw file, padded with -1 (dist inf) when fewer than k
+    candidates exist.  Row ``[qi, 0]`` with k=1 equals
+    ``approx_search(tree, queries[qi])``.
+    """
+    queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    nq = queries.shape[0]
+    d, idx = _approx_candidates_batch(tree, queries,
+                                      radius_leaves=radius_leaves)
+    d = np.asarray(d)
+    offs = np.asarray(tree.offsets)[np.asarray(idx)]     # [Q, span]
+    out_d = np.empty((nq, k), np.float32)
+    out_o = np.empty((nq, k), np.int64)
+    for qi in range(nq):
+        out_d[qi], out_o[qi] = _merge_topk(d[qi], offs[qi], k)
+    stats = SearchStats(candidates=len(np.unique(idx)),
+                        leaves_touched=2 * radius_leaves,
+                        exact=False, queries=nq)
+    if io is not None:
+        io.rand_read(2 * radius_leaves * nq)
+    return out_d, out_o, stats
+
+
+def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
+                       k: int = 1, radius_leaves: int = 1,
+                       chunk: int = 4096,
+                       io: Optional[IOStats] = None,
+                       mindist_fn=None,
+                       ts_min: Optional[int] = None,
+                       bsf: Optional[np.ndarray] = None,
+                       ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Batched exact k-NN via ONE amortized SIMS scan (the tentpole path).
+
+    1. the batched approximate probe seeds a per-query best-so-far pool;
+    2. ONE pass over the in-memory summarizations evaluates the mindist
+       lower bound for every (query, entry) pair — ``[Q, N]`` — instead of
+       Q separate scans (``mindist_fn(q_paas, codes) -> [Q, N]``; defaults
+       to :func:`repro.core.summarization.mindist_sq_batch`, with the
+       Pallas kernel injectable via ``repro.kernels.ops.mindist_batch``);
+    3. the union of all queries' unpruned rows is fetched once, in
+       sorted-offset chunks (skip-sequential), and verified against every
+       query that still needs it, tightening each query's k-th-best bound
+       as chunks complete.
+
+    ``bsf``: optional ``[Q]`` per-query external bounds (LSM run chaining).
+    Returns (dists ``[Q, k]``, offsets ``[Q, k]``, batch stats); with k=1
+    row qi matches ``exact_search(tree, queries[qi])``.
+    """
+    queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    nq = queries.shape[0]
+    if ts_min is not None and tree.timestamps is not None:
+        alive = np.asarray(tree.timestamps) >= ts_min
+    else:
+        alive = np.ones(tree.n, bool)
+
+    # -- seed pools from the batched approximate probe (in-window only) -----
+    d0, idx0 = _approx_candidates_batch(tree, queries,
+                                        radius_leaves=radius_leaves)
+    if io is not None:
+        io.rand_read(2 * radius_leaves * nq)
+    d0 = np.asarray(d0)
+    idx0 = np.asarray(idx0)
+    offs_all = np.asarray(tree.offsets)
+    d0 = np.where(alive[idx0], d0, np.inf)
+    offs0 = np.where(alive[idx0], offs_all[idx0], -1)
+    best_d = np.empty((nq, k), np.float32)
+    best_off = np.empty((nq, k), np.int64)
+    for qi in range(nq):
+        best_d[qi], best_off[qi] = _merge_topk(d0[qi], offs0[qi], k)
+    ext = (np.full(nq, np.inf, np.float32) if bsf is None
+           else np.asarray(bsf, np.float32))
+    bound = np.minimum(best_d[:, -1], ext)               # k-th best per query
+
+    # -- ONE lower-bound scan for the whole batch ---------------------------
+    cfg = tree.cfg
+    q_paas = S.paa(queries, cfg.segments)
+    if mindist_fn is None:
+        mindist_fn = lambda qp, codes: S.mindist_sq_batch(qp, codes, cfg)
+    md = np.asarray(mindist_fn(q_paas, tree.codes))      # [Q, N]
+
+    prune = (md < bound[:, None]) & alive[None, :]
+    union = np.nonzero(prune.any(axis=0))[0]
+    stats = SearchStats(candidates=0, exact=True, queries=nq)
+    stats.pruned_frac = 1.0 - float(prune.sum()) / max(nq * tree.n, 1)
+    stats.leaves_touched = len(np.unique(union // tree.leaf_size))
+    if io is not None and len(union):
+        io.seq_read(len(union))
+
+    # -- shared verification over the union, re-pruning per chunk -----------
+    # bound the [Q, B, L] verification intermediate: rows-per-chunk scales
+    # down with batch size (Q=64 x 4096 x L floats thrashes host memory)
+    eff_chunk = min(chunk, max(64, 32768 // nq))
+    for s in range(0, len(union), eff_chunk):
+        block = union[s:s + eff_chunk]
+        live = md[:, block] < bound[:, None]              # [Q, B]
+        keep = live.any(axis=0)
+        block = block[keep]
+        if len(block) == 0:
+            continue
+        mask = live[:, keep]
+        rows = tree.series(jnp.asarray(block))
+        dd = np.asarray(S.euclidean_sq_batch(queries, rows))   # [Q, B]
+        stats.candidates += len(block)
+        for qi in range(nq):
+            m = mask[qi]
+            if not m.any():
+                continue
+            best_d[qi], best_off[qi] = _merge_topk(
+                np.concatenate([best_d[qi], dd[qi][m]]),
+                np.concatenate([best_off[qi], offs_all[block[m]]]), k)
+            bound[qi] = min(best_d[qi, -1], ext[qi])
+    return best_d, best_off, stats
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,23 @@
+"""jax version compatibility for the distributed layer.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+replication-check kwarg is ``check_rep``) to ``jax.shard_map`` (where it is
+``check_vma``).  The container pins an older jax, so every shard_map call
+site routes through this wrapper, which presents the modern signature and
+falls back to the experimental API when needed.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any supported jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 __all__ = ["pipeline_forward"]
 
 
@@ -71,7 +73,7 @@ def pipeline_forward(mesh, stage_fn: Callable, n_stages: int,
     def call(stage_params, xs):
         pspec_params = jax.tree.map(
             lambda _: P(axis), stage_params)
-        fn = jax.shard_map(
+        fn = shard_map(
             run, mesh=mesh,
             in_specs=(pspec_params, P()),
             out_specs=P(), check_vma=False)

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compat import shard_map
+
 from ..core import keys as K
 
 __all__ = ["sharded_sort", "local_topk_merge"]
@@ -118,7 +120,7 @@ def sharded_sort(mesh, keys: jax.Array, payload: jax.Array, *,
                  P(axis) if payload.ndim == 1
                  else P(axis, *([None] * (payload.ndim - 1))),
                  P(axis))
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     rk, rp, counts = fn(keys, payload)
     return rk, rp, counts
@@ -141,6 +143,6 @@ def local_topk_merge(mesh, dists: jax.Array, ids: jax.Array, k: int,
         return -neg2, i_all[idx2]
 
     from jax.sharding import PartitionSpec as P
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
                        out_specs=(P(), P()), check_vma=False)
     return fn(dists, ids)

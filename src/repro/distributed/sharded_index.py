@@ -29,9 +29,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import keys as K
 from ..core import summarization as S
+from .compat import shard_map
 from .samplesort import sharded_sort
 
-__all__ = ["ShardedCoconutTree", "build_sharded", "distributed_exact_search"]
+__all__ = ["ShardedCoconutTree", "build_sharded", "distributed_exact_search",
+           "distributed_exact_search_batch"]
 
 
 @dataclasses.dataclass
@@ -120,11 +122,57 @@ def distributed_exact_search(tree: ShardedCoconutTree, query: jax.Array,
         neg2, idx2 = jax.lax.top_k(-d_all, k)
         return -neg2, r_all[idx2]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=tree.mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None),
                   P(axis, None)),
         out_specs=(P(), P(None, None)), check_vma=False)
+    return fn(tree.codes, tree.paas, tree.raw, tree.keys)
+
+
+def distributed_exact_search_batch(tree: ShardedCoconutTree,
+                                   queries: jax.Array, k: int = 1
+                                   ) -> Tuple[jax.Array, jax.Array]:
+    """Batched exact k-NN: broadcast the query batch, per-shard ``[Q, k]``
+    partials, ONE all-gather for the whole batch.
+
+    queries ``[Q, L]`` -> (dists_sq ``[Q, k]``, rows ``[Q, k, L]``).  Each
+    shard runs the batched mindist scan over its local summaries (one code
+    pass serves all Q queries) and verifies its own candidates; the
+    collective cost is O(Q*k) per batch instead of O(k) per query — the
+    distributed arm of the batched search engine.  Row qi with k=1 equals
+    ``distributed_exact_search(tree, queries[qi])``.
+    """
+    cfg = tree.cfg
+    q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))   # [Q, L]
+    q_paas = S.paa(q, cfg.segments)                         # [Q, w]
+    axis = tree.axis
+
+    def body(codes, paas, raw, keys):
+        # ONE local lower-bound pass for the whole batch (batched kernel
+        # op shape), amortizing the code stream across all Q queries
+        md = S.mindist_sq_batch(q_paas, codes, cfg)          # [Q, n_loc]
+        valid = ~jnp.all(keys == jnp.uint32(0xFFFFFFFF), axis=1)
+        md = jnp.where(valid[None, :], md, jnp.inf)
+        ed = S.euclidean_sq_batch(q, raw)                    # [Q, n_loc]
+        ed = jnp.where(valid[None, :] & (md <= ed), ed, jnp.inf)
+        neg, idx = jax.lax.top_k(-ed, k)                     # [Q, k]
+        cand_d = -neg
+        cand_rows = raw[idx]                                 # [Q, k, L]
+        d_all = jax.lax.all_gather(cand_d, axis)             # [d, Q, k]
+        r_all = jax.lax.all_gather(cand_rows, axis)          # [d, Q, k, L]
+        nd = d_all.shape[0]
+        d_all = jnp.transpose(d_all, (1, 0, 2)).reshape(q.shape[0], nd * k)
+        r_all = jnp.transpose(r_all, (1, 0, 2, 3)).reshape(
+            q.shape[0], nd * k, raw.shape[1])
+        neg2, idx2 = jax.lax.top_k(-d_all, k)                # [Q, k]
+        rows = jnp.take_along_axis(r_all, idx2[:, :, None], axis=1)
+        return -neg2, rows
+
+    fn = shard_map(
+        body, mesh=tree.mesh,
+        in_specs=(P(axis, None),) * 4,
+        out_specs=(P(None, None), P(None, None, None)), check_vma=False)
     return fn(tree.codes, tree.paas, tree.raw, tree.keys)
 
 
@@ -157,7 +205,7 @@ def distributed_exact_search_pruned(tree: ShardedCoconutTree,
         neg2, idx2 = jax.lax.top_k(-d_all, k)
         return -neg2, r_all[idx2], jnp.all(c_all)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=tree.mesh,
         in_specs=(P(axis, None),) * 4,
         out_specs=(P(), P(None, None), P()), check_vma=False)

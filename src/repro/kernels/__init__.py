@@ -3,6 +3,7 @@
 Kernels (each <name>.py has the pl.pallas_call; ops.py dispatches; ref.py
 is the pure-jnp oracle the tests compare against):
   * mindist_scan   — SIMS lower-bound scan (exact-search hot loop)
+  * mindist_batch  — batched SIMS scan: one code pass serves Q queries
   * sax_summarize  — fused PAA + SAX quantization (construction pass)
   * zorder         — invSAX bit interleave (Algorithm 1)
   * batch_euclid   — candidate verification / brute force

@@ -25,15 +25,19 @@ from . import ref
 # jit-compiled oracle paths: eager dispatch dominated the scan cost
 # (123 ms -> 3.3 ms for 200k x 16 codes; §Perf Coconut iteration 1)
 _mindist_jit = jax.jit(ref.mindist_ref, static_argnames=("scale",))
+_mindist_batch_jit = jax.jit(ref.mindist_batch_ref,
+                             static_argnames=("scale",))
 _sax_jit = jax.jit(ref.sax_summarize_ref, static_argnames=("segments",))
 _euclid_jit = jax.jit(ref.batch_euclid_ref)
+_euclid_multi_jit = jax.jit(ref.batch_euclid_multi_ref)
 from .batch_euclid import batch_euclid_pallas
+from .mindist_batch import mindist_batch_pallas
 from .mindist_scan import mindist_pallas
 from .sax_summarize import sax_summarize_pallas
 from .zorder import zorder_pallas
 
-__all__ = ["mindist", "sax_summarize", "zorder", "batch_euclid",
-           "summarize_and_key"]
+__all__ = ["mindist", "mindist_batch", "sax_summarize", "zorder",
+           "batch_euclid", "batch_euclid_multi", "summarize_and_key"]
 
 # large finite sentinels: TPU tables prefer finite values; any PAA value is
 # within a few sigma, so 1e30 behaves as +/-inf in the bound arithmetic.
@@ -65,6 +69,23 @@ def mindist(q_paa: jax.Array, codes: jax.Array, cfg: S.SummaryConfig,
                           scale=scale, interpret=(mode == "interpret"))
 
 
+def mindist_batch(q_paas: jax.Array, codes: jax.Array, cfg: S.SummaryConfig,
+                  mode: str = "auto") -> jax.Array:
+    """Batched squared iSAX lower bound: ``[Q, w] x [N, w] -> [Q, N]``.
+
+    One streaming pass over the codes serves the whole query batch — the
+    throughput lever behind ``exact_search_batch``.
+    """
+    mode = _resolve(mode)
+    scale = cfg.series_len / cfg.segments
+    lower, upper = _finite_bounds(cfg.bits)
+    if mode == "jnp":
+        return _mindist_batch_jit(q_paas, codes, lower, upper, scale=scale)
+    return mindist_batch_pallas(q_paas, codes.astype(jnp.int32), lower,
+                                upper, scale=scale,
+                                interpret=(mode == "interpret"))
+
+
 def sax_summarize(x: jax.Array, cfg: S.SummaryConfig, mode: str = "auto"):
     """Raw ``[N, L]`` -> (paa f32 ``[N, w]``, codes int32 ``[N, w]``)."""
     mode = _resolve(mode)
@@ -93,6 +114,18 @@ def batch_euclid(query: jax.Array, series: jax.Array,
         return _euclid_jit(query, series)
     return batch_euclid_pallas(query, series,
                                interpret=(mode == "interpret"))
+
+
+def batch_euclid_multi(queries: jax.Array, series: jax.Array,
+                       mode: str = "auto") -> jax.Array:
+    """queries ``[Q, L]``, series ``[N, L]`` -> squared ED ``[Q, N]``.
+
+    No dedicated Pallas kernel yet: the batched verification is
+    compute-light next to the mindist scan, so every mode routes to the
+    jit'd jnp path (the single-query Pallas kernel remains for 1-NN).
+    """
+    del mode
+    return _euclid_multi_jit(queries, series)
 
 
 def summarize_and_key(x: jax.Array, cfg: S.SummaryConfig,

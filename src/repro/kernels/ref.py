@@ -12,8 +12,8 @@ import jax.numpy as jnp
 from ..core import keys as K
 from ..core import summarization as S
 
-__all__ = ["mindist_ref", "sax_summarize_ref", "zorder_ref",
-           "batch_euclid_ref"]
+__all__ = ["mindist_ref", "mindist_batch_ref", "sax_summarize_ref",
+           "zorder_ref", "batch_euclid_ref", "batch_euclid_multi_ref"]
 
 
 def mindist_ref(q_paa: jax.Array, codes: jax.Array, lower: jax.Array,
@@ -24,6 +24,22 @@ def mindist_ref(q_paa: jax.Array, codes: jax.Array, lower: jax.Array,
     q = q_paa[None, :]
     below = jnp.where(q < lb, lb - q, 0.0)
     above = jnp.where(q > ub, q - ub, 0.0)
+    d = below + above
+    return scale * jnp.sum(d * d, axis=-1).astype(jnp.float32)
+
+
+def mindist_batch_ref(q_paas: jax.Array, codes: jax.Array, lower: jax.Array,
+                      upper: jax.Array, scale: float) -> jax.Array:
+    """Batched lower bound; q_paas [Q, w], codes [N, w] -> [Q, N] float32.
+
+    One pass over the codes amortized across the whole query batch — the
+    semantic ground truth for the batched SIMS scan kernel.
+    """
+    lb = lower[codes.astype(jnp.int32)]              # [N, w]
+    ub = upper[codes.astype(jnp.int32)]
+    q = q_paas[:, None, :]                           # [Q, 1, w]
+    below = jnp.where(q < lb[None], lb[None] - q, 0.0)
+    above = jnp.where(q > ub[None], q - ub[None], 0.0)
     d = below + above
     return scale * jnp.sum(d * d, axis=-1).astype(jnp.float32)
 
@@ -43,4 +59,12 @@ def zorder_ref(codes: jax.Array, *, w: int, b: int) -> jax.Array:
 def batch_euclid_ref(query: jax.Array, series: jax.Array) -> jax.Array:
     """query [L], series [N, L] -> squared ED [N] float32."""
     diff = series.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def batch_euclid_multi_ref(queries: jax.Array,
+                           series: jax.Array) -> jax.Array:
+    """queries [Q, L], series [N, L] -> squared ED [Q, N] float32."""
+    diff = (series.astype(jnp.float32)[None, :, :]
+            - queries.astype(jnp.float32)[:, None, :])
     return jnp.sum(diff * diff, axis=-1)

@@ -174,6 +174,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: list of per-program dicts
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
 

@@ -6,8 +6,14 @@ generated step's hidden summary into a Coconut-LSM and answering recency-
 window kNN probes — the paper's streaming index embedded in the serving
 loop.
 
+kNN probes are *micro-batched*: each decode step enqueues one probe per
+sequence, and once ``--probe-batch`` probes have accumulated they are
+answered together through ``search_exact_batch`` — one amortized SIMS scan
+per run for the whole micro-batch instead of one scan per probe (the
+batched query engine on its serving path).
+
 Usage: PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-           --steps 32 --batch 4
+           --steps 32 --batch 4 --probe-batch 8
 """
 from __future__ import annotations
 
@@ -33,6 +39,10 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--knn-window", type=int, default=64)
+    ap.add_argument("--probe-batch", type=int, default=8,
+                    help="micro-batch size for kNN probes (answered "
+                         "together via search_exact_batch)")
+    ap.add_argument("--knn-k", type=int, default=1)
     args = ap.parse_args(argv)
 
     cfg = get(args.arch, smoke=True)
@@ -58,6 +68,21 @@ def main(argv=None) -> None:
 
     base = T + (cfg.frontend_tokens
                 if cfg.frontend != "none" and not cfg.is_encdec else 0)
+
+    def answer_probes(batch):
+        """Flush the index and answer one probe micro-batch together."""
+        index.flush()
+        t0 = time.perf_counter()
+        d, off, st = index.search_exact_batch(
+            np.stack(batch), k=args.knn_k, window=args.knn_window)
+        return d, st, time.perf_counter() - t0
+
+    pending = []            # accumulated kNN probes (micro-batching)
+    probe_time = 0.0
+    probes_answered = 0
+    batches_answered = 0
+    last_d = float("nan")
+    st = {"partitions_touched": 0}
     t0 = time.perf_counter()
     for s in range(args.steps):
         logits, cache = serve(params, cache, tokens, jnp.int32(base + s))
@@ -65,14 +90,28 @@ def main(argv=None) -> None:
         h = np.asarray(znormalize(
             logits[:, -1, :64].astype(jnp.float32)), np.float32)
         index.insert(h)
+        pending.append(h[0])          # one probe per step (sequence 0)
+        if len(pending) >= args.probe_batch:
+            d, st, dt_p = answer_probes(pending)
+            probe_time += dt_p
+            probes_answered += len(pending)
+            batches_answered += 1
+            last_d = float(d[-1, 0])
+            pending = []
     dt = time.perf_counter() - t0
-    index.flush()
-    probe = h[0]
-    d, off, st = index.search_exact(probe, window=args.knn_window)
+    if pending:                       # leftover partial micro-batch
+        d, st, dt_p = answer_probes(pending)
+        probe_time += dt_p
+        probes_answered += len(pending)
+        batches_answered += 1
+        last_d = float(d[-1, 0])
+    qps = probes_answered / max(probe_time, 1e-9)
     print(f"arch={args.arch}: {args.steps} steps x {B} seqs in "
           f"{dt*1e3:.0f} ms ({args.steps*B/dt:.1f} tok/s); "
           f"index={index.n} entries/{len(index.runs)} runs; "
-          f"kNN(window={args.knn_window}) d={d:.4f} "
+          f"kNN(window={args.knn_window},k={args.knn_k}) "
+          f"{probes_answered} probes in {batches_answered} micro-batches "
+          f"of {args.probe_batch} ({qps:.1f} probes/s) last_d={last_d:.4f} "
           f"partitions={st['partitions_touched']}")
 
 

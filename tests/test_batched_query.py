@@ -1,0 +1,226 @@
+"""Batched multi-query engine: parity with the single-query paths.
+
+The contract everywhere: ``*_search_batch(X)[qi]`` with k=1 must return
+IDENTICAL neighbor offsets (and distances to float tolerance) as the
+single-query function called in a Python loop — on the tree, LSM, and
+sharded paths, including the Q=1 edge case; k>1 answers must match
+brute-force top-k.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import summarization as S, tree as T
+from repro.core.lsm import CoconutLSM
+from repro.data.series import query_workload, random_walk
+
+REPO = Path(__file__).resolve().parents[1]
+CFG = S.SummaryConfig(series_len=64, segments=8, bits=4)
+N = 3000
+NQ = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    raw = random_walk(jax.random.PRNGKey(0), N, 64)
+    queries = query_workload(jax.random.PRNGKey(1), raw, NQ)
+    return raw, queries
+
+
+@pytest.fixture(scope="module")
+def tree(data):
+    raw, _ = data
+    return T.build(raw, CFG, leaf_size=64)
+
+
+def brute_topk(q, raw, k):
+    d = np.asarray(S.euclidean_sq(q, raw))
+    order = np.argsort(d, kind="stable")[:k]
+    return d[order], order
+
+
+# ---------------------------------------------------------------- tree path
+
+def test_tree_approx_batch_matches_single(data, tree):
+    raw, queries = data
+    d_b, off_b, st = T.approx_search_batch(tree, queries, k=1)
+    assert d_b.shape == (NQ, 1) and off_b.shape == (NQ, 1)
+    assert st.queries == NQ and not st.exact
+    for i in range(NQ):
+        d_s, off_s, _ = T.approx_search(tree, queries[i])
+        assert abs(float(d_b[i, 0]) - d_s) < 1e-3
+        assert int(off_b[i, 0]) == off_s
+
+
+def test_tree_exact_batch_matches_single(data, tree):
+    raw, queries = data
+    d_b, off_b, st = T.exact_search_batch(tree, queries, k=1)
+    assert st.exact and st.queries == NQ
+    for i in range(NQ):
+        d_s, off_s, _ = T.exact_search(tree, queries[i])
+        assert abs(float(d_b[i, 0]) - d_s) < 1e-3
+        assert int(off_b[i, 0]) == off_s
+
+
+def test_tree_exact_batch_topk_matches_bruteforce(data, tree):
+    raw, queries = data
+    k = 5
+    d_b, off_b, _ = T.exact_search_batch(tree, queries, k=k)
+    for i in range(NQ):
+        bf_d, bf_idx = brute_topk(queries[i], raw, k)
+        np.testing.assert_allclose(d_b[i], bf_d, rtol=1e-4, atol=1e-3)
+        assert set(off_b[i].tolist()) == set(bf_idx.tolist())
+
+
+def test_tree_exact_batch_single_query_edge(data, tree):
+    """Q=1: a [L] query is promoted to a [1, L] batch."""
+    raw, queries = data
+    d_b, off_b, _ = T.exact_search_batch(tree, queries[0], k=1)
+    assert d_b.shape == (1, 1) and off_b.shape == (1, 1)
+    d_s, off_s, _ = T.exact_search(tree, queries[0])
+    assert abs(float(d_b[0, 0]) - d_s) < 1e-3
+    assert int(off_b[0, 0]) == off_s
+
+
+def test_tree_exact_batch_nonmaterialized(data):
+    raw, queries = data
+    nm = T.build(raw, CFG, leaf_size=64, materialized=False)
+    d_b, off_b, _ = T.exact_search_batch(nm, queries, k=1)
+    for i in range(4):
+        d_s, off_s, _ = T.exact_search(nm, queries[i])
+        assert abs(float(d_b[i, 0]) - d_s) < 1e-3
+        assert int(off_b[i, 0]) == off_s
+
+
+def test_tree_exact_batch_topk_padding(data):
+    """k > candidate-pool size pads with (inf, -1) instead of fabricating."""
+    raw, queries = data
+    tiny = T.build(raw[:10], CFG, leaf_size=64)
+    d_b, off_b, _ = T.exact_search_batch(tiny, queries[:2], k=16)
+    assert np.all(np.isfinite(d_b[:, :10]))
+    assert np.all(np.isinf(d_b[:, 10:]))
+    assert np.all(off_b[:, 10:] == -1)
+    # the 10 real answers are exactly the 10 rows, in distance order
+    for qi in range(2):
+        bf_d, bf_idx = brute_topk(queries[qi], raw[:10], 10)
+        np.testing.assert_allclose(d_b[qi, :10], bf_d, rtol=1e-4, atol=1e-3)
+
+
+def test_tree_exact_batch_external_bsf_prunes_to_empty(data, tree):
+    """A per-query bsf below every true distance suppresses all answers
+    better than it — the LSM run-chaining contract."""
+    raw, queries = data
+    bsf = np.zeros(NQ, np.float32)            # better than anything real
+    d_b, off_b, st = T.exact_search_batch(tree, queries, k=1, bsf=bsf)
+    # the scan is fully pruned; only the (unpruned) approximate seeds remain
+    assert st.candidates == 0
+    d_ap, off_ap, _ = T.approx_search_batch(tree, queries, k=1)
+    np.testing.assert_allclose(d_b, d_ap, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(off_b, off_ap)
+
+
+# ----------------------------------------------------------------- LSM path
+
+def _loaded_lsm(raw_np, mode="btp"):
+    lsm = CoconutLSM(CFG, buffer_capacity=512, leaf_size=64, mode=mode)
+    for s in range(0, N, 500):
+        lsm.insert(raw_np[s: s + 500])
+    lsm.flush()
+    return lsm
+
+
+def test_lsm_exact_batch_matches_single(data):
+    raw, queries = data
+    lsm = _loaded_lsm(np.asarray(raw))
+    d_b, off_b, info = lsm.search_exact_batch(np.asarray(queries), k=1)
+    assert info["partitions_touched"] == len(lsm.runs)
+    for i in range(NQ):
+        d_s, off_s, _ = lsm.search_exact(np.asarray(queries[i]))
+        assert abs(float(d_b[i, 0]) - d_s) < 1e-3
+        assert int(off_b[i, 0]) == off_s
+
+
+@pytest.mark.parametrize("mode", ["pp", "tp", "btp"])
+def test_lsm_exact_batch_window_matches_single(data, mode):
+    raw, queries = data
+    lsm = _loaded_lsm(np.asarray(raw), mode=mode)
+    W = 900
+    d_b, off_b, _ = lsm.search_exact_batch(np.asarray(queries), k=1,
+                                           window=W)
+    for i in range(NQ):
+        d_s, off_s, _ = lsm.search_exact(np.asarray(queries[i]), window=W)
+        assert abs(float(d_b[i, 0]) - d_s) < 1e-3
+        assert int(off_b[i, 0]) == off_s
+
+
+def test_lsm_approx_batch_matches_single(data):
+    raw, queries = data
+    lsm = _loaded_lsm(np.asarray(raw))
+    d_b, off_b, _ = lsm.search_approx_batch(np.asarray(queries), k=1)
+    for i in range(NQ):
+        d_s, off_s, _ = lsm.search_approx(np.asarray(queries[i]))
+        assert abs(float(d_b[i, 0]) - d_s) < 1e-3
+        assert int(off_b[i, 0]) == off_s
+
+
+def test_lsm_exact_batch_topk_matches_bruteforce(data):
+    raw, queries = data
+    lsm = _loaded_lsm(np.asarray(raw))
+    k = 3
+    d_b, _, _ = lsm.search_exact_batch(np.asarray(queries), k=k)
+    for i in range(NQ):
+        bf_d, _ = brute_topk(queries[i], raw, k)
+        np.testing.assert_allclose(d_b[i], bf_d, rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------- sharded path
+
+def test_sharded_exact_batch_matches_single():
+    """Batched distributed search == looped single-query search == brute
+    force, on an 8-device forced-host mesh (subprocess: device count locks
+    at first jax init)."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import summarization as S
+        from repro.data.series import random_walk
+        from repro.distributed.sharded_index import build_sharded, \\
+            distributed_exact_search, distributed_exact_search_batch
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+        raw = np.asarray(random_walk(jax.random.PRNGKey(0), 4096, 64))
+        tree = build_sharded(mesh, jnp.asarray(raw), cfg)
+        qs = raw[[123, 7, 999, 2048]]
+        d_b, rows_b = distributed_exact_search_batch(tree, jnp.asarray(qs),
+                                                     k=3)
+        assert d_b.shape == (4, 3) and rows_b.shape == (4, 3, 64)
+        for i, q in enumerate(qs):
+            d_s, rows_s = distributed_exact_search(tree, q, k=3)
+            np.testing.assert_allclose(np.asarray(d_b[i]), np.asarray(d_s),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(rows_b[i]),
+                                       np.asarray(rows_s),
+                                       rtol=1e-4, atol=1e-4)
+            bf = np.sort(np.asarray(S.euclidean_sq(
+                jnp.asarray(q), jnp.asarray(raw))))[:3]
+            np.testing.assert_allclose(np.asarray(d_b[i]), bf,
+                                       rtol=1e-4, atol=1e-4)
+        d1, r1 = distributed_exact_search_batch(tree, jnp.asarray(qs[:1]),
+                                                k=1)
+        assert d1.shape == (1, 1) and r1.shape == (1, 1, 64)
+        print("SHARDED_BATCH_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=540,
+                       env=env, cwd=REPO)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARDED_BATCH_OK" in r.stdout

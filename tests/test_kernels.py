@@ -12,6 +12,7 @@ import pytest
 from repro.core import summarization as S
 from repro.kernels import ops, ref
 from repro.kernels.batch_euclid import batch_euclid_pallas
+from repro.kernels.mindist_batch import mindist_batch_pallas
 from repro.kernels.mindist_scan import mindist_pallas
 from repro.kernels.sax_summarize import sax_summarize_pallas
 from repro.kernels.zorder import zorder_pallas
@@ -71,6 +72,49 @@ def test_mindist_kernel(n, L, w, b):
     # lower-bound property against true distances
     ed = np.asarray(ref.batch_euclid_ref(x[0], x))
     assert np.all(np.asarray(m_k) <= ed + 1e-3)
+
+
+@pytest.mark.parametrize("n,L,w,b", SWEEP)
+@pytest.mark.parametrize("nq", [1, 5])
+def test_mindist_batch_kernel(n, L, w, b, nq):
+    """Batched scan == batched oracle == row-wise single-query oracle."""
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    paa, codes = S.summarize(x, cfg)
+    q_paas = S.paa(_data(nq, L, seed=3), w)
+    lower = jnp.nan_to_num(S.region_bounds(b)[0], neginf=-1e30)
+    upper = jnp.nan_to_num(S.region_bounds(b)[1], posinf=1e30)
+    scale = L / w
+    m_k = mindist_batch_pallas(q_paas, codes.astype(jnp.int32), lower,
+                               upper, scale=scale, block_n=128,
+                               interpret=True)
+    m_r = ref.mindist_batch_ref(q_paas, codes, lower, upper, scale)
+    assert m_k.shape == (nq, n)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-5)
+    for qi in range(nq):
+        row = ref.mindist_ref(q_paas[qi], codes, lower, upper, scale)
+        np.testing.assert_allclose(np.asarray(m_r[qi]), np.asarray(row),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_mindist_batch_dispatch_modes_agree():
+    cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+    x = _data(200, 64)
+    paa, codes = S.summarize(x, cfg)
+    q_paas = paa[:4]
+    base = None
+    for mode in ("jnp", "interpret"):
+        md = ops.mindist_batch(q_paas, codes, cfg, mode=mode)
+        if base is None:
+            base = md
+        else:
+            np.testing.assert_allclose(np.asarray(base), np.asarray(md),
+                                       rtol=1e-5, atol=1e-5)
+    # agrees with the core helper used by exact_search_batch
+    core = S.mindist_sq_batch(q_paas, codes, cfg)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(core),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("n,L", [(17, 32), (256, 64), (1000, 256), (1, 64)])

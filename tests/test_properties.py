@@ -13,6 +13,9 @@ Invariants under test (paper Sec. 4.1):
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import keys as K, summarization as S

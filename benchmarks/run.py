@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   windows        Fig. 16-19       PP / TP / BTP sliding windows
   workload       Fig. 14          complete workload, seismic-like data
   kernels        (infra)          hot-loop throughput + kernel parity
+  storage        Table 2/Fig. 11  on-disk build MB/s, bytes/series,
+                                  cold-vs-warm mmap query latency
   roofline       (assignment)     arch x shape terms from the dry-run
 """
 import sys
@@ -18,13 +20,13 @@ import sys
 def main() -> None:
     from . import (construction, distributed_bench, insertions,
                    kernels_bench, query, roofline, segments, space,
-                   windows, workload)
+                   storage, windows, workload)
     mods = {
         "construction": construction, "space": space,
         "segments": segments, "query": query, "insertions": insertions,
         "windows": windows, "workload": workload,
         "kernels": kernels_bench, "distributed": distributed_bench,
-        "roofline": roofline,
+        "storage": storage, "roofline": roofline,
     }
     only = sys.argv[1:] or list(mods)
     print("name,us_per_call,derived")

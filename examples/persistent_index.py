@@ -1,0 +1,90 @@
+"""Persistent Coconut index quickstart: build -> close -> reopen -> query,
+plus a crash-recovery demo.
+
+1. Stream series into a store-backed ``CoconutLSM``; every flush writes an
+   immutable segment file and atomically commits ``MANIFEST.json``.
+2. "Restart the process" (drop the object), reopen from the manifest, and
+   verify the answers are identical.
+3. Simulate a crash *between a segment write and the manifest commit* —
+   the classic torn LSM flush — and show recovery discards the orphan and
+   replays cleanly from the last committed state.
+4. Query the segment file directly off disk (mmap, chunk-wise SIMS) and
+   report the real bytes read.
+
+Run:  PYTHONPATH=src python examples/persistent_index.py
+"""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SummaryConfig
+from repro.core import summarization as S
+from repro.core.lsm import CoconutLSM
+from repro.core.metrics import IOStats
+from repro.data.series import query_workload, random_walk
+from repro.storage import SegmentStore, exact_search_mmap
+
+N, L = 20_000, 64
+
+
+def main() -> None:
+    cfg = SummaryConfig(series_len=L, segments=8, bits=4)
+    raw = np.asarray(random_walk(jax.random.PRNGKey(0), N, L))
+    queries = np.asarray(query_workload(jax.random.PRNGKey(1),
+                                        jnp.asarray(raw), 4))
+    data_dir = os.path.join(tempfile.mkdtemp(), "coconut-index")
+
+    # -- 1. build a durable index ------------------------------------------
+    store = SegmentStore(data_dir)
+    lsm = CoconutLSM(cfg, buffer_capacity=4096, leaf_size=256, mode="btp",
+                     store=store)
+    for s in range(0, N, 2500):
+        lsm.insert(raw[s: s + 2500])
+    lsm.flush()
+    d0, off0, _ = lsm.search_exact(queries[0])
+    print(f"built   {store.describe()}")
+    print(f"        query answer d={d0:.4f} off={off0}")
+
+    # -- 2. restart: reopen from the manifest ------------------------------
+    del lsm                                        # "process exit"
+    lsm = CoconutLSM.open(data_dir)
+    d1, off1, _ = lsm.search_exact(queries[0])
+    assert (d1, off1) == (d0, off0), "reopened index must answer identically"
+    db, ob, _ = lsm.search_exact_batch(queries, k=3)
+    print(f"reopened {len(lsm.runs)} runs, {lsm.n} entries "
+          f"(clock={lsm.clock}); answers identical ✓")
+
+    # -- 3. crash between flush and manifest commit ------------------------
+    committed = set(store.segment_files())
+    orphan = store.write_tree(lsm.runs[0].tree)    # segment written ...
+    # ... and the process dies HERE, before commit_manifest().
+    with open(store.manifest_path + ".tmp", "w") as f:
+        f.write('{"version": 1, "torn"')           # torn commit attempt
+    del lsm
+    lsm = CoconutLSM.open(data_dir)                # runs recovery
+    assert set(store.segment_files()) == committed
+    d2, off2, _ = lsm.search_exact(queries[0])
+    assert (d2, off2) == (d0, off0)
+    print(f"crash demo: orphan {orphan} + torn manifest discarded, "
+          "state replayed from last commit ✓")
+
+    # -- 4. zero-copy search straight off the segment file -----------------
+    biggest = max(lsm.runs, key=lambda r: r.n)
+    seg = store.open_segment(biggest.segment)
+    io = IOStats()
+    dm, om, st = exact_search_mmap(seg, queries, k=1, io=io)
+    bf = float(np.asarray(S.euclidean_sq(
+        jnp.asarray(queries[0]), jnp.asarray(raw))).min())
+    print(f"mmap search over {seg.n} entries: d={float(dm[0, 0]):.4f} "
+          f"(brute={bf:.4f}), {io.bytes_read/1e6:.2f} MB actually read, "
+          f"{st.pruned_frac:.1%} pruned")
+    seg.close()
+    shutil.rmtree(os.path.dirname(data_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,13 @@ Window-query modes (Sec. 5) are implemented on this one structure:
   * ``tp``  — temporal partitioning: never merge; one run per flush.
   * ``btp`` — bounded temporal partitioning (the paper's contribution):
     ratio-2 merging; window queries skip runs older than the window.
+
+With a :class:`repro.storage.store.SegmentStore` attached, every flush and
+merge also lands on disk: new runs are written as segment files and the
+manifest is atomically committed once per flush, so the index survives
+process restart (``CoconutLSM.open``) and a crash anywhere replays cleanly
+from the last committed manifest.  Only the in-memory buffer is volatile —
+the standard no-WAL LSM durability contract.
 """
 from __future__ import annotations
 
@@ -36,6 +43,7 @@ class Run:
     level: int
     t_min: int
     t_max: int
+    segment: Optional[str] = None   # on-disk segment file (store-backed)
 
     @property
     def n(self) -> int:
@@ -51,9 +59,14 @@ class CoconutLSM:
                  size_ratio: int = 2,
                  mode: str = "btp",
                  materialized: bool = True,
-                 io: Optional[IOStats] = None):
+                 io: Optional[IOStats] = None,
+                 store=None):
         if mode not in ("pp", "tp", "btp"):
             raise ValueError(f"unknown windowing mode {mode!r}")
+        if store is not None and store.exists():
+            raise ValueError(
+                f"{store.root} already holds a committed index — reopen it "
+                "with CoconutLSM.open(store) instead of building over it")
         self.cfg = cfg
         self.buffer_capacity = buffer_capacity
         self.leaf_size = leaf_size
@@ -61,12 +74,82 @@ class CoconutLSM:
         self.mode = mode
         self.materialized = materialized
         self.io = io if io is not None else IOStats(leaf_size)
+        self.store = store                 # Optional[SegmentStore]
+        if store is not None and store.io is None:
+            store.io = self.io             # disk writes charge index stats
         self.runs: List[Run] = []          # newest first
         self._buf_raw: List[np.ndarray] = []
         self._buf_ts: List[np.ndarray] = []
         self._buf_count = 0
         self.clock = 0                     # logical insertion time
         self.merges = 0
+
+    # ------------------------------------------------------------ persistence
+    @classmethod
+    def open(cls, store, *, io: Optional[IOStats] = None) -> "CoconutLSM":
+        """Reopen a persisted index from its manifest (restart/recovery).
+
+        ``store`` is a ``SegmentStore`` or a directory path.  Runs the
+        recovery protocol first (drops uncommitted manifest temps and
+        orphan segments), then rebuilds every run from its segment file;
+        searches on the reopened index are identical to the index that
+        committed the manifest.
+        """
+        from ..storage.store import SegmentStore
+        if isinstance(store, str):
+            store = SegmentStore(store, io=io)
+        store.recover()
+        manifest = store.load_manifest()
+        if manifest is None:
+            raise FileNotFoundError(
+                f"no committed manifest in {store.root}")
+        cfg = SegmentStore.cfg_from_manifest(manifest)
+        lsm = cls(cfg,
+                  buffer_capacity=manifest["buffer_capacity"],
+                  leaf_size=manifest["leaf_size"],
+                  size_ratio=manifest["size_ratio"],
+                  mode=manifest["mode"],
+                  materialized=manifest["materialized"],
+                  io=io, store=None)
+        lsm.store = store
+        if store.io is None:
+            store.io = lsm.io
+        lsm.clock = manifest["clock"]
+        lsm.merges = manifest.get("merges", 0)
+        for entry in manifest["runs"]:     # manifest keeps newest-first
+            seg = store.open_segment(entry["file"])
+            try:
+                tree = seg.to_tree()
+            finally:
+                seg.close()
+            lsm.runs.append(Run(tree=tree, level=entry["level"],
+                                t_min=entry["t_min"], t_max=entry["t_max"],
+                                segment=entry["file"]))
+        return lsm
+
+    def _commit(self) -> None:
+        """Atomically publish the current run set, then GC retired files.
+
+        Segments are written HERE, after compaction settles, so a flush
+        that cascades through several merge levels persists only the runs
+        that survive — transient intermediate runs never hit disk.
+        """
+        if self.store is None:
+            return
+        from ..storage.store import SegmentStore
+        for r in self.runs:
+            if r.segment is None:
+                r.segment = self.store.write_tree(r.tree)
+        manifest = SegmentStore.manifest_for(
+            self.cfg,
+            [{"file": r.segment, "level": r.level,
+              "t_min": r.t_min, "t_max": r.t_max} for r in self.runs],
+            clock=self.clock, mode=self.mode,
+            buffer_capacity=self.buffer_capacity,
+            leaf_size=self.leaf_size, size_ratio=self.size_ratio,
+            materialized=self.materialized, merges=self.merges)
+        self.store.commit_manifest(manifest)
+        self.store.gc()
 
     # ------------------------------------------------------------------ write
     def insert(self, raw: np.ndarray,
@@ -107,6 +190,7 @@ class CoconutLSM:
                                 t_max=int(head_ts.max())))
         if self.mode != "tp":
             self._compact()
+        self._commit()      # one atomic manifest commit per flush
 
     def _compact(self) -> None:
         """Ratio-2 leveling: merge pairs of same-level runs until unique.
@@ -227,13 +311,16 @@ class CoconutLSM:
         runs = self._qualifying_runs(window)
         best_d = np.full((nq, k), np.inf, np.float32)
         best_off = np.full((nq, k), -1, np.int64)
+        cands_pq = np.zeros(nq, np.int64)
         for r in runs:
-            d, off, _ = T.approx_search_batch(
+            d, off, st = T.approx_search_batch(
                 r.tree, jnp.asarray(queries), k=k,
                 radius_leaves=radius_leaves, io=self.io)
+            cands_pq += st.candidates_per_query
             best_d, best_off = self._merge_run_topk(best_d, best_off,
                                                     d, off, k)
-        return best_d, best_off, {"partitions_touched": len(runs)}
+        return best_d, best_off, {"partitions_touched": len(runs),
+                                  "candidates_per_query": cands_pq}
 
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
@@ -256,6 +343,8 @@ class CoconutLSM:
         best_off = np.full((nq, k), -1, np.int64)
         touched = 0
         cands = 0
+        cands_pq = np.zeros(nq, np.int64)
+        leaves_pq = np.zeros(nq, np.int64)
         for r in runs:
             if window is not None and self.mode != "pp" \
                     and r.t_min >= ts_min:
@@ -268,10 +357,14 @@ class CoconutLSM:
                 ts_min=run_ts_min, bsf=best_d[:, -1])
             touched += 1
             cands += st.candidates
+            cands_pq += st.candidates_per_query
+            leaves_pq += st.leaves_per_query
             best_d, best_off = self._merge_run_topk(best_d, best_off,
                                                     d, off, k)
         return best_d, best_off, {"partitions_touched": touched,
-                                  "candidates": cands}
+                                  "candidates": cands,
+                                  "candidates_per_query": cands_pq,
+                                  "leaves_per_query": leaves_pq}
 
     # ------------------------------------------------------------ diagnostics
     def level_histogram(self) -> dict:

@@ -33,12 +33,30 @@ class IOStats:
     def rand_write(self, n_blocks: int = 1) -> None:
         self.counters["rand_write_blocks"] += n_blocks
 
+    # -- real-byte accounting (the on-disk segment store charges these) -----
+    def read_bytes(self, n: int) -> None:
+        """Actual bytes read from persistent storage (mmap page touches)."""
+        self.counters["bytes_read"] += int(n)
+
+    def write_bytes(self, n: int) -> None:
+        """Actual bytes written to persistent storage."""
+        self.counters["bytes_written"] += int(n)
+
     def _blocks(self, n_entries: int) -> int:
         return max(1, -(-n_entries // self.block_series))
 
     @property
     def total_blocks(self) -> int:
-        return sum(self.counters.values())
+        return sum(v for k, v in self.counters.items()
+                   if k.endswith("_blocks"))
+
+    @property
+    def bytes_read(self) -> int:
+        return self.counters["bytes_read"]
+
+    @property
+    def bytes_written(self) -> int:
+        return self.counters["bytes_written"]
 
     @property
     def random_blocks(self) -> int:

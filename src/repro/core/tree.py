@@ -33,7 +33,8 @@ from .metrics import IOStats
 
 __all__ = ["CoconutTree", "build", "approx_search", "exact_search",
            "approx_search_batch", "exact_search_batch",
-           "exact_search_budgeted", "merge_trees", "SearchStats"]
+           "exact_search_budgeted", "merge_trees", "SearchStats",
+           "save", "load"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -93,16 +94,23 @@ class SearchStats:
     """Per-query accounting for the paper's query-cost experiments.
 
     The batched entry points return ONE SearchStats for the whole batch
-    (``queries`` > 1): ``candidates`` counts distinct raw rows fetched
-    (shared across the batch), ``pruned_frac`` is the mean pruned fraction
-    over queries, and ``leaves_touched`` counts distinct leaf blocks in the
-    union of all queries' candidate sets.
+    (``queries`` > 1).  Batch-level totals and per-query breakdowns are
+    BOTH reported so per-query cost is never conflated across the batch:
+    ``candidates`` counts distinct raw rows fetched (shared across the
+    batch), ``pruned_frac`` is the mean pruned fraction over queries,
+    ``leaves_touched`` counts distinct leaf blocks in the union of all
+    queries' candidate sets, and ``candidates_per_query`` /
+    ``leaves_per_query`` are ``[Q]`` arrays attributing verified rows and
+    touched leaves to each individual query (for Q=1 they reduce to the
+    scalar totals).
     """
     candidates: int = 0          # raw series whose true ED was computed
     pruned_frac: float = 0.0     # fraction of index pruned by mindist
     leaves_touched: int = 0      # distinct leaf blocks read
     exact: bool = True
     queries: int = 1             # batch size this accounting covers
+    candidates_per_query: Optional[np.ndarray] = None   # [Q] rows verified
+    leaves_per_query: Optional[np.ndarray] = None       # [Q] leaves touched
 
 
 def build(raw: jax.Array,
@@ -362,6 +370,8 @@ def approx_search_batch(tree: CoconutTree, queries: jax.Array, *,
     stats = SearchStats(candidates=len(np.unique(idx)),
                         leaves_touched=2 * radius_leaves,
                         exact=False, queries=nq)
+    stats.candidates_per_query = np.full(nq, d.shape[1], np.int64)
+    stats.leaves_per_query = np.full(nq, 2 * radius_leaves, np.int64)
     if io is not None:
         io.rand_read(2 * radius_leaves * nq)
     return out_d, out_o, stats
@@ -429,6 +439,12 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
     stats = SearchStats(candidates=0, exact=True, queries=nq)
     stats.pruned_frac = 1.0 - float(prune.sum()) / max(nq * tree.n, 1)
     stats.leaves_touched = len(np.unique(union // tree.leaf_size))
+    # per-query attribution (not conflated across the batch): rows verified
+    # and distinct leaves touched FOR each query, from its own prune row
+    stats.candidates_per_query = np.zeros(nq, np.int64)
+    stats.leaves_per_query = np.asarray(
+        [len(np.unique(np.nonzero(prune[qi])[0] // tree.leaf_size))
+         for qi in range(nq)], np.int64)
     if io is not None and len(union):
         io.seq_read(len(union))
 
@@ -451,6 +467,7 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
             m = mask[qi]
             if not m.any():
                 continue
+            stats.candidates_per_query[qi] += int(m.sum())
             best_d[qi], best_off[qi] = _merge_topk(
                 np.concatenate([best_d[qi], dd[qi][m]]),
                 np.concatenate([best_off[qi], offs_all[block[m]]]), k)
@@ -495,3 +512,29 @@ def merge_trees(a: CoconutTree, b: CoconutTree, *,
         offsets=offs[order].astype(jnp.int32), raw=raw, raw_ref=raw_ref,
         timestamps=None if ts is None else ts[order],
         cfg=a.cfg, leaf_size=a.leaf_size)
+
+
+# ---------------------------------------------------------------------------
+# Persistence (delegates to the storage engine; lazy import keeps core
+# importable without touching disk-facing code)
+# ---------------------------------------------------------------------------
+
+def save(tree: CoconutTree, path: str, *,
+         io: Optional[IOStats] = None) -> None:
+    """Persist the tree as one self-describing on-disk segment file."""
+    from ..storage.segment import write_segment
+    write_segment(path, tree, io=io)
+
+
+def load(path: str) -> CoconutTree:
+    """Reopen a segment file written by :func:`save` as a ``CoconutTree``.
+
+    The columns are already sorted on disk, so searches on the loaded tree
+    are identical to the tree that was saved.
+    """
+    from ..storage.segment import Segment
+    seg = Segment.open(path)
+    try:
+        return seg.to_tree()
+    finally:
+        seg.close()

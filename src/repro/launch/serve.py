@@ -12,8 +12,16 @@ answered together through ``search_exact_batch`` — one amortized SIMS scan
 per run for the whole micro-batch instead of one scan per probe (the
 batched query engine on its serving path).
 
+With ``--data-dir`` the index is durable: an existing manifest is
+reopened (restartable serving — decode resumes against everything a
+previous process committed), otherwise a fresh store is created there.
+Every flush commits the manifest — including the flush that precedes
+each probe micro-batch — and ``--checkpoint-every`` adds step-aligned
+flushes on top, tightening durability between probe batches.
+
 Usage: PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-           --steps 32 --batch 4 --probe-batch 8
+           --steps 32 --batch 4 --probe-batch 8 \
+           --data-dir /tmp/coconut-serve --checkpoint-every 16
 """
 from __future__ import annotations
 
@@ -43,6 +51,15 @@ def main(argv=None) -> None:
                     help="micro-batch size for kNN probes (answered "
                          "together via search_exact_batch)")
     ap.add_argument("--knn-k", type=int, default=1)
+    ap.add_argument("--data-dir", default=None,
+                    help="persist the index here: reopen if a manifest "
+                         "exists, else create a new segment store")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="extra flush + manifest commit every N decode "
+                         "steps; the flush before each probe micro-batch "
+                         "also commits when --data-dir is set, so this "
+                         "only tightens durability between probe batches "
+                         "(0 = no extra checkpoints)")
     args = ap.parse_args(argv)
 
     cfg = get(args.arch, smoke=True)
@@ -64,7 +81,17 @@ def main(argv=None) -> None:
     tokens = jnp.argmax(last, -1)[:, None]
 
     icfg = SummaryConfig(series_len=64, segments=16, bits=8)
-    index = CoconutLSM(icfg, buffer_capacity=64, leaf_size=32, mode="btp")
+    store = None
+    if args.data_dir:
+        from ..storage import SegmentStore
+        store = SegmentStore(args.data_dir)
+    if store is not None and store.exists():
+        index = CoconutLSM.open(store)
+        print(f"reopened {store.describe()}: {index.n} entries in "
+              f"{len(index.runs)} runs (clock={index.clock})")
+    else:
+        index = CoconutLSM(icfg, buffer_capacity=64, leaf_size=32,
+                           mode="btp", store=store)
 
     base = T + (cfg.frontend_tokens
                 if cfg.frontend != "none" and not cfg.is_encdec else 0)
@@ -91,6 +118,9 @@ def main(argv=None) -> None:
             logits[:, -1, :64].astype(jnp.float32)), np.float32)
         index.insert(h)
         pending.append(h[0])          # one probe per step (sequence 0)
+        if store is not None and args.checkpoint_every \
+                and (s + 1) % args.checkpoint_every == 0:
+            index.flush()             # periodic durable checkpoint
         if len(pending) >= args.probe_batch:
             d, st, dt_p = answer_probes(pending)
             probe_time += dt_p
@@ -105,6 +135,9 @@ def main(argv=None) -> None:
         probes_answered += len(pending)
         batches_answered += 1
         last_d = float(d[-1, 0])
+    if store is not None:
+        index.flush()                 # final checkpoint: commit manifest
+        print(f"checkpointed {store.describe()}")
     qps = probes_answered / max(probe_time, 1e-9)
     print(f"arch={args.arch}: {args.steps} steps x {B} seqs in "
           f"{dt*1e3:.0f} ms ({args.steps*B/dt:.1f} tok/s); "

@@ -1,0 +1,13 @@
+"""Persistent storage engine: on-disk segments, manifest store, external sort.
+
+See docs/ARCHITECTURE.md ("Storage engine") for the segment layout, the
+manifest commit protocol, and the recovery rules.
+"""
+from .external_sort import build_external
+from .segment import (Segment, SegmentFormatError, SegmentWriter,
+                      exact_search_mmap, write_segment)
+from .store import SegmentStore
+
+__all__ = ["Segment", "SegmentWriter", "SegmentFormatError",
+           "SegmentStore", "build_external", "exact_search_mmap",
+           "write_segment"]

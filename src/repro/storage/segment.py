@@ -1,0 +1,569 @@
+"""On-disk Coconut segment: one sorted run as a contiguous binary file.
+
+The paper's central storage claim (Sec. 4.3, and the sequential-write
+analysis of arXiv 2006.13713) is that sortable summarizations let the whole
+index live in a *contiguous on-disk array* written with large sequential
+appends — no tree of scattered pages.  A segment file is exactly that
+array, laid out column-major so each query touches only the columns it
+needs:
+
+    +--------------------------------------------------------------+
+    | header (512 B): magic, crc, flags, n, SummaryConfig, layout  |
+    +--------------------------------------------------------------+
+    | keys        [N, n_words] uint32   z-order sorted             |
+    | codes       [N, w]       uint8    SAX words (sorted order)   |
+    | paas        [N, w]       float32  PAA values (sorted order)  |
+    | offsets     [N]          int64    position in original file  |
+    | timestamps  [N]          int64    (optional)                 |
+    | raw         [N, L]       float32  (optional; co-sorted when  |
+    |                                    materialized, original    |
+    |                                    order otherwise)          |
+    | fences      [ceil(N/leaf), n_words] uint32  leaf-first keys  |
+    +--------------------------------------------------------------+
+    | footer (20 B): magic, n, header-crc echo                     |
+    +--------------------------------------------------------------+
+
+Every column is 64-byte aligned and carries a crc32.  The header embeds
+the ``SummaryConfig`` so a segment is self-describing; the footer is
+written *last*, so a file without a valid footer is an interrupted write
+and is discarded during recovery (see :mod:`repro.storage.store`).
+
+Reading is zero-copy: :class:`Segment` exposes each column as an
+``np.memmap``, and :func:`exact_search_mmap` streams the code column
+through the existing mindist kernels chunk-wise, charging the *actual*
+bytes touched to :class:`repro.core.metrics.IOStats` — the paper's I/O
+accounting finally measures real I/O instead of a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import zlib
+from typing import Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import keys as K
+from ..core import summarization as S
+from ..core.metrics import IOStats
+
+__all__ = ["Segment", "SegmentWriter", "write_segment",
+           "exact_search_mmap", "SegmentFormatError",
+           "MAGIC", "FOOTER_MAGIC", "HEADER_SIZE", "FOOTER_SIZE"]
+
+MAGIC = b"COCOSEG1"
+FOOTER_MAGIC = b"COCOFIN1"
+HEADER_SIZE = 512
+FOOTER_SIZE = 20
+_ALIGN = 64
+VERSION = 1
+
+# flags
+F_MATERIALIZED = 1 << 0    # raw block is co-sorted with the keys
+F_HAS_TS = 1 << 1          # timestamps column present
+F_HAS_RAW = 1 << 2         # raw block present
+
+_COLUMNS = ("keys", "codes", "paas", "offsets", "timestamps", "raw",
+            "fences")
+_DTYPES = {
+    "keys": np.uint32, "codes": np.uint8, "paas": np.float32,
+    "offsets": np.int64, "timestamps": np.int64, "raw": np.float32,
+    "fences": np.uint32,
+}
+
+# header: magic, crc, version, flags, n, L, w, b, leaf, n_words, n_fences
+_HEAD_FMT = "<8sIHHQIIIIII"
+_COL_FMT = "<QQI"          # per column: offset, nbytes, crc32
+_FOOT_FMT = "<8sQI"        # magic, n, header-crc echo
+
+
+class SegmentFormatError(RuntimeError):
+    """Raised when a segment file is missing, truncated, or corrupt."""
+
+
+def _align(off: int) -> int:
+    return -(-off // _ALIGN) * _ALIGN
+
+
+def _layout(n: int, cfg: S.SummaryConfig, leaf_size: int,
+            has_ts: bool, has_raw: bool) -> dict:
+    """Column name -> (offset, nbytes, shape).  Deterministic given the
+    header fields, so the writer can place columns before any data exists."""
+    w, nw, L = cfg.segments, cfg.n_words, cfg.series_len
+    n_fences = -(-n // leaf_size) if n else 0
+    shapes = {
+        "keys": (n, nw), "codes": (n, w), "paas": (n, w),
+        "offsets": (n,), "timestamps": (n,) if has_ts else None,
+        "raw": (n, L) if has_raw else None,
+        "fences": (n_fences, nw),
+    }
+    out, off = {}, HEADER_SIZE
+    for name in _COLUMNS:
+        shape = shapes[name]
+        if shape is None:
+            out[name] = (0, 0, None)
+            continue
+        nbytes = int(np.prod(shape, dtype=np.int64)) * \
+            np.dtype(_DTYPES[name]).itemsize
+        off = _align(off)
+        out[name] = (off, nbytes, shape)
+        off += nbytes
+    out["__footer__"] = (_align(off), FOOTER_SIZE, None)
+    return out
+
+
+class SegmentWriter:
+    """Streaming segment writer: large sequential appends per column.
+
+    ``n`` (the total entry count) must be known up front — exactly what the
+    external-sort build provides after its chunking pass — so every column
+    region has a fixed place and each region is filled strictly
+    sequentially.  The header is written twice: a zeroed placeholder first
+    (an interrupted write is therefore unreadable), the real one at
+    :meth:`finalize` after the footer, then fsync.
+    """
+
+    def __init__(self, path: str, cfg: S.SummaryConfig, n: int, *,
+                 leaf_size: int = 256, materialized: bool = True,
+                 has_timestamps: bool = False, has_raw: bool = True,
+                 io: Optional[IOStats] = None):
+        if materialized and not has_raw:
+            raise ValueError("materialized segment requires the raw block")
+        self.path = path
+        self.cfg = cfg
+        self.n = int(n)
+        self.leaf_size = int(leaf_size)
+        self.materialized = bool(materialized)
+        self.has_ts = bool(has_timestamps)
+        self.has_raw = bool(has_raw)
+        self.io = io
+        self._layout = _layout(self.n, cfg, self.leaf_size,
+                               self.has_ts, self.has_raw)
+        self._pos = {name: 0 for name in _COLUMNS}   # rows written per col
+        self._crc = {name: 0 for name in _COLUMNS}
+        self._fences: list[np.ndarray] = []
+        self._f = open(path, "w+b")
+        self._f.write(b"\0" * HEADER_SIZE)
+
+    # ------------------------------------------------------------------ write
+    def _put(self, name: str, arr: np.ndarray) -> None:
+        off, nbytes, shape = self._layout[name]
+        if shape is None:
+            raise ValueError(f"segment has no {name!r} column")
+        arr = np.ascontiguousarray(arr, dtype=_DTYPES[name])
+        want = shape[1:] if len(shape) > 1 else ()
+        if arr.shape[1:] != want:
+            raise ValueError(f"{name}: row shape {arr.shape[1:]} != {want}")
+        row_bytes = arr.dtype.itemsize * int(np.prod(want, dtype=np.int64)
+                                             or 1)
+        start = self._pos[name]
+        if start + len(arr) > self.n:
+            raise ValueError(f"{name}: {start + len(arr)} rows > n={self.n}")
+        buf = arr.tobytes()
+        self._f.seek(off + start * row_bytes)
+        self._f.write(buf)
+        self._crc[name] = zlib.crc32(buf, self._crc[name])
+        self._pos[name] = start + len(arr)
+        if self.io is not None:
+            self.io.write_bytes(len(buf))
+            self.io.seq_write(len(arr))
+
+    def append(self, keys: np.ndarray, codes: np.ndarray, paas: np.ndarray,
+               offsets: np.ndarray,
+               timestamps: Optional[np.ndarray] = None,
+               raw: Optional[np.ndarray] = None) -> None:
+        """Append a batch of *sorted-order* rows to every sorted column.
+
+        ``raw`` is required (and co-sorted) iff the segment is
+        materialized; for non-materialized segments the original-order raw
+        block is streamed separately via :meth:`append_raw`.
+        """
+        start = self._pos["keys"]
+        self._put("keys", keys)
+        self._put("codes", codes)
+        self._put("paas", paas)
+        self._put("offsets", offsets)
+        if self.has_ts:
+            if timestamps is None:
+                raise ValueError("segment expects timestamps")
+            self._put("timestamps", timestamps)
+        if self.materialized:
+            if raw is None:
+                raise ValueError("materialized segment expects raw rows")
+            self._put("raw", raw)
+        # collect leaf-first keys (every leaf_size-th global row) as fences
+        idx = np.arange(start, start + len(keys))
+        mask = idx % self.leaf_size == 0
+        if mask.any():
+            self._fences.append(
+                np.ascontiguousarray(keys, np.uint32)[mask])
+
+    def append_raw(self, rows: np.ndarray) -> None:
+        """Append original-order raw rows (non-materialized segments)."""
+        if self.materialized:
+            raise ValueError("materialized raw is appended via append()")
+        self._put("raw", rows)
+
+    # --------------------------------------------------------------- finalize
+    def finalize(self) -> None:
+        for name in _COLUMNS:
+            off, nbytes, shape = self._layout[name]
+            if name == "fences" or shape is None:
+                continue
+            want = shape[0]
+            if self._pos[name] != want:
+                raise ValueError(
+                    f"{name}: wrote {self._pos[name]} rows, expected {want}")
+        fences = (np.concatenate(self._fences) if self._fences
+                  else np.zeros((0, self.cfg.n_words), np.uint32))
+        self._put("fences", fences)
+        header = self._header_bytes()
+        head_crc, = struct.unpack_from("<I", header, 8)
+        foot_off = self._layout["__footer__"][0]
+        self._f.seek(foot_off)
+        self._f.write(struct.pack(_FOOT_FMT, FOOTER_MAGIC, self.n,
+                                  head_crc))
+        self._f.seek(0)
+        self._f.write(header)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        if self.io is not None:
+            self.io.write_bytes(HEADER_SIZE + FOOTER_SIZE)
+
+    def abort(self) -> None:
+        self._f.close()
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+
+    def _header_bytes(self) -> bytes:
+        flags = ((F_MATERIALIZED if self.materialized else 0)
+                 | (F_HAS_TS if self.has_ts else 0)
+                 | (F_HAS_RAW if self.has_raw else 0))
+        n_fences = self._layout["fences"][2][0]
+        head = bytearray(HEADER_SIZE)
+        struct.pack_into(_HEAD_FMT, head, 0, MAGIC, 0, VERSION, flags,
+                         self.n, self.cfg.series_len, self.cfg.segments,
+                         self.cfg.bits, self.leaf_size, self.cfg.n_words,
+                         n_fences)
+        pos = struct.calcsize(_HEAD_FMT)
+        for name in _COLUMNS:
+            off, nbytes, shape = self._layout[name]
+            struct.pack_into(_COL_FMT, head, pos,
+                             off if shape is not None else 0, nbytes,
+                             self._crc[name])
+            pos += struct.calcsize(_COL_FMT)
+        crc = zlib.crc32(bytes(head[12:]))
+        struct.pack_into("<I", head, 8, crc)
+        return bytes(head)
+
+
+def write_segment(path: str, tree, *, io: Optional[IOStats] = None) -> None:
+    """Persist an in-memory ``CoconutTree`` as one segment file.
+
+    One large sequential write per column — the O(N/B) sequential-write
+    cost of the paper's bulk load, now against a real file.
+    """
+    has_ts = tree.timestamps is not None
+    has_raw = tree.raw is not None or tree.raw_ref is not None
+    w = SegmentWriter(path, tree.cfg, tree.n, leaf_size=tree.leaf_size,
+                      materialized=tree.materialized,
+                      has_timestamps=has_ts, has_raw=has_raw, io=io)
+    try:
+        w.append(np.asarray(tree.keys), np.asarray(tree.codes),
+                 np.asarray(tree.paas), np.asarray(tree.offsets),
+                 timestamps=(np.asarray(tree.timestamps)
+                             if has_ts else None),
+                 raw=np.asarray(tree.raw) if tree.materialized else None)
+        if has_raw and not tree.materialized:
+            w.append_raw(np.asarray(tree.raw_ref))
+        w.finalize()
+    except BaseException:
+        w.abort()
+        raise
+
+
+# ---------------------------------------------------------------------------
+# Reader
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Segment:
+    """mmap-backed view of one segment file (open with :meth:`open`)."""
+    path: str
+    cfg: S.SummaryConfig
+    n: int
+    leaf_size: int
+    materialized: bool
+    columns: dict                    # name -> np.memmap (or None)
+    column_crcs: dict                # name -> stored crc32
+    nbytes: int                      # file size on disk
+
+    @classmethod
+    def open(cls, path: str) -> "Segment":
+        try:
+            size = os.path.getsize(path)
+            with open(path, "rb") as f:
+                head = f.read(HEADER_SIZE)
+        except OSError as e:
+            raise SegmentFormatError(f"{path}: {e}") from e
+        if len(head) < HEADER_SIZE:
+            raise SegmentFormatError(f"{path}: truncated header")
+        (magic, crc, version, flags, n, L, w, b, leaf, nw,
+         n_fences) = struct.unpack_from(_HEAD_FMT, head, 0)
+        if magic != MAGIC:
+            raise SegmentFormatError(f"{path}: bad magic {magic!r}")
+        if zlib.crc32(head[12:]) != crc:
+            raise SegmentFormatError(f"{path}: header checksum mismatch")
+        if version != VERSION:
+            raise SegmentFormatError(f"{path}: unknown version {version}")
+        cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+        if cfg.n_words != nw:
+            raise SegmentFormatError(f"{path}: n_words {nw} inconsistent")
+        pos = struct.calcsize(_HEAD_FMT)
+        cols, crcs = {}, {}
+        lay = _layout(n, cfg, leaf,
+                      bool(flags & F_HAS_TS), bool(flags & F_HAS_RAW))
+        for name in _COLUMNS:
+            off, nbytes, col_crc = struct.unpack_from(_COL_FMT, head, pos)
+            pos += struct.calcsize(_COL_FMT)
+            want_off, want_bytes, shape = lay[name]
+            if shape is None:
+                if nbytes:
+                    raise SegmentFormatError(
+                        f"{path}: unexpected {name} column")
+                cols[name] = None
+                continue
+            if (off, nbytes) != (want_off, want_bytes):
+                raise SegmentFormatError(
+                    f"{path}: {name} layout mismatch")
+            if off + nbytes > size:
+                raise SegmentFormatError(f"{path}: {name} beyond EOF")
+            crcs[name] = col_crc
+            if nbytes == 0:
+                cols[name] = np.zeros(shape, _DTYPES[name])
+            else:
+                cols[name] = np.memmap(path, dtype=_DTYPES[name],
+                                       mode="r", offset=off, shape=shape)
+        foot_off = lay["__footer__"][0]
+        if foot_off + FOOTER_SIZE > size:
+            raise SegmentFormatError(f"{path}: missing footer "
+                                     "(interrupted write)")
+        with open(path, "rb") as f:
+            f.seek(foot_off)
+            foot = f.read(FOOTER_SIZE)
+        fmagic, fn, fcrc = struct.unpack(_FOOT_FMT, foot)
+        if fmagic != FOOTER_MAGIC or fn != n or fcrc != crc:
+            raise SegmentFormatError(f"{path}: bad footer "
+                                     "(interrupted write)")
+        return cls(path=path, cfg=cfg, n=n, leaf_size=leaf,
+                   materialized=bool(flags & F_MATERIALIZED),
+                   columns=cols, column_crcs=crcs, nbytes=size)
+
+    # ------------------------------------------------------------ column views
+    @property
+    def keys(self) -> np.memmap:
+        return self.columns["keys"]
+
+    @property
+    def codes(self) -> np.memmap:
+        return self.columns["codes"]
+
+    @property
+    def paas(self) -> np.memmap:
+        return self.columns["paas"]
+
+    @property
+    def offsets(self) -> np.memmap:
+        return self.columns["offsets"]
+
+    @property
+    def timestamps(self) -> Optional[np.memmap]:
+        return self.columns["timestamps"]
+
+    @property
+    def raw(self) -> Optional[np.memmap]:
+        return self.columns["raw"]
+
+    @property
+    def fences(self) -> np.memmap:
+        return self.columns["fences"]
+
+    def verify(self) -> None:
+        """Full-content check: recompute every column crc32 (reads all)."""
+        for name, mm in self.columns.items():
+            if mm is None or not isinstance(mm, np.memmap):
+                continue
+            got = zlib.crc32(mm.tobytes())
+            if got != self.column_crcs[name]:
+                raise SegmentFormatError(
+                    f"{self.path}: {name} checksum mismatch")
+
+    def series_rows(self, sorted_idx: np.ndarray,
+                    io: Optional[IOStats] = None) -> np.ndarray:
+        """Raw rows for sorted-order indices (handles both raw layouts)."""
+        if self.raw is None:
+            raise SegmentFormatError(f"{self.path}: no raw block on disk")
+        if self.materialized:
+            rows = np.asarray(self.raw[sorted_idx])
+        else:
+            rows = np.asarray(self.raw[np.asarray(self.offsets[sorted_idx])])
+        if io is not None:
+            io.read_bytes(rows.nbytes)
+        return rows
+
+    def to_tree(self):
+        """Load the segment into an in-memory/device ``CoconutTree``.
+
+        The columns are already sorted on disk, so this is a straight
+        sequential read — no re-sorting — and searches on the result are
+        bit-identical to the tree that produced the segment.
+        """
+        from ..core.tree import CoconutTree
+        ts = self.timestamps
+        mat = self.materialized
+        raw = None
+        raw_ref = None
+        if self.raw is not None:
+            block = jnp.asarray(np.asarray(self.raw))
+            raw, raw_ref = (block, None) if mat else (None, block)
+        return CoconutTree(
+            keys=jnp.asarray(np.asarray(self.keys)),
+            codes=jnp.asarray(np.asarray(self.codes)),
+            paas=jnp.asarray(np.asarray(self.paas)),
+            offsets=jnp.asarray(np.asarray(self.offsets)).astype(jnp.int32),
+            raw=raw, raw_ref=raw_ref,
+            timestamps=(None if ts is None
+                        else jnp.asarray(np.asarray(ts))),
+            cfg=self.cfg, leaf_size=self.leaf_size)
+
+    def iter_sorted(self, batch: int = 8192
+                    ) -> Iterator[Tuple[np.ndarray, ...]]:
+        """Yield (keys, codes, paas, offsets[, ts][, raw]) batches in key
+        order — the sequential-read side of a k-way merge."""
+        for s in range(0, self.n, batch):
+            e = min(s + batch, self.n)
+            out = [np.asarray(self.keys[s:e]), np.asarray(self.codes[s:e]),
+                   np.asarray(self.paas[s:e]),
+                   np.asarray(self.offsets[s:e])]
+            out.append(None if self.timestamps is None
+                       else np.asarray(self.timestamps[s:e]))
+            out.append(None if (self.raw is None or not self.materialized)
+                       else np.asarray(self.raw[s:e]))
+            yield tuple(out)
+
+    def close(self) -> None:
+        for name, mm in list(self.columns.items()):
+            if isinstance(mm, np.memmap):
+                del mm
+            self.columns[name] = None
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy query path: chunk-wise SIMS over the mmap'd columns
+# ---------------------------------------------------------------------------
+
+def exact_search_mmap(seg: Segment, queries: np.ndarray, *,
+                      k: int = 1, chunk: int = 8192,
+                      radius_leaves: int = 1,
+                      io: Optional[IOStats] = None,
+                      mindist_fn=None,
+                      ) -> Tuple[np.ndarray, np.ndarray, "object"]:
+    """Exact k-NN straight off the segment file (SIMS, Algorithm 5).
+
+    The code column is streamed from the mmap in ``chunk``-row slices and
+    fed to the existing batched mindist kernel; only unpruned rows are
+    fetched from the raw block.  Every byte that actually crosses the
+    storage boundary is charged to ``io`` (``bytes_read``), so cold-vs-warm
+    benchmarks measure real page-cache behavior.
+
+    Returns ``(dists [Q, k], offsets [Q, k], SearchStats)`` matching
+    :func:`repro.core.tree.exact_search_batch` on the same data.
+    """
+    from ..core.tree import SearchStats, _merge_topk
+    if seg.raw is None:
+        raise SegmentFormatError(
+            f"{seg.path}: exact search needs the raw block on disk")
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    nq = queries.shape[0]
+    cfg = seg.cfg
+    q_paas = S.paa(jnp.asarray(queries), cfg.segments)
+    if mindist_fn is None:
+        mindist_fn = lambda qp, codes: S.mindist_sq_batch(qp, codes, cfg)
+
+    # -- seed from the fence pointers (binary search over leaf-first keys) --
+    fences = np.asarray(seg.fences)
+    if io is not None:
+        io.read_bytes(fences.nbytes)
+    q_codes = S.sax_encode(q_paas, cfg.bits)
+    q_keys = K.interleave_codes(q_codes, w=cfg.segments, b=cfg.bits)
+    if len(fences):
+        leaf = np.asarray(K.searchsorted_keys(jnp.asarray(fences), q_keys))
+    else:
+        leaf = np.zeros(nq, np.int32)
+    span = 2 * radius_leaves * seg.leaf_size
+    best_d = np.full((nq, k), np.inf, np.float32)
+    best_off = np.full((nq, k), -1, np.int64)
+    offs_mm = seg.offsets
+    for qi in range(nq):
+        center = int(leaf[qi]) * seg.leaf_size
+        start = min(max(center - span // 2, 0), max(seg.n - span, 0))
+        idx = np.arange(start, min(start + span, seg.n))
+        if len(idx) == 0:
+            continue
+        rows = seg.series_rows(idx, io=io)
+        if io is not None:
+            io.rand_read(2 * radius_leaves)
+        d = np.asarray(S.euclidean_sq(jnp.asarray(queries[qi]),
+                                      jnp.asarray(rows)))
+        best_d[qi], best_off[qi] = _merge_topk(
+            d, np.asarray(offs_mm[idx]), k)
+    bound = best_d[:, -1].copy()
+
+    stats = SearchStats(candidates=0, exact=True, queries=nq)
+    stats.candidates_per_query = np.zeros(nq, np.int64)
+    stats.leaves_per_query = np.zeros(nq, np.int64)
+    unpruned = 0
+    leaves_union: set = set()
+
+    # -- chunk-wise streaming SIMS scan over the code column ----------------
+    # bound the [Q, B, L] verification intermediate like exact_search_batch:
+    # rows-per-chunk scales down with batch size to avoid host-memory thrash
+    eff_chunk = min(chunk, max(64, 32768 // nq))
+    for s in range(0, seg.n, eff_chunk):
+        e = min(s + eff_chunk, seg.n)
+        codes_blk = np.asarray(seg.codes[s:e])
+        if io is not None:
+            io.read_bytes(codes_blk.nbytes)
+            io.seq_read(e - s)
+        md = np.asarray(mindist_fn(q_paas, jnp.asarray(codes_blk)))
+        live = md < bound[:, None]                       # [Q, B]
+        keep = live.any(axis=0)
+        unpruned += int(live.sum())
+        if not keep.any():
+            continue
+        block = s + np.nonzero(keep)[0]
+        mask = live[:, keep]
+        for lf in np.unique(block // seg.leaf_size):
+            leaves_union.add(int(lf))
+        rows = seg.series_rows(block, io=io)
+        dd = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
+                                             jnp.asarray(rows)))
+        stats.candidates += len(block)
+        offs_blk = np.asarray(offs_mm[block])
+        for qi in range(nq):
+            m = mask[qi]
+            if not m.any():
+                continue
+            stats.candidates_per_query[qi] += int(m.sum())
+            stats.leaves_per_query[qi] += len(
+                np.unique(block[m] // seg.leaf_size))
+            best_d[qi], best_off[qi] = _merge_topk(
+                np.concatenate([best_d[qi], dd[qi][m]]),
+                np.concatenate([best_off[qi], offs_blk[m]]), k)
+            bound[qi] = best_d[qi, -1]
+    stats.pruned_frac = 1.0 - unpruned / max(nq * seg.n, 1)
+    stats.leaves_touched = len(leaves_union)
+    return best_d, best_off, stats

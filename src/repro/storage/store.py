@@ -1,0 +1,177 @@
+"""SegmentStore: a directory of segments + an atomically-committed manifest.
+
+The LSM structure (levels, runs, clock) lives in ``MANIFEST.json``; segment
+files are immutable once finalized.  All mutations follow the classic LSM
+commit protocol:
+
+    1. write + fsync the new segment file(s)           (crash => orphan)
+    2. write MANIFEST.json.tmp, fsync, os.replace      (the commit point)
+    3. delete segment files no longer referenced       (crash => orphan)
+
+``os.replace`` is atomic on POSIX, so the manifest always names a
+consistent set of finalized segments: a crash *anywhere* leaves either the
+old or the new manifest, plus possibly some orphan files that
+:meth:`SegmentStore.recover` removes on the next open.  Losing the
+in-memory write buffer on crash is the standard no-WAL LSM contract —
+durability is up to the last committed flush.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, List, Optional
+
+from ..core import summarization as S
+from ..core.metrics import IOStats
+from .segment import Segment, SegmentFormatError, write_segment
+
+__all__ = ["SegmentStore", "MANIFEST_NAME"]
+
+MANIFEST_NAME = "MANIFEST.json"
+_SEG_RE = re.compile(r"^seg-(\d{6})\.coco$")
+MANIFEST_VERSION = 1
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+@dataclasses.dataclass
+class SegmentStore:
+    """Manages ``root/seg-NNNNNN.coco`` files and ``root/MANIFEST.json``."""
+    root: str
+    io: Optional[IOStats] = None
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+        self._next_id = 1 + max(
+            [int(m.group(1)) for f in os.listdir(self.root)
+             if (m := _SEG_RE.match(f))] or [0])
+
+    # --------------------------------------------------------------- manifest
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.root, MANIFEST_NAME)
+
+    def exists(self) -> bool:
+        return os.path.exists(self.manifest_path)
+
+    def load_manifest(self) -> Optional[dict]:
+        if not self.exists():
+            return None
+        with open(self.manifest_path) as f:
+            m = json.load(f)
+        if m.get("version") != MANIFEST_VERSION:
+            raise SegmentFormatError(
+                f"{self.manifest_path}: unknown manifest version")
+        return m
+
+    def commit_manifest(self, manifest: dict) -> None:
+        """Atomic manifest replace — THE commit point for every mutation."""
+        manifest = dict(manifest, version=MANIFEST_VERSION)
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.manifest_path)
+        _fsync_dir(self.root)
+        if self.io is not None:
+            self.io.rand_write(1)
+
+    @staticmethod
+    def manifest_for(cfg: S.SummaryConfig, runs: List[dict],
+                     **extra) -> dict:
+        return {
+            "version": MANIFEST_VERSION,
+            "cfg": {"series_len": cfg.series_len,
+                    "segments": cfg.segments, "bits": cfg.bits},
+            "runs": runs,
+            **extra,
+        }
+
+    @staticmethod
+    def cfg_from_manifest(manifest: dict) -> S.SummaryConfig:
+        return S.SummaryConfig(**manifest["cfg"])
+
+    # --------------------------------------------------------------- segments
+    def new_segment_path(self) -> str:
+        name = f"seg-{self._next_id:06d}.coco"
+        self._next_id += 1
+        return os.path.join(self.root, name)
+
+    def write_tree(self, tree) -> str:
+        """Persist a ``CoconutTree`` as a fresh segment; returns its file
+        name (relative to root).  NOT yet referenced by the manifest —
+        commit separately."""
+        path = self.new_segment_path()
+        write_segment(path, tree, io=self.io)
+        return os.path.basename(path)
+
+    def open_segment(self, name: str) -> Segment:
+        return Segment.open(os.path.join(self.root, name))
+
+    def segment_files(self) -> List[str]:
+        return sorted(f for f in os.listdir(self.root) if _SEG_RE.match(f))
+
+    def live_files(self) -> List[str]:
+        m = self.load_manifest()
+        if m is None:
+            return []
+        return [r["file"] for r in m["runs"]]
+
+    # --------------------------------------------------------------- recovery
+    def recover(self) -> Dict[str, List[str]]:
+        """Replay the commit protocol after a crash.
+
+        * a leftover ``MANIFEST.json.tmp`` is an uncommitted commit —
+          discarded (the committed manifest, if any, stays authoritative);
+        * segment files not referenced by the manifest (orphans from a
+          crash between steps 1-2 or 2-3) are deleted;
+        * referenced segments must open cleanly (footer + header crc);
+          a referenced-but-corrupt segment raises — that is data loss the
+          caller must hear about, not silently drop.
+        """
+        report = {"removed": [], "kept": []}
+        tmp = self.manifest_path + ".tmp"
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+            report["removed"].append(os.path.basename(tmp))
+        live = set(self.live_files())
+        for f in self.segment_files():
+            if f not in live:
+                os.unlink(os.path.join(self.root, f))
+                report["removed"].append(f)
+            else:
+                seg = self.open_segment(f)   # raises SegmentFormatError
+                seg.close()
+                report["kept"].append(f)
+        return report
+
+    def gc(self) -> List[str]:
+        """Delete finalized segments the manifest no longer references."""
+        live = set(self.live_files())
+        removed = []
+        for f in self.segment_files():
+            if f not in live:
+                os.unlink(os.path.join(self.root, f))
+                removed.append(f)
+        return removed
+
+    # ------------------------------------------------------------ diagnostics
+    def total_bytes(self) -> int:
+        return sum(os.path.getsize(os.path.join(self.root, f))
+                   for f in self.segment_files())
+
+    def describe(self) -> str:
+        m = self.load_manifest()
+        nruns = len(m["runs"]) if m else 0
+        return (f"SegmentStore({self.root}: {len(self.segment_files())} "
+                f"segments, {nruns} live runs, "
+                f"{self.total_bytes() / 1e6:.2f} MB)")

@@ -126,6 +126,29 @@ def test_tree_exact_batch_external_bsf_prunes_to_empty(data, tree):
     np.testing.assert_array_equal(off_b, off_ap)
 
 
+def test_batch_stats_not_conflated_across_queries(data, tree):
+    """The batch SearchStats reports BOTH totals and per-query breakdowns;
+    for Q=1 the per-query row reduces to the scalar totals."""
+    raw, queries = data
+    _, _, st = T.exact_search_batch(tree, queries, k=1)
+    assert st.candidates_per_query.shape == (NQ,)
+    assert st.leaves_per_query.shape == (NQ,)
+    assert np.all(st.candidates_per_query >= 0)
+    # union accounting: no single query is charged more rows than the
+    # whole batch verified, and the union is <= the per-query sum
+    assert st.candidates_per_query.max() <= st.candidates_per_query.sum()
+    assert st.candidates <= int(st.candidates_per_query.sum())
+    # Q=1: per-query == totals, and leaves match the union count
+    _, _, s1 = T.exact_search_batch(tree, queries[0], k=1)
+    assert s1.candidates_per_query.shape == (1,)
+    assert int(s1.candidates_per_query[0]) == s1.candidates
+    assert int(s1.leaves_per_query[0]) == s1.leaves_touched
+    # approximate path carries the same per-query fields
+    _, _, sa = T.approx_search_batch(tree, queries, k=1)
+    assert sa.candidates_per_query.shape == (NQ,)
+    assert np.all(sa.leaves_per_query == 2)
+
+
 # ----------------------------------------------------------------- LSM path
 
 def _loaded_lsm(raw_np, mode="btp"):

@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   kernels        (infra)          hot-loop throughput + kernel parity
   storage        Table 2/Fig. 11  on-disk build MB/s, bytes/series,
                                   cold-vs-warm mmap query latency
+  streaming      Sec. 4.4/5       query + insert latency under sustained
+                                  ingest, inline vs background compaction
   roofline       (assignment)     arch x shape terms from the dry-run
 """
 import sys
@@ -20,13 +22,13 @@ import sys
 def main() -> None:
     from . import (construction, distributed_bench, insertions,
                    kernels_bench, query, roofline, segments, space,
-                   storage, windows, workload)
+                   storage, streaming, windows, workload)
     mods = {
         "construction": construction, "space": space,
         "segments": segments, "query": query, "insertions": insertions,
         "windows": windows, "workload": workload,
         "kernels": kernels_bench, "distributed": distributed_bench,
-        "storage": storage, "roofline": roofline,
+        "storage": storage, "streaming": streaming, "roofline": roofline,
     }
     only = sys.argv[1:] or list(mods)
     print("name,us_per_call,derived")

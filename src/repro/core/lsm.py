@@ -18,21 +18,32 @@ With a :class:`repro.storage.store.SegmentStore` attached, every flush and
 merge also lands on disk: new runs are written as segment files and the
 manifest is atomically committed once per flush, so the index survives
 process restart (``CoconutLSM.open``) and a crash anywhere replays cleanly
-from the last committed manifest.  Only the in-memory buffer is volatile —
-the standard no-WAL LSM durability contract.
+from the last committed manifest.  The in-memory buffer is covered by a
+write-ahead log (:mod:`repro.ingest.wal`) living beside the segments: every
+``insert`` is logged before it is acknowledged and replayed on reopen, so
+acked-but-unflushed rows survive a crash too — the old "volatile buffer"
+contract is gone.
+
+With ``concurrent=True`` the engine additionally moves flushes, merges,
+and manifest commits onto a background worker (:mod:`repro.ingest.compactor`):
+``insert`` only appends to the WAL and the buffer (with bounded-debt
+backpressure), and every ``search_*``/``search_*_batch`` runs against an
+immutable :class:`repro.ingest.snapshot.Snapshot` — frozen run list plus a
+frozen copy of the buffer — so exact answers are bit-identical to the
+synchronous engine while compaction proceeds underneath.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import summarization as S
 from . import tree as T
-from .metrics import IOStats
+from .metrics import IngestMetrics, IOStats
 
 __all__ = ["CoconutLSM", "Run"]
 
@@ -50,8 +61,27 @@ class Run:
         return self.tree.n
 
 
+@dataclasses.dataclass
+class _PendingFlush:
+    """Buffer head handed to a flush but not yet published as a run.
+    Holds *references* to the immutable batch arrays (possibly boundary
+    views), so snapshots keep seeing the rows without any copy under the
+    engine lock."""
+    raw_parts: List[np.ndarray]
+    ts_parts: List[np.ndarray]
+    n: int
+
+
 class CoconutLSM:
-    """Log-structured Coconut index with pluggable windowing mode."""
+    """Log-structured Coconut index with pluggable windowing mode.
+
+    Thread model: all mutable state (buffer, run list, clock, counters) is
+    guarded by one lock; run *contents* are immutable once published, so a
+    snapshot only needs the lock long enough to copy the list head.  In
+    synchronous mode (default) everything happens on the calling thread
+    exactly as before; with ``concurrent=True`` a single compactor thread
+    owns flush/merge/commit and the calling thread only ever appends.
+    """
 
     def __init__(self, cfg: S.SummaryConfig, *,
                  buffer_capacity: int = 4096,
@@ -60,7 +90,10 @@ class CoconutLSM:
                  mode: str = "btp",
                  materialized: bool = True,
                  io: Optional[IOStats] = None,
-                 store=None):
+                 store=None,
+                 concurrent: bool = False,
+                 wal_fsync: str = "always",
+                 max_debt: int = 4):
         if mode not in ("pp", "tp", "btp"):
             raise ValueError(f"unknown windowing mode {mode!r}")
         if store is not None and store.exists():
@@ -83,18 +116,49 @@ class CoconutLSM:
         self._buf_count = 0
         self.clock = 0                     # logical insertion time
         self.merges = 0
+        # -- ingest subsystem state ----------------------------------------
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        # serializes WAL file I/O (append order == buffer order) without
+        # holding the engine lock across a disk fsync; ALWAYS acquired
+        # before the engine lock, never after (deadlock ordering)
+        self._wal_lock = threading.Lock()
+        self._flushing: List[_PendingFlush] = []
+        self._dirty = False                # runs changed since last commit
+        self._rows_inserted = 0            # total rows ever accepted
+        self._closed = False
+        self.concurrent = concurrent
+        self.max_debt = max_debt
+        self.ingest = IngestMetrics()
+        self.wal = None
+        if store is not None:
+            from ..ingest.wal import WriteAheadLog
+            self.wal = WriteAheadLog(store.root, fsync=wal_fsync,
+                                     io=self.io, metrics=self.ingest)
+            self._commit()   # empty manifest: the index is reopenable from
+            # birth, so a crash before the first flush still replays the WAL
+        self._compactor = None
+        if concurrent:
+            from ..ingest.compactor import Compactor
+            self._compactor = Compactor(self)
 
     # ------------------------------------------------------------ persistence
     @classmethod
-    def open(cls, store, *, io: Optional[IOStats] = None) -> "CoconutLSM":
+    def open(cls, store, *, io: Optional[IOStats] = None,
+             concurrent: bool = False,
+             wal_fsync: str = "always",
+             max_debt: int = 4) -> "CoconutLSM":
         """Reopen a persisted index from its manifest (restart/recovery).
 
         ``store`` is a ``SegmentStore`` or a directory path.  Runs the
         recovery protocol first (drops uncommitted manifest temps and
-        orphan segments), then rebuilds every run from its segment file;
-        searches on the reopened index are identical to the index that
-        committed the manifest.
+        orphan segments), rebuilds every run from its segment file, then
+        replays the write-ahead log from the manifest's ``wal_start`` so
+        every acknowledged insert — flushed or still buffered at crash
+        time — is recovered.  Searches on the reopened index are identical
+        to the index that committed the manifest plus the replayed tail.
         """
+        from ..ingest.wal import WriteAheadLog
         from ..storage.store import SegmentStore
         if isinstance(store, str):
             store = SegmentStore(store, io=io)
@@ -125,202 +189,436 @@ class CoconutLSM:
             lsm.runs.append(Run(tree=tree, level=entry["level"],
                                 t_min=entry["t_min"], t_max=entry["t_max"],
                                 segment=entry["file"]))
+        durable = sum(r.n for r in lsm.runs)
+        lsm._rows_inserted = durable
+        # -- WAL replay: recover the acked-but-uncommitted insert tail ------
+        wal_start = manifest.get("wal_start", durable)
+        tail = WriteAheadLog.replay(store.root, wal_start)
+        for raw, ts in tail:
+            if len(raw):
+                lsm.ingest.add("wal_replayed_rows", len(raw))
+                lsm.insert(raw, ts)        # may flush + commit, WAL-less
+        lsm.clock = max(lsm.clock, manifest["clock"])
+        # fresh WAL holding exactly the still-buffered tail; supersedes and
+        # deletes the replayed files
+        lsm.wal = WriteAheadLog(store.root, fsync=wal_fsync,
+                                io=lsm.io, metrics=lsm.ingest)
+        lsm._rotate_wal()
+        if concurrent:
+            from ..ingest.compactor import Compactor
+            lsm.concurrent = True
+            lsm.max_debt = max_debt
+            lsm._compactor = Compactor(lsm)
         return lsm
 
+    def _rotate_wal(self) -> None:
+        """Supersede the WAL with one record per still-buffered batch.
+        Called with the manifest already committed.  Takes the WAL lock
+        first (same ordering as ``insert``) so no append can race the file
+        swap, then the engine lock only to capture the buffered tail."""
+        if self.wal is None:
+            return
+        with self._wal_lock:
+            with self._lock:             # reference capture only
+                durable = sum(r.n for r in self.runs)
+                parts = []
+                for e in self._flushing:
+                    parts.extend(zip(e.raw_parts, e.ts_parts))
+                parts.extend(zip(self._buf_raw, self._buf_ts))
+            tail = []
+            row = durable
+            for raw, ts in parts:
+                tail.append((row, raw, ts))
+                row += len(raw)
+            # file I/O outside the engine lock; _wal_lock keeps appends out
+            self.wal.rotate(tail)
+
     def _commit(self) -> None:
-        """Atomically publish the current run set, then GC retired files.
+        """Atomically publish the current run set, then GC retired files
+        and rotate the WAL down to the still-buffered tail.
 
         Segments are written HERE, after compaction settles, so a flush
         that cascades through several merge levels persists only the runs
         that survive — transient intermediate runs never hit disk.
         """
+        with self._lock:
+            self._dirty = False
+            runs = list(self.runs)
         if self.store is None:
             return
         from ..storage.store import SegmentStore
-        for r in self.runs:
+        for r in runs:
             if r.segment is None:
                 r.segment = self.store.write_tree(r.tree)
         manifest = SegmentStore.manifest_for(
             self.cfg,
             [{"file": r.segment, "level": r.level,
-              "t_min": r.t_min, "t_max": r.t_max} for r in self.runs],
+              "t_min": r.t_min, "t_max": r.t_max} for r in runs],
             clock=self.clock, mode=self.mode,
             buffer_capacity=self.buffer_capacity,
             leaf_size=self.leaf_size, size_ratio=self.size_ratio,
-            materialized=self.materialized, merges=self.merges)
+            materialized=self.materialized, merges=self.merges,
+            wal_start=sum(r.n for r in runs))
         self.store.commit_manifest(manifest)
         self.store.gc()
+        self.ingest.add("commits")
+        self._rotate_wal()
 
     # ------------------------------------------------------------------ write
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("CoconutLSM is closed")
+
     def insert(self, raw: np.ndarray,
                timestamps: Optional[np.ndarray] = None) -> None:
-        """Insert a batch of series ``[n, L]`` (buffered; may trigger flush)."""
+        """Insert a batch of series ``[n, L]``.
+
+        Synchronous mode: buffered, may trigger an inline flush + merge
+        cascade.  Concurrent mode: logged to the WAL and buffered, then the
+        compactor is signalled; the call blocks only when compaction debt
+        exceeds ``max_debt`` (backpressure).  On return the batch is acked:
+        with a store and ``wal_fsync="always"`` it survives a crash.
+        """
+        self._check_open()
+        if self._compactor is not None:
+            self._compactor.check()
         raw = np.asarray(raw, np.float32)
         n = raw.shape[0]
-        if timestamps is None:
-            timestamps = np.arange(self.clock, self.clock + n, dtype=np.int64)
-        self.clock = int(timestamps.max()) + 1
-        self._buf_raw.append(raw)
-        self._buf_ts.append(np.asarray(timestamps, np.int64))
-        self._buf_count += n
-        while self._buf_count >= self.buffer_capacity:
-            self._flush()
+        with self._wal_lock:           # fixes WAL record order == FIFO order
+            with self._cv:
+                if timestamps is None:
+                    timestamps = np.arange(self.clock, self.clock + n,
+                                           dtype=np.int64)
+                else:
+                    timestamps = np.asarray(timestamps, np.int64)
+                self.clock = int(timestamps.max()) + 1
+                start_row = self._rows_inserted
+                self._rows_inserted += n
+                self._buf_raw.append(raw)
+                self._buf_ts.append(timestamps)
+                self._buf_count += n
+                self.ingest.add("rows_ingested", n)
+                self.ingest.set_gauge("ingest_lag_rows", self._lag_locked())
+                if self.concurrent:
+                    self._cv.notify_all()
+            # the disk write + fsync happens OUTSIDE the engine lock, so
+            # snapshots and the compactor never wait on an insert's sync.
+            # (If a flush commits these rows before the record lands, the
+            # manifest's wal_start simply skips it at replay.)
+            if self.wal is not None:
+                self.wal.append(raw, timestamps, start_row)
+        if self.concurrent:
+            with self._cv:             # bounded-debt backpressure
+                throttled = False
+                while (self._debt_locked() > self.max_debt
+                       and self._compactor.error is None
+                       and self._compactor.alive):
+                    if not throttled:
+                        self.ingest.add("backpressure_waits")
+                        throttled = True
+                    self._cv.wait(timeout=0.5)
+            self._compactor.check()
+        else:
+            while self._buf_count >= self.buffer_capacity:
+                self._flush()
 
     def flush(self) -> None:
-        """Force-flush the in-memory buffer (e.g. before a snapshot)."""
+        """Force-flush the in-memory buffer (e.g. before a snapshot).
+
+        In concurrent mode this drains the compactor: on return every
+        buffered row is flushed, the leveling policy is settled, and the
+        manifest (if any) is committed.
+        """
+        self._check_open()
+        if self.concurrent:
+            self._compactor.drain(force=True)
+            return
         if self._buf_count:
             self._flush(force=True)
 
-    def _flush(self, force: bool = False) -> None:
-        raw = np.concatenate(self._buf_raw)
-        ts = np.concatenate(self._buf_ts)
-        take = len(raw) if force else self.buffer_capacity
-        head_raw, rest_raw = raw[:take], raw[take:]
-        head_ts, rest_ts = ts[:take], ts[take:]
-        self._buf_raw = [rest_raw] if len(rest_raw) else []
-        self._buf_ts = [rest_ts] if len(rest_ts) else []
-        self._buf_count = len(rest_raw)
+    def checkpoint(self) -> None:
+        """Request a durable manifest commit without stalling ingest.
+
+        Synchronous mode: equivalent to ``flush()`` (inline flush+commit).
+        Concurrent mode: marks the run set dirty and nudges the compactor,
+        which commits (and rotates the WAL) as soon as current debt
+        retires — the call returns immediately.  Acked inserts are already
+        WAL-durable either way; a checkpoint only bounds replay length.
+        """
+        self._check_open()
+        if not self.concurrent:
+            self.flush()
+            return
+        with self._cv:
+            if self.store is not None:
+                self._dirty = True
+            self._cv.notify_all()
+
+    # ------------------------------------------------- flush/merge primitives
+    def _take_head(self, force: bool = False) -> Optional[_PendingFlush]:
+        """Detach the buffer head for flushing.  The head moves to
+        ``_flushing`` so snapshots keep seeing it until the run publishes.
+        Only references (and boundary views) change hands under the lock;
+        the batch arrays are immutable once appended, so the expensive
+        concatenation happens later, outside it."""
+        with self._lock:
+            if self._buf_count == 0:
+                return None
+            if not force and self._buf_count < self.buffer_capacity:
+                return None
+            take = self._buf_count if force else self.buffer_capacity
+            head_raw, head_ts = [], []
+            rest_raw, rest_ts = [], []
+            got = 0
+            for raw, ts in zip(self._buf_raw, self._buf_ts):
+                need = take - got
+                if need <= 0:
+                    rest_raw.append(raw)
+                    rest_ts.append(ts)
+                elif len(raw) <= need:
+                    head_raw.append(raw)
+                    head_ts.append(ts)
+                    got += len(raw)
+                else:                    # FIFO split inside one batch
+                    head_raw.append(raw[:need])
+                    head_ts.append(ts[:need])
+                    rest_raw.append(raw[need:])
+                    rest_ts.append(ts[need:])
+                    got = take
+            self._buf_raw, self._buf_ts = rest_raw, rest_ts
+            self._buf_count -= got
+            entry = _PendingFlush(head_raw, head_ts, got)
+            self._flushing.append(entry)
+            return entry
+
+    def _build_run(self, entry: _PendingFlush) -> Run:
+        head_raw = np.concatenate(entry.raw_parts)
+        head_ts = np.concatenate(entry.ts_parts)
         tree = T.build(jnp.asarray(head_raw), self.cfg,
                        leaf_size=self.leaf_size,
                        materialized=self.materialized,
                        timestamps=jnp.asarray(head_ts),
                        io=self.io)
-        self.runs.insert(0, Run(tree=tree, level=0,
-                                t_min=int(head_ts.min()),
-                                t_max=int(head_ts.max())))
-        if self.mode != "tp":
-            self._compact()
-        self._commit()      # one atomic manifest commit per flush
+        return Run(tree=tree, level=0,
+                   t_min=int(head_ts.min()), t_max=int(head_ts.max()))
 
-    def _compact(self) -> None:
-        """Ratio-2 leveling: merge pairs of same-level runs until unique.
+    def _publish_run(self, entry, run: Run) -> None:
+        """Atomically swap the flushed head out of the buffer view and the
+        new run into the list — a snapshot sees the rows exactly once."""
+        with self._cv:
+            self._flushing = [e for e in self._flushing if e is not entry]
+            self.runs.insert(0, run)
+            self._dirty = True
+            self._cv.notify_all()
+
+    def _merge_plan_locked(self) -> Optional[Tuple[Run, Run]]:
+        """Next pair to merge under the leveling policy, or None.
         In ``pp`` mode, merge *everything* into one run (full index)."""
         if self.mode == "pp":
-            while len(self.runs) > 1:
-                self._merge_pair(len(self.runs) - 2, len(self.runs) - 1)
-            return
-        changed = True
-        while changed:
-            changed = False
-            by_level = {}
-            for i, run in enumerate(self.runs):
-                by_level.setdefault(run.level, []).append(i)
-            for level, idxs in sorted(by_level.items()):
-                if len(idxs) >= self.size_ratio:
-                    self._merge_pair(idxs[0], idxs[1])
-                    changed = True
-                    break
+            if len(self.runs) > 1:
+                return self.runs[-2], self.runs[-1]
+            return None
+        by_level: dict = {}
+        for r in self.runs:
+            by_level.setdefault(r.level, []).append(r)
+        for _, rs in sorted(by_level.items()):
+            if len(rs) >= self.size_ratio:
+                return rs[0], rs[1]
+        return None
 
-    def _merge_pair(self, i: int, j: int) -> None:
-        a, b = self.runs[i], self.runs[j]
-        merged = T.merge_trees(a.tree, b.tree, io=self.io)
-        self.merges += 1
+    def _merge_plan(self) -> Optional[Tuple[Run, Run]]:
+        with self._lock:
+            return self._merge_plan_locked()
+
+    def _apply_merge(self, a: Run, b: Run, merged: T.CoconutTree) -> None:
+        """Swap runs ``a`` and ``b`` for their merge, keeping newest-first
+        ordering by t_max.  The list is rebuilt and swapped in one step."""
         new = Run(tree=merged, level=max(a.level, b.level) + 1,
                   t_min=min(a.t_min, b.t_min), t_max=max(a.t_max, b.t_max))
-        for k in sorted((i, j), reverse=True):
-            del self.runs[k]
-        # keep newest-first ordering by t_max
-        pos = 0
-        while pos < len(self.runs) and self.runs[pos].t_max > new.t_max:
-            pos += 1
-        self.runs.insert(pos, new)
+        with self._cv:
+            runs = [r for r in self.runs if r is not a and r is not b]
+            pos = 0
+            while pos < len(runs) and runs[pos].t_max > new.t_max:
+                pos += 1
+            runs.insert(pos, new)
+            self.runs = runs
+            self.merges += 1
+            self._dirty = True
+            self._cv.notify_all()
+
+    def _flush(self, force: bool = False) -> None:
+        """Synchronous flush: build + publish + full merge cascade + one
+        atomic manifest commit (the pre-concurrency inline path)."""
+        entry = self._take_head(force)
+        if entry is None:
+            return
+        self._publish_run(entry, self._build_run(entry))
+        if self.mode != "tp":
+            while (plan := self._merge_plan()) is not None:
+                a, b = plan
+                self._apply_merge(a, b,
+                                  T.merge_trees(a.tree, b.tree, io=self.io))
+        self._commit()      # one atomic manifest commit per flush
+
+    # ------------------------------------------------ background-worker hooks
+    def _bg_work_pending(self, force: bool) -> bool:
+        """One unit of compaction debt outstanding?  (Engine lock held.)"""
+        if self._buf_count >= self.buffer_capacity:
+            return True
+        if force and self._buf_count:
+            return True
+        if self._flushing:
+            return True
+        if self.mode != "tp" and self._merge_plan_locked() is not None:
+            return True
+        return self._dirty
+
+    def _bg_step(self, force: bool = False) -> bool:
+        """Retire one unit of debt: flush > merge > commit.  Expensive work
+        (tree build, merge) runs outside the lock; only the buffer-head
+        detach, the run-list swap, and the WAL rotation take it."""
+        entry = self._take_head(force)
+        if entry is not None:
+            self._publish_run(entry, self._build_run(entry))
+            self.ingest.add("bg_flushes")
+            self._update_gauges()
+            return True
+        if self.mode != "tp":
+            plan = self._merge_plan()
+            if plan is not None:
+                a, b = plan
+                self._apply_merge(a, b,
+                                  T.merge_trees(a.tree, b.tree, io=self.io))
+                self.ingest.add("bg_merges")
+                self._update_gauges()
+                return True
+        if self._dirty:
+            self._commit()
+            self._update_gauges()
+            return True
+        return False
+
+    # ----------------------------------------------------------- backpressure
+    def _lag_locked(self) -> int:
+        return self._buf_count + sum(e.n for e in self._flushing)
+
+    def _debt_locked(self) -> int:
+        debt = (self._buf_count // self.buffer_capacity
+                + len(self._flushing))
+        if self.mode == "pp":
+            debt += max(0, len(self.runs) - 1)
+        elif self.mode == "btp":
+            by_level: dict = {}
+            for r in self.runs:
+                by_level[r.level] = by_level.get(r.level, 0) + 1
+            debt += sum(c // self.size_ratio for c in by_level.values())
+        return debt
+
+    def compaction_debt(self) -> int:
+        """Outstanding flush+merge units (bounds ``insert`` backpressure)."""
+        with self._lock:
+            return self._debt_locked()
+
+    def ingest_lag(self) -> int:
+        """Rows acknowledged but not yet part of a published run."""
+        with self._lock:
+            return self._lag_locked()
+
+    def _update_gauges(self) -> None:
+        with self._lock:
+            self.ingest.set_gauge("ingest_lag_rows", self._lag_locked())
+            self.ingest.set_gauge("compaction_debt", self._debt_locked())
+
+    # --------------------------------------------------------------- lifetime
+    def close(self) -> None:
+        """Deterministic shutdown: drain + stop the compactor thread and
+        close the WAL handle.  Idempotent.  Rows still buffered without a
+        store are dropped (in-memory engines are volatile by contract);
+        with a store they remain in the WAL and replay on reopen."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if self._compactor is not None:
+                self._compactor.stop(drain=True)
+        finally:
+            if self.wal is not None:
+                self.wal.close()
+
+    def __enter__(self) -> "CoconutLSM":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------------------------- read
     @property
     def n(self) -> int:
-        return sum(r.n for r in self.runs) + self._buf_count
+        with self._lock:
+            return (sum(r.n for r in self.runs) + self._buf_count
+                    + sum(e.n for e in self._flushing))
 
-    def _qualifying_runs(self, window: Optional[int]) -> List[Run]:
-        """Runs a query must touch.  BTP/TP skip runs older than the window;
-        PP must touch its single full run regardless (paper Sec. 5)."""
-        if window is None or self.mode == "pp":
-            return list(self.runs)
-        t_lo = self.clock - window
-        return [r for r in self.runs if r.t_max >= t_lo]
+    def snapshot(self, *, include_buffer: Optional[bool] = None):
+        """Immutable point-in-time read view (see
+        :class:`repro.ingest.snapshot.Snapshot`).
+
+        ``include_buffer`` defaults to the engine's concurrency mode: the
+        synchronous engine reproduces its historical contract (unflushed
+        rows invisible until ``flush()``), the concurrent engine folds a
+        frozen copy of the buffer in so answers never depend on how far
+        the background compactor has gotten.
+        """
+        from ..ingest.snapshot import FrozenBuffer, Snapshot
+        if include_buffer is None:
+            include_buffer = self.concurrent
+        parts = None
+        with self._lock:                 # reference capture only, no copy
+            runs = tuple(self.runs)
+            clock = self.clock
+            if include_buffer:
+                parts = []
+                for e in self._flushing:
+                    parts.extend(zip(e.raw_parts, e.ts_parts))
+                parts.extend(zip(self._buf_raw, self._buf_ts))
+        buf = None
+        if include_buffer:               # batch arrays are immutable —
+            if parts:                    # concatenate outside the lock
+                raw = np.concatenate([p[0] for p in parts])
+                ts = np.concatenate([p[1] for p in parts])
+            else:
+                raw = np.zeros((0, self.cfg.series_len), np.float32)
+                ts = np.zeros(0, np.int64)
+            buf = FrozenBuffer(raw=raw, ts=ts)
+        return Snapshot(runs=runs, clock=clock, mode=self.mode,
+                        io=self.io, buffer=buf)
 
     def search_approx(self, query: np.ndarray, *,
                       window: Optional[int] = None,
                       radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Approximate 1-NN over the qualifying runs (Algorithm 4 per run)."""
-        runs = self._qualifying_runs(window)
-        best = (np.inf, -1)
-        for r in runs:
-            d, off, _ = T.approx_search(r.tree, jnp.asarray(query),
-                                        radius_leaves=radius_leaves,
-                                        io=self.io)
-            if d < best[0]:
-                best = (d, off)
-        return best[0], best[1], {"partitions_touched": len(runs)}
+        """Approximate 1-NN over a consistent snapshot (Algorithm 4 per
+        run)."""
+        return self.snapshot().search_approx(
+            query, window=window, radius_leaves=radius_leaves)
 
     def search_exact(self, query: np.ndarray, *,
                      window: Optional[int] = None,
                      radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Exact 1-NN: SIMS per qualifying run with a carried bsf
-        (Algorithm 7), plus timestamp post-filtering in ``pp`` mode."""
-        runs = self._qualifying_runs(window)
-        ts_min = None
-        if window is not None:
-            ts_min = self.clock - window
-        bsf, bsf_off = np.inf, -1
-        touched = 0
-        cands = 0
-        for r in runs:
-            if window is not None and self.mode != "pp" \
-                    and r.t_min >= ts_min:
-                run_ts_min = None        # run entirely inside window
-            else:
-                run_ts_min = ts_min      # straddling run: post-filter
-            d, off, st = T.exact_search(
-                r.tree, jnp.asarray(query), radius_leaves=radius_leaves,
-                io=self.io, ts_min=run_ts_min,
-                bsf=bsf if np.isfinite(bsf) else None)
-            touched += 1
-            cands += st.candidates
-            if d < bsf:
-                bsf, bsf_off = d, off
-        return bsf, bsf_off, {"partitions_touched": touched,
-                              "candidates": cands}
-
-    # ------------------------------------------------------- batched queries
-    @staticmethod
-    def _merge_run_topk(cur_d: np.ndarray, cur_off: np.ndarray,
-                        new_d: np.ndarray, new_off: np.ndarray, k: int
-                        ) -> Tuple[np.ndarray, np.ndarray]:
-        """Merge two per-query ``[Q, k]`` pools.  No offset dedup: offsets
-        from different runs address different raw files.  Stable sort keeps
-        the earlier (newer-run) entry on ties, matching the strict
-        ``d < bsf`` rule of the single-query chain."""
-        d = np.concatenate([cur_d, new_d], axis=1)
-        off = np.concatenate([cur_off, new_off], axis=1)
-        sel = np.argsort(d, axis=1, kind="stable")[:, :k]
-        return (np.take_along_axis(d, sel, axis=1),
-                np.take_along_axis(off, sel, axis=1))
+        """Exact 1-NN over a consistent snapshot: SIMS per qualifying run
+        with a carried bsf (Algorithm 7), plus timestamp post-filtering in
+        ``pp`` mode."""
+        return self.snapshot().search_exact(
+            query, window=window, radius_leaves=radius_leaves)
 
     def search_approx_batch(self, queries: np.ndarray, *,
                             k: int = 1,
                             window: Optional[int] = None,
                             radius_leaves: int = 1
                             ) -> Tuple[np.ndarray, np.ndarray, dict]:
-        """Batched approximate k-NN: one probe per run serves all Q queries.
-
-        Returns (dists ``[Q, k]``, offsets ``[Q, k]``, info).  With k=1,
-        row qi equals ``search_approx(queries[qi])``.
-        """
-        queries = np.atleast_2d(np.asarray(queries, np.float32))
-        nq = queries.shape[0]
-        runs = self._qualifying_runs(window)
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_off = np.full((nq, k), -1, np.int64)
-        cands_pq = np.zeros(nq, np.int64)
-        for r in runs:
-            d, off, st = T.approx_search_batch(
-                r.tree, jnp.asarray(queries), k=k,
-                radius_leaves=radius_leaves, io=self.io)
-            cands_pq += st.candidates_per_query
-            best_d, best_off = self._merge_run_topk(best_d, best_off,
-                                                    d, off, k)
-        return best_d, best_off, {"partitions_touched": len(runs),
-                                  "candidates_per_query": cands_pq}
+        """Batched approximate k-NN: one probe per run serves all Q
+        queries.  With k=1, row qi equals ``search_approx(queries[qi])``."""
+        return self.snapshot().search_approx_batch(
+            queries, k=k, window=window, radius_leaves=radius_leaves)
 
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
@@ -328,53 +626,22 @@ class CoconutLSM:
                            radius_leaves: int = 1
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
-        for the whole batch (vs Q scans in the single-query loop), with the
-        per-query k-th-best bound carried run to run (Algorithm 7) and a
-        cross-run top-k merge.  With k=1, row qi equals
-        ``search_exact(queries[qi])``.
-        """
-        queries = np.atleast_2d(np.asarray(queries, np.float32))
-        nq = queries.shape[0]
-        runs = self._qualifying_runs(window)
-        ts_min = None
-        if window is not None:
-            ts_min = self.clock - window
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_off = np.full((nq, k), -1, np.int64)
-        touched = 0
-        cands = 0
-        cands_pq = np.zeros(nq, np.int64)
-        leaves_pq = np.zeros(nq, np.int64)
-        for r in runs:
-            if window is not None and self.mode != "pp" \
-                    and r.t_min >= ts_min:
-                run_ts_min = None        # run entirely inside window
-            else:
-                run_ts_min = ts_min      # straddling run: post-filter
-            d, off, st = T.exact_search_batch(
-                r.tree, jnp.asarray(queries), k=k,
-                radius_leaves=radius_leaves, io=self.io,
-                ts_min=run_ts_min, bsf=best_d[:, -1])
-            touched += 1
-            cands += st.candidates
-            cands_pq += st.candidates_per_query
-            leaves_pq += st.leaves_per_query
-            best_d, best_off = self._merge_run_topk(best_d, best_off,
-                                                    d, off, k)
-        return best_d, best_off, {"partitions_touched": touched,
-                                  "candidates": cands,
-                                  "candidates_per_query": cands_pq,
-                                  "leaves_per_query": leaves_pq}
+        for the whole batch, per-query bounds carried run to run, cross-run
+        top-k merge.  With k=1, row qi equals ``search_exact(queries[qi])``."""
+        return self.snapshot().search_exact_batch(
+            queries, k=k, window=window, radius_leaves=radius_leaves)
 
     # ------------------------------------------------------------ diagnostics
     def level_histogram(self) -> dict:
         hist = {}
-        for r in self.runs:
-            hist[r.level] = hist.get(r.level, 0) + 1
+        with self._lock:
+            for r in self.runs:
+                hist[r.level] = hist.get(r.level, 0) + 1
         return hist
 
     def check_invariants(self) -> None:
-        """Ratio-2 leveling invariant: at most one run per level (btp/pp)."""
+        """Ratio-2 leveling invariant: at most one run per level (btp/pp).
+        Only meaningful when compaction has settled (after ``flush()``)."""
         if self.mode == "tp":
             return
         hist = self.level_histogram()

@@ -10,45 +10,58 @@ validated numerically, and translate to bytes for the roofline.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import defaultdict
 from typing import Dict
 
 
 @dataclasses.dataclass
 class IOStats:
-    """Block-level accounting.  ``block_series``: entries per block (paper: B)."""
+    """Block-level accounting.  ``block_series``: entries per block (paper: B).
+
+    Counter updates are serialized by a lock: with background compaction the
+    flush/merge path and the query path charge the same ``IOStats`` from
+    different threads, and ``dict[k] += v`` is not atomic in CPython.
+    """
     block_series: int = 2000
     counters: Dict[str, int] = dataclasses.field(
         default_factory=lambda: defaultdict(int))
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def _add(self, key: str, v: int) -> None:
+        with self._lock:
+            self.counters[key] += v
 
     def seq_read(self, n_entries: int) -> None:
-        self.counters["seq_read_blocks"] += self._blocks(n_entries)
+        self._add("seq_read_blocks", self._blocks(n_entries))
 
     def seq_write(self, n_entries: int) -> None:
-        self.counters["seq_write_blocks"] += self._blocks(n_entries)
+        self._add("seq_write_blocks", self._blocks(n_entries))
 
     def rand_read(self, n_blocks: int = 1) -> None:
-        self.counters["rand_read_blocks"] += n_blocks
+        self._add("rand_read_blocks", n_blocks)
 
     def rand_write(self, n_blocks: int = 1) -> None:
-        self.counters["rand_write_blocks"] += n_blocks
+        self._add("rand_write_blocks", n_blocks)
 
     # -- real-byte accounting (the on-disk segment store charges these) -----
     def read_bytes(self, n: int) -> None:
         """Actual bytes read from persistent storage (mmap page touches)."""
-        self.counters["bytes_read"] += int(n)
+        self._add("bytes_read", int(n))
 
     def write_bytes(self, n: int) -> None:
         """Actual bytes written to persistent storage."""
-        self.counters["bytes_written"] += int(n)
+        self._add("bytes_written", int(n))
 
     def _blocks(self, n_entries: int) -> int:
         return max(1, -(-n_entries // self.block_series))
 
     @property
     def total_blocks(self) -> int:
-        return sum(v for k, v in self.counters.items()
-                   if k.endswith("_blocks"))
+        with self._lock:
+            return sum(v for k, v in self.counters.items()
+                       if k.endswith("_blocks"))
 
     @property
     def bytes_read(self) -> int:
@@ -70,16 +83,55 @@ class IOStats:
 
     def merged(self, other: "IOStats") -> "IOStats":
         out = IOStats(self.block_series)
-        for k, v in self.counters.items():
-            out.counters[k] += v
-        for k, v in other.counters.items():
-            out.counters[k] += v
+        with self._lock:
+            for k, v in self.counters.items():
+                out.counters[k] += v
+        with other._lock:
+            for k, v in other.counters.items():
+                out.counters[k] += v
         return out
 
     def as_dict(self) -> Dict[str, int]:
-        d = dict(self.counters)
-        d["total_blocks"] = self.total_blocks
+        with self._lock:
+            d = dict(self.counters)
+        d["total_blocks"] = sum(v for k, v in d.items()
+                                if k.endswith("_blocks"))
         return d
+
+
+class IngestMetrics:
+    """Thread-safe telemetry for the streaming-ingest subsystem.
+
+    Counters accumulate (WAL traffic, background flushes/merges, commits,
+    backpressure waits); gauges hold the latest observation (ingest lag in
+    buffered rows, outstanding compaction debt, live WAL bytes).  One
+    instance is shared by the insert path, the WAL, and the compactor
+    thread, so every update is serialized.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters: Dict[str, int] = defaultdict(int)
+        self.gauges: Dict[str, float] = {}
+
+    def add(self, name: str, v: int = 1) -> None:
+        with self._lock:
+            self.counters[name] += int(v)
+
+    def set_gauge(self, name: str, v: float) -> None:
+        with self._lock:
+            self.gauges[name] = v
+
+    def get(self, name: str) -> int:
+        with self._lock:
+            return self.counters[name]
+
+    def snapshot(self) -> Dict[str, float]:
+        """Consistent point-in-time view: counters + gauges in one dict."""
+        with self._lock:
+            out: Dict[str, float] = dict(self.counters)
+            out.update(self.gauges)
+        return out
 
 
 def fill_factor(leaf_sizes, capacity: int) -> float:

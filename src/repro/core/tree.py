@@ -228,11 +228,16 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
 
     # seed from the approximate probe, restricted to in-window entries —
     # an out-of-window seed would undercut the true window answer
-    d0_all, idx0 = _approx_candidates(tree, q, radius_leaves=radius_leaves)
+    _, idx0 = _approx_candidates(tree, q, radius_leaves=radius_leaves)
     if io is not None:
         io.rand_read(2 * radius_leaves)
-    d0_np = np.asarray(d0_all)
     idx0_np = np.asarray(idx0)
+    # canonical bits: recompute seed distances with the same eager kernel
+    # the verifier uses, so the distance returned for a row is identical
+    # whether it was seeded or verified — and therefore independent of how
+    # the data is partitioned into runs (the jitted probe may differ by an
+    # ulp from the eager kernel)
+    d0_np = np.asarray(S.euclidean_sq(q, tree.series(jnp.asarray(idx0_np))))
     d0_np = np.where(alive[idx0_np], d0_np, np.inf)
     seed_i = int(np.argmin(d0_np))
     best_d = float(d0_np[seed_i])
@@ -410,12 +415,19 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
         alive = np.ones(tree.n, bool)
 
     # -- seed pools from the batched approximate probe (in-window only) -----
-    d0, idx0 = _approx_candidates_batch(tree, queries,
-                                        radius_leaves=radius_leaves)
+    _, idx0 = _approx_candidates_batch(tree, queries,
+                                       radius_leaves=radius_leaves)
     if io is not None:
         io.rand_read(2 * radius_leaves * nq)
-    d0 = np.asarray(d0)
     idx0 = np.asarray(idx0)
+    # canonical bits (see exact_search): seed distances re-verified with
+    # the eager kernel's reduction (sum over the contiguous last axis) so
+    # returned values never depend on partitioning — one gather + one
+    # batched op for the whole seed pool, not a per-query loop
+    rows0 = tree.series(jnp.asarray(idx0.reshape(-1)))
+    rows0 = rows0.reshape(idx0.shape + rows0.shape[1:])       # [Q, C, L]
+    diff0 = rows0 - queries[:, None, :]
+    d0 = np.asarray(jnp.sum(diff0 * diff0, axis=-1), np.float32)
     offs_all = np.asarray(tree.offsets)
     d0 = np.where(alive[idx0], d0, np.inf)
     offs0 = np.where(alive[idx0], offs_all[idx0], -1)

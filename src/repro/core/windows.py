@@ -31,10 +31,24 @@ WINDOW_MODES = ("pp", "tp", "btp")
 def window_engine(mode: str, cfg: SummaryConfig, *,
                   buffer_capacity: int = 4096, leaf_size: int = 256,
                   materialized: bool = True,
-                  io: Optional[IOStats] = None) -> CoconutLSM:
-    """Build a window-query engine; ``mode`` in {"pp", "tp", "btp"}."""
+                  io: Optional[IOStats] = None,
+                  store=None,
+                  concurrent: bool = False,
+                  wal_fsync: str = "always",
+                  max_debt: int = 4) -> CoconutLSM:
+    """Build a window-query engine; ``mode`` in {"pp", "tp", "btp"}.
+
+    ``store``/``concurrent``/``wal_fsync``/``max_debt`` pass through to
+    :class:`CoconutLSM`: a store makes the engine durable (segments +
+    WAL), ``concurrent=True`` moves flushes and merges to the background
+    compactor so window queries run against immutable snapshots while
+    ingest continues.  Concurrent engines should be closed (or used as a
+    context manager) so the compactor thread shuts down deterministically.
+    """
     if mode not in WINDOW_MODES:
         raise ValueError(f"mode must be one of {WINDOW_MODES}, got {mode!r}")
     return CoconutLSM(cfg, buffer_capacity=buffer_capacity,
                       leaf_size=leaf_size, mode=mode,
-                      materialized=materialized, io=io)
+                      materialized=materialized, io=io, store=store,
+                      concurrent=concurrent, wal_fsync=wal_fsync,
+                      max_debt=max_debt)

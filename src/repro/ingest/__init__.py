@@ -1,0 +1,23 @@
+"""Streaming-ingestion subsystem: WAL durability, snapshot reads,
+background compaction.
+
+Three pieces close the gap between the paper's streaming claim and an
+engine that can actually serve while it ingests:
+
+  * :mod:`repro.ingest.wal`       — checksummed write-ahead log; acked
+    inserts survive a crash and replay on ``CoconutLSM.open``.
+  * :mod:`repro.ingest.snapshot`  — immutable read views (frozen run
+    list + frozen buffer); queries never block on, or observe, a
+    half-finished flush or merge.
+  * :mod:`repro.ingest.compactor` — worker thread retiring flush/merge
+    debt off the insert path, with bounded-debt backpressure.
+
+See docs/ARCHITECTURE.md ("Streaming ingestion") for the commit protocol
+and the concurrency invariants.
+"""
+from .compactor import Compactor
+from .snapshot import FrozenBuffer, Snapshot
+from .wal import FSYNC_POLICIES, WALCorruptionError, WriteAheadLog
+
+__all__ = ["Compactor", "FrozenBuffer", "Snapshot", "WriteAheadLog",
+           "WALCorruptionError", "FSYNC_POLICIES"]

@@ -1,0 +1,270 @@
+"""Immutable read views over a Coconut-LSM: search without stopping ingest.
+
+A :class:`Snapshot` captures, under the engine lock, (a) the run list as a
+tuple, (b) the logical clock, and (c) optionally a *frozen copy* of the
+insert buffer (including batches currently being flushed by the
+compactor).  Runs are immutable once published and the buffer copy is
+private, so every ``search_*`` below executes against a consistent,
+point-in-time view while flushes and merges swap the live run list
+underneath — readers never block writers and vice versa.
+
+Exactness is partition-independent: an exact query verifies true
+Euclidean distances over every qualifying row, so its answer *distances*
+are bit-identical whether a row sits in a level-3 run, a fresh level-0
+run, or the frozen buffer (the buffer is scanned brute-force with the
+same ``euclidean_sq`` kernels the SIMS verifier uses).  That is what lets
+the concurrent engine return the same answers as the synchronous one at
+every interleaving point.  Offsets keep their PR-1 semantics — they
+address the raw array of the component that produced them (buffer hits
+report the row's position in the frozen buffer).
+
+The single-query and batched entry points mirror
+``CoconutLSM.search_{approx,exact}[_batch]`` exactly; the synchronous
+engine now delegates here with ``buffer=None``, which reproduces its
+historical behavior (unflushed rows invisible until ``flush()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import summarization as S
+from ..core import tree as T
+from ..core.metrics import IOStats
+
+__all__ = ["Snapshot", "FrozenBuffer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenBuffer:
+    """Point-in-time copy of the not-yet-flushed insert tail."""
+    raw: np.ndarray                    # [M, L] float32, insertion order
+    ts: np.ndarray                     # [M] int64
+
+    @property
+    def n(self) -> int:
+        return len(self.raw)
+
+
+def _merge_run_topk(cur_d: np.ndarray, cur_off: np.ndarray,
+                    new_d: np.ndarray, new_off: np.ndarray, k: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge two per-query ``[Q, k]`` pools.  No offset dedup: offsets
+    from different runs address different raw files.  Stable sort keeps
+    the earlier (newer-component) entry on ties, matching the strict
+    ``d < bsf`` rule of the single-query chain."""
+    d = np.concatenate([cur_d, new_d], axis=1)
+    off = np.concatenate([cur_off, new_off], axis=1)
+    sel = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(d, sel, axis=1),
+            np.take_along_axis(off, sel, axis=1))
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Consistent read view: frozen run tuple + optional frozen buffer."""
+    runs: Tuple                        # Tuple[Run, ...], newest first
+    clock: int
+    mode: str                          # "pp" | "tp" | "btp"
+    io: Optional[IOStats] = None
+    buffer: Optional[FrozenBuffer] = None
+
+    @property
+    def n(self) -> int:
+        return (sum(r.n for r in self.runs)
+                + (self.buffer.n if self.buffer else 0))
+
+    # ------------------------------------------------------------- qualifying
+    def _qualifying_runs(self, window: Optional[int]) -> Sequence:
+        """Runs a query must touch.  BTP/TP skip runs older than the window;
+        PP must touch its single full run regardless (paper Sec. 5)."""
+        if window is None or self.mode == "pp":
+            return list(self.runs)
+        t_lo = self.clock - window
+        return [r for r in self.runs if r.t_max >= t_lo]
+
+    def _ts_min(self, window: Optional[int]) -> Optional[int]:
+        return None if window is None else self.clock - window
+
+    def _run_ts_min(self, r, window: Optional[int],
+                    ts_min: Optional[int]) -> Optional[int]:
+        if window is not None and self.mode != "pp" and r.t_min >= ts_min:
+            return None                  # run entirely inside window
+        return ts_min                    # straddling run: post-filter
+
+    # ---------------------------------------------------------- buffer scans
+    def _buffer_rows(self, ts_min: Optional[int]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """In-window buffer rows and their buffer-relative offsets."""
+        buf = self.buffer
+        if ts_min is None:
+            return buf.raw, np.arange(buf.n, dtype=np.int64)
+        keep = np.nonzero(buf.ts >= ts_min)[0]
+        return buf.raw[keep], keep.astype(np.int64)
+
+    def _buffer_best(self, query: np.ndarray, ts_min: Optional[int]
+                     ) -> Tuple[float, int, int]:
+        """(best_d, offset, rows_scanned) over the frozen buffer —
+        brute-force with the same kernel the SIMS verifier uses, so the
+        distance bits match a post-flush search of the same rows."""
+        rows, offs = self._buffer_rows(ts_min)
+        if len(rows) == 0:
+            return np.inf, -1, 0
+        if self.io is not None:
+            self.io.seq_read(len(rows))
+        d = np.asarray(S.euclidean_sq(jnp.asarray(query),
+                                      jnp.asarray(rows)))
+        i = int(np.argmin(d))
+        return float(d[i]), int(offs[i]), len(rows)
+
+    def _buffer_topk(self, queries: np.ndarray, k: int,
+                     ts_min: Optional[int]
+                     ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Per-query ``[Q, k]`` pools over the frozen buffer (brute force)."""
+        nq = queries.shape[0]
+        best_d = np.full((nq, k), np.inf, np.float32)
+        best_off = np.full((nq, k), -1, np.int64)
+        rows, offs = self._buffer_rows(ts_min)
+        if len(rows) == 0:
+            return best_d, best_off, 0
+        if self.io is not None:
+            self.io.seq_read(len(rows))
+        d = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
+                                            jnp.asarray(rows)))   # [Q, M]
+        sel = np.argsort(d, axis=1, kind="stable")[:, :k]
+        take = min(k, d.shape[1])
+        best_d[:, :take] = np.take_along_axis(d, sel, axis=1)[:, :take]
+        best_off[:, :take] = offs[sel][:, :take]
+        return best_d, best_off, len(rows)
+
+    # ----------------------------------------------------------- single query
+    def search_approx(self, query: np.ndarray, *,
+                      window: Optional[int] = None,
+                      radius_leaves: int = 1) -> Tuple[float, int, dict]:
+        """Approximate 1-NN over the qualifying runs (Algorithm 4 per run),
+        plus a brute-force pass over the frozen buffer when present."""
+        runs = self._qualifying_runs(window)
+        best = (np.inf, -1)
+        buf_rows = 0
+        if self.buffer is not None:
+            d, off, buf_rows = self._buffer_best(query,
+                                                 self._ts_min(window))
+            if d < best[0]:
+                best = (d, off)
+        for r in runs:
+            d, off, _ = T.approx_search(r.tree, jnp.asarray(query),
+                                        radius_leaves=radius_leaves,
+                                        io=self.io)
+            if d < best[0]:
+                best = (d, off)
+        return best[0], best[1], {"partitions_touched": len(runs),
+                                  "buffer_rows": buf_rows}
+
+    def search_exact(self, query: np.ndarray, *,
+                     window: Optional[int] = None,
+                     radius_leaves: int = 1) -> Tuple[float, int, dict]:
+        """Exact 1-NN: SIMS per qualifying run with a carried bsf
+        (Algorithm 7), plus timestamp post-filtering in ``pp`` mode.  The
+        frozen buffer is scanned first — it is the newest component, and
+        its exact distances seed the bound for every run scan."""
+        runs = self._qualifying_runs(window)
+        ts_min = self._ts_min(window)
+        bsf, bsf_off = np.inf, -1
+        touched = 0
+        cands = 0
+        buf_rows = 0
+        if self.buffer is not None:
+            bsf, bsf_off, buf_rows = self._buffer_best(query, ts_min)
+            cands += buf_rows
+        for r in runs:
+            run_ts_min = self._run_ts_min(r, window, ts_min)
+            d, off, st = T.exact_search(
+                r.tree, jnp.asarray(query), radius_leaves=radius_leaves,
+                io=self.io, ts_min=run_ts_min,
+                bsf=bsf if np.isfinite(bsf) else None)
+            touched += 1
+            cands += st.candidates
+            if d < bsf:
+                bsf, bsf_off = d, off
+        return bsf, bsf_off, {"partitions_touched": touched,
+                              "candidates": cands,
+                              "buffer_rows": buf_rows}
+
+    # -------------------------------------------------------- batched queries
+    def search_approx_batch(self, queries: np.ndarray, *,
+                            k: int = 1,
+                            window: Optional[int] = None,
+                            radius_leaves: int = 1
+                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Batched approximate k-NN: one probe per run serves all Q queries.
+
+        Returns (dists ``[Q, k]``, offsets ``[Q, k]``, info).  With k=1,
+        row qi equals ``search_approx(queries[qi])``.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = queries.shape[0]
+        runs = self._qualifying_runs(window)
+        best_d = np.full((nq, k), np.inf, np.float32)
+        best_off = np.full((nq, k), -1, np.int64)
+        cands_pq = np.zeros(nq, np.int64)
+        buf_rows = 0
+        if self.buffer is not None:
+            best_d, best_off, buf_rows = self._buffer_topk(
+                queries, k, self._ts_min(window))
+            cands_pq += buf_rows
+        for r in runs:
+            d, off, st = T.approx_search_batch(
+                r.tree, jnp.asarray(queries), k=k,
+                radius_leaves=radius_leaves, io=self.io)
+            cands_pq += st.candidates_per_query
+            best_d, best_off = _merge_run_topk(best_d, best_off, d, off, k)
+        return best_d, best_off, {"partitions_touched": len(runs),
+                                  "candidates_per_query": cands_pq,
+                                  "buffer_rows": buf_rows}
+
+    def search_exact_batch(self, queries: np.ndarray, *,
+                           k: int = 1,
+                           window: Optional[int] = None,
+                           radius_leaves: int = 1
+                           ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
+        for the whole batch (vs Q scans in the single-query loop), with the
+        per-query k-th-best bound carried run to run (Algorithm 7) and a
+        cross-run top-k merge.  With k=1, row qi equals
+        ``search_exact(queries[qi])``.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = queries.shape[0]
+        runs = self._qualifying_runs(window)
+        ts_min = self._ts_min(window)
+        best_d = np.full((nq, k), np.inf, np.float32)
+        best_off = np.full((nq, k), -1, np.int64)
+        touched = 0
+        cands = 0
+        cands_pq = np.zeros(nq, np.int64)
+        leaves_pq = np.zeros(nq, np.int64)
+        buf_rows = 0
+        if self.buffer is not None:
+            best_d, best_off, buf_rows = self._buffer_topk(queries, k,
+                                                           ts_min)
+            cands += buf_rows
+            cands_pq += buf_rows
+        for r in runs:
+            run_ts_min = self._run_ts_min(r, window, ts_min)
+            d, off, st = T.exact_search_batch(
+                r.tree, jnp.asarray(queries), k=k,
+                radius_leaves=radius_leaves, io=self.io,
+                ts_min=run_ts_min, bsf=best_d[:, -1])
+            touched += 1
+            cands += st.candidates
+            cands_pq += st.candidates_per_query
+            leaves_pq += st.leaves_per_query
+            best_d, best_off = _merge_run_topk(best_d, best_off, d, off, k)
+        return best_d, best_off, {"partitions_touched": touched,
+                                  "candidates": cands,
+                                  "candidates_per_query": cands_pq,
+                                  "leaves_per_query": leaves_pq,
+                                  "buffer_rows": buf_rows}

@@ -12,15 +12,23 @@ answered together through ``search_exact_batch`` — one amortized SIMS scan
 per run for the whole micro-batch instead of one scan per probe (the
 batched query engine on its serving path).
 
+With ``--concurrent`` the ingest path is decoupled from the probe path:
+inserts append to the WAL + buffer and the background compactor does
+flushes and merges off-thread, so probe micro-batches are answered against
+immutable snapshots (which include the not-yet-flushed buffer) instead of
+forcing a flush first — no full-merge stall ever sits in front of a probe.
+The run reports ingest throughput, ingest lag, and p50/p99 probe latency
+so the two policies can be compared directly.
+
 With ``--data-dir`` the index is durable: an existing manifest is
 reopened (restartable serving — decode resumes against everything a
-previous process committed), otherwise a fresh store is created there.
-Every flush commits the manifest — including the flush that precedes
-each probe micro-batch — and ``--checkpoint-every`` adds step-aligned
-flushes on top, tightening durability between probe batches.
+previous process committed, plus the WAL-replayed insert tail), otherwise
+a fresh store is created there.  Every flush commits the manifest and
+``--checkpoint-every`` adds step-aligned flushes on top; the WAL makes
+every acked insert crash-safe between commits.
 
 Usage: PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-           --steps 32 --batch 4 --probe-batch 8 \
+           --steps 32 --batch 4 --probe-batch 8 --concurrent \
            --data-dir /tmp/coconut-serve --checkpoint-every 16
 """
 from __future__ import annotations
@@ -36,8 +44,13 @@ from ..configs import ARCHS, get
 from ..core import SummaryConfig
 from ..core.lsm import CoconutLSM
 from ..core.summarization import znormalize
+from ..ingest.wal import FSYNC_POLICIES
 from ..models.steps import make_prefill_step, make_serve_step, pad_cache
 from ..models.transformer import make_model
+
+
+def _pctl(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
 
 
 def main(argv=None) -> None:
@@ -51,15 +64,25 @@ def main(argv=None) -> None:
                     help="micro-batch size for kNN probes (answered "
                          "together via search_exact_batch)")
     ap.add_argument("--knn-k", type=int, default=1)
+    ap.add_argument("--concurrent", action="store_true",
+                    help="background compaction: inserts never flush "
+                         "inline, probes run against snapshots that "
+                         "include the unflushed buffer")
+    ap.add_argument("--wal-fsync", choices=FSYNC_POLICIES,
+                    default="commit",
+                    help="WAL fsync policy when --data-dir is set "
+                         "(default: commit — fsync at manifest commits)")
+    ap.add_argument("--max-debt", type=int, default=4,
+                    help="backpressure threshold: insert blocks once this "
+                         "many flush/merge units are outstanding")
     ap.add_argument("--data-dir", default=None,
                     help="persist the index here: reopen if a manifest "
                          "exists, else create a new segment store")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="extra flush + manifest commit every N decode "
-                         "steps; the flush before each probe micro-batch "
-                         "also commits when --data-dir is set, so this "
-                         "only tightens durability between probe batches "
-                         "(0 = no extra checkpoints)")
+                         "steps; the WAL already covers acked inserts "
+                         "between commits, so this only bounds replay "
+                         "length (0 = no extra checkpoints)")
     args = ap.parse_args(argv)
 
     cfg = get(args.arch, smoke=True)
@@ -86,30 +109,38 @@ def main(argv=None) -> None:
         from ..storage import SegmentStore
         store = SegmentStore(args.data_dir)
     if store is not None and store.exists():
-        index = CoconutLSM.open(store)
+        index = CoconutLSM.open(store, concurrent=args.concurrent,
+                                wal_fsync=args.wal_fsync,
+                                max_debt=args.max_debt)
         print(f"reopened {store.describe()}: {index.n} entries in "
               f"{len(index.runs)} runs (clock={index.clock})")
     else:
         index = CoconutLSM(icfg, buffer_capacity=64, leaf_size=32,
-                           mode="btp", store=store)
+                           mode="btp", store=store,
+                           concurrent=args.concurrent,
+                           wal_fsync=args.wal_fsync,
+                           max_debt=args.max_debt)
 
     base = T + (cfg.frontend_tokens
                 if cfg.frontend != "none" and not cfg.is_encdec else 0)
 
     def answer_probes(batch):
-        """Flush the index and answer one probe micro-batch together."""
-        index.flush()
+        """Answer one probe micro-batch.  Synchronous engines flush first
+        (their searches only see runs); concurrent snapshots already cover
+        the buffer, so the probe never waits on compaction."""
+        if not args.concurrent:
+            index.flush()
         t0 = time.perf_counter()
         d, off, st = index.search_exact_batch(
             np.stack(batch), k=args.knn_k, window=args.knn_window)
         return d, st, time.perf_counter() - t0
 
     pending = []            # accumulated kNN probes (micro-batching)
-    probe_time = 0.0
+    probe_lat = []          # seconds per micro-batch
     probes_answered = 0
-    batches_answered = 0
     last_d = float("nan")
     st = {"partitions_touched": 0}
+    rows_ingested = 0
     t0 = time.perf_counter()
     for s in range(args.steps):
         logits, cache = serve(params, cache, tokens, jnp.int32(base + s))
@@ -117,35 +148,50 @@ def main(argv=None) -> None:
         h = np.asarray(znormalize(
             logits[:, -1, :64].astype(jnp.float32)), np.float32)
         index.insert(h)
+        rows_ingested += len(h)
         pending.append(h[0])          # one probe per step (sequence 0)
         if store is not None and args.checkpoint_every \
                 and (s + 1) % args.checkpoint_every == 0:
-            index.flush()             # periodic durable checkpoint
+            # periodic durable checkpoint: inline flush+commit for the
+            # synchronous engine, a non-blocking commit request for the
+            # concurrent one (no drain stall in the decode loop)
+            index.checkpoint()
         if len(pending) >= args.probe_batch:
             d, st, dt_p = answer_probes(pending)
-            probe_time += dt_p
+            probe_lat.append(dt_p)
             probes_answered += len(pending)
-            batches_answered += 1
             last_d = float(d[-1, 0])
             pending = []
     dt = time.perf_counter() - t0
     if pending:                       # leftover partial micro-batch
         d, st, dt_p = answer_probes(pending)
-        probe_time += dt_p
+        probe_lat.append(dt_p)
         probes_answered += len(pending)
-        batches_answered += 1
         last_d = float(d[-1, 0])
+    lag_at_end = index.ingest_lag()
     if store is not None:
         index.flush()                 # final checkpoint: commit manifest
         print(f"checkpointed {store.describe()}")
-    qps = probes_answered / max(probe_time, 1e-9)
-    print(f"arch={args.arch}: {args.steps} steps x {B} seqs in "
+    im = index.ingest.snapshot()
+    index.close()
+    qps = probes_answered / max(sum(probe_lat), 1e-9)
+    mode = "concurrent" if args.concurrent else "inline"
+    print(f"arch={args.arch} [{mode}]: {args.steps} steps x {B} seqs in "
           f"{dt*1e3:.0f} ms ({args.steps*B/dt:.1f} tok/s); "
           f"index={index.n} entries/{len(index.runs)} runs; "
           f"kNN(window={args.knn_window},k={args.knn_k}) "
-          f"{probes_answered} probes in {batches_answered} micro-batches "
+          f"{probes_answered} probes in {len(probe_lat)} micro-batches "
           f"of {args.probe_batch} ({qps:.1f} probes/s) last_d={last_d:.4f} "
           f"partitions={st['partitions_touched']}")
+    lat = (f"p50={_pctl(probe_lat, 50)*1e3:.1f} ms "
+           f"p99={_pctl(probe_lat, 99)*1e3:.1f} ms "
+           f"max={max(probe_lat)*1e3:.1f} ms" if probe_lat else "n/a")
+    print(f"ingest: {rows_ingested} series at "
+          f"{rows_ingested/dt:.1f} series/s, lag={lag_at_end} rows at "
+          f"loop end, bg_flushes={im.get('bg_flushes', 0)} "
+          f"bg_merges={im.get('bg_merges', 0)} "
+          f"backpressure_waits={im.get('backpressure_waits', 0)} "
+          f"wal_bytes={im.get('wal_bytes', 0)}; probe latency {lat}")
 
 
 if __name__ == "__main__":

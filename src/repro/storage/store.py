@@ -11,9 +11,14 @@ commit protocol:
 ``os.replace`` is atomic on POSIX, so the manifest always names a
 consistent set of finalized segments: a crash *anywhere* leaves either the
 old or the new manifest, plus possibly some orphan files that
-:meth:`SegmentStore.recover` removes on the next open.  Losing the
-in-memory write buffer on crash is the standard no-WAL LSM contract —
-durability is up to the last committed flush.
+:meth:`SegmentStore.recover` removes on the next open.  The in-memory
+write buffer is covered separately by the write-ahead log
+(:mod:`repro.ingest.wal`): ``wal-NNNNNN.log`` files live beside the
+segments, the manifest's ``wal_start`` marks how much of the insert
+stream the committed runs already contain, and the WAL is rotated down to
+the still-buffered tail right after each manifest commit.  Recovery and
+GC here deliberately leave ``wal-*`` files alone — they belong to the
+log's own rotation protocol.
 """
 from __future__ import annotations
 
@@ -164,7 +169,27 @@ class SegmentStore:
                 removed.append(f)
         return removed
 
+    # --------------------------------------------------------------- lifetime
+    def close(self) -> None:
+        """Release the store.  Segments are opened per-operation and WAL
+        handles are owned by the engine, so today this only marks the
+        store closed for symmetry with ``CoconutLSM.close`` — examples and
+        tests can rely on ``with SegmentStore(...) as store:`` shutting
+        everything down deterministically."""
+
+    def __enter__(self) -> "SegmentStore":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # ------------------------------------------------------------ diagnostics
+    def wal_bytes(self) -> int:
+        """On-disk write-ahead-log footprint beside the segments."""
+        from ..ingest.wal import WriteAheadLog
+        return WriteAheadLog.wal_bytes(self.root)
+
     def total_bytes(self) -> int:
         return sum(os.path.getsize(os.path.join(self.root, f))
                    for f in self.segment_files())
@@ -174,4 +199,5 @@ class SegmentStore:
         nruns = len(m["runs"]) if m else 0
         return (f"SegmentStore({self.root}: {len(self.segment_files())} "
                 f"segments, {nruns} live runs, "
-                f"{self.total_bytes() / 1e6:.2f} MB)")
+                f"{self.total_bytes() / 1e6:.2f} MB, "
+                f"WAL {self.wal_bytes() / 1e3:.1f} kB)")

@@ -1,0 +1,58 @@
+"""Shared test config: per-test timeouts so a deadlocked compactor fails
+CI fast instead of hanging the job.
+
+When ``pytest-timeout`` is installed it owns the ``timeout`` ini option /
+marker and this file stays out of the way (the ini default then caps
+every test).  When it is not (the baked container image has no network),
+a faulthandler-based fallback enforces ONLY explicit ``@pytest.mark.
+timeout(N)`` markers — i.e. the concurrency tests, which are the ones
+that can genuinely deadlock: ``faulthandler.dump_traceback_later``
+prints every thread's stack — exactly what you need from a deadlock —
+and hard-exits the process.  The hard exit is deliberate for a stuck
+lock (it cannot be unwound politely from a signal handler), which is
+also why the fallback does NOT apply the blanket ini cap: a merely-slow
+jit compile on a weak host must not kill the whole suite.
+"""
+from __future__ import annotations
+
+import faulthandler
+
+import pytest
+
+try:
+    import pytest_timeout  # noqa: F401
+    HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    HAVE_PYTEST_TIMEOUT = False
+
+
+def pytest_addoption(parser):
+    if not HAVE_PYTEST_TIMEOUT:
+        parser.addini("timeout",
+                      "per-test timeout in seconds (fallback enforcement "
+                      "via faulthandler when pytest-timeout is absent)",
+                      default="0")
+
+
+def _test_timeout(item) -> float:
+    """Explicit marker timeouts only — the blanket ini cap is left to the
+    real pytest-timeout plugin, which fails a single test instead of
+    exiting the process."""
+    marker = item.get_closest_marker("timeout")
+    if marker is not None and marker.args:
+        return float(marker.args[0])
+    return 0.0
+
+
+if not HAVE_PYTEST_TIMEOUT:
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_protocol(item, nextitem):
+        timeout = _test_timeout(item)
+        if timeout > 0:
+            faulthandler.dump_traceback_later(timeout, exit=True)
+        try:
+            yield
+        finally:
+            if timeout > 0:
+                faulthandler.cancel_dump_traceback_later()

@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                                   cold-vs-warm mmap query latency
   streaming      Sec. 4.4/5       query + insert latency under sustained
                                   ingest, inline vs background compaction
+  sharded_streaming  Sec. 7       ingest + probe scaling vs shard count,
+                                  shard-prune rate, verified/query
   roofline       (assignment)     arch x shape terms from the dry-run
 """
 import sys
@@ -21,14 +23,16 @@ import sys
 
 def main() -> None:
     from . import (construction, distributed_bench, insertions,
-                   kernels_bench, query, roofline, segments, space,
-                   storage, streaming, windows, workload)
+                   kernels_bench, query, roofline, segments,
+                   sharded_streaming, space, storage, streaming, windows,
+                   workload)
     mods = {
         "construction": construction, "space": space,
         "segments": segments, "query": query, "insertions": insertions,
         "windows": windows, "workload": workload,
         "kernels": kernels_bench, "distributed": distributed_bench,
-        "storage": storage, "streaming": streaming, "roofline": roofline,
+        "storage": storage, "streaming": streaming,
+        "sharded_streaming": sharded_streaming, "roofline": roofline,
     }
     only = sys.argv[1:] or list(mods)
     print("name,us_per_call,derived")

@@ -1,0 +1,80 @@
+"""Sharded streaming engine: ingest + probe scaling vs shard count.
+
+The acceptance experiment for the key-range-partitioned serving layer:
+drive the same insert stream + probe workload through
+``ShardedCoconutLSM`` at shard counts 1/2/4/8 (background compaction,
+shared backpressure budget) and report, per shard count:
+
+  * ingest        — end-to-end series/s for the whole stream (routing
+    + per-shard WAL-less inserts + parallel compactors);
+  * probe p50/p99 — exact-batch latency against live snapshots;
+  * shard-prune rate — fraction of (probe-batch, shard) pairs skipped
+    whole by the key-fence mindist bound + bsf chain;
+  * verified/query — exact-search verified candidates per query, which
+    must NOT grow with shard count (the bsf from the most promising
+    shard seeds every other shard's scan).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.distributed.sharded_lsm import ShardedCoconutLSM
+
+from .common import cfg_for, dataset, emit
+
+
+def bench_sharded(n: int = 24000, batch: int = 256,
+                  buffer_capacity: int = 2048,
+                  probe_every: int = 8, nq: int = 8,
+                  mode: str = "btp") -> None:
+    cfg = cfg_for()
+    raw = np.asarray(dataset(n))
+    queries = raw[np.linspace(0, n - 1, nq, dtype=int)] \
+        + np.float32(0.01)
+
+    for shards in (1, 2, 4, 8):
+        engine = ShardedCoconutLSM(cfg, shards=shards,
+                                   buffer_capacity=buffer_capacity,
+                                   leaf_size=64, mode=mode,
+                                   concurrent=True, max_debt=4)
+        probe_lat = []
+        touched = pruned = 0
+        cands = 0
+        probes = 0
+        t0 = time.perf_counter()
+        for i, s in enumerate(range(0, n, batch)):
+            engine.insert(raw[s: s + batch])
+            if (i + 1) % probe_every == 0:
+                t1 = time.perf_counter()
+                _, _, info = engine.search_exact_batch(queries, k=1)
+                probe_lat.append(time.perf_counter() - t1)
+                touched += info["shards_touched"]
+                pruned += info["shards_pruned"]
+                cands += int(info["candidates_per_query"].sum())
+                probes += nq
+        engine.flush()
+        dt = time.perf_counter() - t0
+        engine.check_invariants()
+        assert engine.n == n
+        sizes = engine.shard_sizes()
+        engine.close()
+
+        lat = np.asarray(probe_lat) * 1e3
+        prune_rate = pruned / max(touched + pruned, 1)
+        emit(f"sharded_{mode}_s{shards}_ingest", dt / n * 1e6,
+             f"{n / dt:.0f} series/s, sizes={sizes}")
+        emit(f"sharded_{mode}_s{shards}_probe_p99",
+             float(np.percentile(lat, 99)),
+             f"p50={np.percentile(lat, 50):.1f}ms "
+             f"prune_rate={prune_rate:.2f} "
+             f"verified/query={cands / max(probes, 1):.0f}")
+
+
+def main() -> None:
+    bench_sharded()
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,8 @@ __all__ = [
     "interleave_codes",
     "deinterleave_key",
     "lexsort_keys",
+    "lexsort_keys_np",
+    "key_extremes_np",
     "key_less",
     "key_less_equal",
     "searchsorted_keys",
@@ -143,6 +145,30 @@ def searchsorted_keys(sorted_keys: jax.Array, query_keys: jax.Array,
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
     return lo
+
+
+def lexsort_keys_np(keys: np.ndarray) -> np.ndarray:
+    """Host-side twin of :func:`lexsort_keys`: the permutation sorting
+    ``[N, n_words]`` uint32 keys lexicographically (word 0 primary).
+    The one home for the reversed-column ``np.lexsort`` idiom — the
+    router, the sample-sort splitter rule, and tests all share it."""
+    keys = np.asarray(keys)
+    return np.lexsort(tuple(keys[:, k]
+                            for k in range(keys.shape[1] - 1, -1, -1)))
+
+
+def key_extremes_np(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Lexicographic (min_row, max_row) of ``[N, n_words]`` uint32 keys
+    in O(N * n_words) — no sort.  Successive word filtering: keep the
+    rows matching the extreme of each word in turn."""
+    keys = np.asarray(keys, np.uint32)
+    lo = hi = np.arange(len(keys))
+    for w in range(keys.shape[1]):
+        col = keys[lo, w]
+        lo = lo[col == col.min()]
+        col = keys[hi, w]
+        hi = hi[col == col.max()]
+    return keys[lo[0]], keys[hi[0]]
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,16 @@ backpressure), and every ``search_*``/``search_*_batch`` runs against an
 immutable :class:`repro.ingest.snapshot.Snapshot` — frozen run list plus a
 frozen copy of the buffer — so exact answers are bit-identical to the
 synchronous engine while compaction proceeds underneath.
+
+Every row carries a **global id** (by default its position in this
+engine's insert stream) that is WAL-logged, persisted per run, and
+reported as the answer "offset" by every search path.  The sharded
+serving layer (:mod:`repro.distributed.sharded_lsm`) builds on that plus
+a few hooks here: ``insert(ids=, key_fence=)`` for router-assigned ids
+and z-order fences, per-run/snapshot key fences (whole-shard pruning),
+``search_exact*(bsf=)`` external bounds (cross-shard best-so-far
+chaining), ``advance_clock`` (one window clock across shards), and
+``debt_cv`` (a shared backpressure budget the compactor pokes).
 """
 from __future__ import annotations
 
@@ -41,11 +51,26 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from . import keys as K
 from . import summarization as S
 from . import tree as T
 from .metrics import IngestMetrics, IOStats
 
 __all__ = ["CoconutLSM", "Run"]
+
+
+def _combine_fences(fences) -> Optional[Tuple[int, int]]:
+    """Combine per-component (lo, hi) z-order bigint fences; ``None``
+    anywhere means the range is unknown and poisons the combination."""
+    lo = hi = None
+    for f in fences:
+        if f is None:
+            return None
+        if lo is None or f[0] < lo:
+            lo = f[0]
+        if hi is None or f[1] > hi:
+            hi = f[1]
+    return None if lo is None else (lo, hi)
 
 
 @dataclasses.dataclass
@@ -55,10 +80,26 @@ class Run:
     t_min: int
     t_max: int
     segment: Optional[str] = None   # on-disk segment file (store-backed)
+    _fence: Optional[Tuple[int, int]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n(self) -> int:
         return self.tree.n
+
+    @property
+    def key_fence(self) -> Tuple[int, int]:
+        """(lo, hi) z-order key range of the run as python bigints — the
+        per-run fence the sharded router's shard-prune bound reads.  The
+        tree is key-sorted, so this is just the first and last key
+        (computed once; runs are immutable)."""
+        if self._fence is None:
+            # slice on device BEFORE the host copy: 2 rows cross the
+            # boundary, not the whole [N, n_words] key column
+            self._fence = (
+                K.keys_to_bigint(np.asarray(self.tree.keys[:1]))[0],
+                K.keys_to_bigint(np.asarray(self.tree.keys[-1:]))[0])
+        return self._fence
 
 
 @dataclasses.dataclass
@@ -69,7 +110,12 @@ class _PendingFlush:
     engine lock."""
     raw_parts: List[np.ndarray]
     ts_parts: List[np.ndarray]
+    id_parts: List[np.ndarray]
     n: int
+    fence: Optional[Tuple[int, int]] = None   # combined key range (or None)
+    # per-part (paa, codes) from the router's routing pass, or None —
+    # lets the run build skip its summarize when every part carries them
+    sum_parts: Optional[List] = None
 
 
 class CoconutLSM:
@@ -113,6 +159,9 @@ class CoconutLSM:
         self.runs: List[Run] = []          # newest first
         self._buf_raw: List[np.ndarray] = []
         self._buf_ts: List[np.ndarray] = []
+        self._buf_ids: List[np.ndarray] = []
+        self._buf_fence: List[Optional[Tuple[int, int]]] = []
+        self._buf_sum: List[Optional[Tuple[np.ndarray, np.ndarray]]] = []
         self._buf_count = 0
         self.clock = 0                     # logical insertion time
         self.merges = 0
@@ -129,6 +178,10 @@ class CoconutLSM:
         self._closed = False
         self.concurrent = concurrent
         self.max_debt = max_debt
+        # optional external condition the compactor pokes after every
+        # retired debt unit — the sharded router parks its shared
+        # backpressure budget on it (see ShardedCoconutLSM.insert)
+        self.debt_cv: Optional[threading.Condition] = None
         self.ingest = IngestMetrics()
         self.wal = None
         if store is not None:
@@ -189,15 +242,29 @@ class CoconutLSM:
             lsm.runs.append(Run(tree=tree, level=entry["level"],
                                 t_min=entry["t_min"], t_max=entry["t_max"],
                                 segment=entry["file"]))
+        # pre-ids stores (segments without an ids column): synthesize
+        # unique global ids — oldest-first run bases + the run's own
+        # offsets (unique within a run) — so merges with new id-carrying
+        # runs never silently drop the column and report ambiguous
+        # component-local offsets as ids
+        if any(r.tree.ids is None for r in lsm.runs):
+            base = 0
+            for r in reversed(lsm.runs):   # oldest first
+                if r.tree.ids is None:
+                    r.tree.ids = base + r.tree.offsets
+                base += r.n
         durable = sum(r.n for r in lsm.runs)
         lsm._rows_inserted = durable
         # -- WAL replay: recover the acked-but-uncommitted insert tail ------
         wal_start = manifest.get("wal_start", durable)
         tail = WriteAheadLog.replay(store.root, wal_start)
-        for raw, ts in tail:
+        for raw, ts, ids in tail:
             if len(raw):
                 lsm.ingest.add("wal_replayed_rows", len(raw))
-                lsm.insert(raw, ts)        # may flush + commit, WAL-less
+                # ids ride in the WAL record so a replayed row keeps the
+                # global id it was acked with (sharded engines route ids
+                # that are NOT the shard-local stream position)
+                lsm.insert(raw, ts, ids=ids)   # may flush+commit, WAL-less
         lsm.clock = max(lsm.clock, manifest["clock"])
         # fresh WAL holding exactly the still-buffered tail; supersedes and
         # deletes the replayed files
@@ -223,12 +290,13 @@ class CoconutLSM:
                 durable = sum(r.n for r in self.runs)
                 parts = []
                 for e in self._flushing:
-                    parts.extend(zip(e.raw_parts, e.ts_parts))
-                parts.extend(zip(self._buf_raw, self._buf_ts))
+                    parts.extend(zip(e.raw_parts, e.ts_parts, e.id_parts))
+                parts.extend(zip(self._buf_raw, self._buf_ts,
+                                 self._buf_ids))
             tail = []
             row = durable
-            for raw, ts in parts:
-                tail.append((row, raw, ts))
+            for raw, ts, ids in parts:
+                tail.append((row, raw, ts, ids))
                 row += len(raw)
             # file I/O outside the engine lock; _wal_lock keeps appends out
             self.wal.rotate(tail)
@@ -270,7 +338,11 @@ class CoconutLSM:
             raise RuntimeError("CoconutLSM is closed")
 
     def insert(self, raw: np.ndarray,
-               timestamps: Optional[np.ndarray] = None) -> None:
+               timestamps: Optional[np.ndarray] = None, *,
+               ids: Optional[np.ndarray] = None,
+               key_fence: Optional[Tuple[int, int]] = None,
+               summaries: Optional[Tuple[np.ndarray, np.ndarray]] = None
+               ) -> None:
         """Insert a batch of series ``[n, L]``.
 
         Synchronous mode: buffered, may trigger an inline flush + merge
@@ -278,6 +350,18 @@ class CoconutLSM:
         compactor is signalled; the call blocks only when compaction debt
         exceeds ``max_debt`` (backpressure).  On return the batch is acked:
         with a store and ``wal_fsync="always"`` it survives a crash.
+
+        ``ids``: global row ids for the batch; defaults to this engine's
+        insert-stream positions.  The sharded router passes the *global*
+        stream positions so answers are shard-count-invariant.
+        ``key_fence``: optional (lo, hi) z-order bigint range covering the
+        batch — lets snapshots expose a key fence while rows are still
+        buffered (routers compute keys anyway; standalone callers may
+        omit it, which only disables whole-shard fence pruning).
+        ``summaries``: optional (paa ``[n, w]``, codes ``[n, w]``) for the
+        batch, as produced by ``summarization.summarize`` — the router
+        computes them for routing and threads them here so the flush-time
+        run build does not summarize the rows a second time.
         """
         self._check_open()
         if self._compactor is not None:
@@ -291,11 +375,22 @@ class CoconutLSM:
                                            dtype=np.int64)
                 else:
                     timestamps = np.asarray(timestamps, np.int64)
-                self.clock = int(timestamps.max()) + 1
+                # monotone: out-of-order caller timestamps never regress
+                # the clock (a regressing clock would shift window cuts
+                # and break shard-count invariance)
+                self.clock = max(self.clock, int(timestamps.max()) + 1)
                 start_row = self._rows_inserted
                 self._rows_inserted += n
+                if ids is None:
+                    ids = np.arange(start_row, start_row + n,
+                                    dtype=np.int64)
+                else:
+                    ids = np.asarray(ids, np.int64)
                 self._buf_raw.append(raw)
                 self._buf_ts.append(timestamps)
+                self._buf_ids.append(ids)
+                self._buf_fence.append(key_fence)
+                self._buf_sum.append(summaries)
                 self._buf_count += n
                 self.ingest.add("rows_ingested", n)
                 self.ingest.set_gauge("ingest_lag_rows", self._lag_locked())
@@ -306,7 +401,7 @@ class CoconutLSM:
             # (If a flush commits these rows before the record lands, the
             # manifest's wal_start simply skips it at replay.)
             if self.wal is not None:
-                self.wal.append(raw, timestamps, start_row)
+                self.wal.append(raw, timestamps, start_row, ids=ids)
         if self.concurrent:
             with self._cv:             # bounded-debt backpressure
                 throttled = False
@@ -367,38 +462,71 @@ class CoconutLSM:
             if not force and self._buf_count < self.buffer_capacity:
                 return None
             take = self._buf_count if force else self.buffer_capacity
-            head_raw, head_ts = [], []
-            rest_raw, rest_ts = [], []
+            head_raw, head_ts, head_ids = [], [], []
+            head_fence, head_sum = [], []
+            rest_raw, rest_ts, rest_ids = [], [], []
+            rest_fence, rest_sum = [], []
             got = 0
-            for raw, ts in zip(self._buf_raw, self._buf_ts):
+            for raw, ts, ids, fence, summ in zip(
+                    self._buf_raw, self._buf_ts, self._buf_ids,
+                    self._buf_fence, self._buf_sum):
                 need = take - got
                 if need <= 0:
                     rest_raw.append(raw)
                     rest_ts.append(ts)
+                    rest_ids.append(ids)
+                    rest_fence.append(fence)
+                    rest_sum.append(summ)
                 elif len(raw) <= need:
                     head_raw.append(raw)
                     head_ts.append(ts)
+                    head_ids.append(ids)
+                    head_fence.append(fence)
+                    head_sum.append(summ)
                     got += len(raw)
                 else:                    # FIFO split inside one batch
                     head_raw.append(raw[:need])
                     head_ts.append(ts[:need])
+                    head_ids.append(ids[:need])
                     rest_raw.append(raw[need:])
                     rest_ts.append(ts[need:])
+                    rest_ids.append(ids[need:])
+                    # both halves inherit the whole batch's fence — a
+                    # superset range keeps the bound valid; summaries are
+                    # row-wise, so they split exactly
+                    head_fence.append(fence)
+                    rest_fence.append(fence)
+                    if summ is None:
+                        head_sum.append(None)
+                        rest_sum.append(None)
+                    else:
+                        head_sum.append((summ[0][:need], summ[1][:need]))
+                        rest_sum.append((summ[0][need:], summ[1][need:]))
                     got = take
             self._buf_raw, self._buf_ts = rest_raw, rest_ts
+            self._buf_ids, self._buf_fence = rest_ids, rest_fence
+            self._buf_sum = rest_sum
             self._buf_count -= got
-            entry = _PendingFlush(head_raw, head_ts, got)
+            entry = _PendingFlush(head_raw, head_ts, head_ids, got,
+                                  fence=_combine_fences(head_fence),
+                                  sum_parts=head_sum)
             self._flushing.append(entry)
             return entry
 
     def _build_run(self, entry: _PendingFlush) -> Run:
         head_raw = np.concatenate(entry.raw_parts)
         head_ts = np.concatenate(entry.ts_parts)
+        head_ids = np.concatenate(entry.id_parts)
+        paas = codes = None
+        if entry.sum_parts and all(s is not None for s in entry.sum_parts):
+            paas = np.concatenate([s[0] for s in entry.sum_parts])
+            codes = np.concatenate([s[1] for s in entry.sum_parts])
         tree = T.build(jnp.asarray(head_raw), self.cfg,
                        leaf_size=self.leaf_size,
                        materialized=self.materialized,
                        timestamps=jnp.asarray(head_ts),
-                       io=self.io)
+                       ids=head_ids,
+                       io=self.io, paas=paas, codes=codes)
         return Run(tree=tree, level=0,
                    t_min=int(head_ts.min()), t_max=int(head_ts.max()))
 
@@ -573,42 +701,61 @@ class CoconutLSM:
         if include_buffer is None:
             include_buffer = self.concurrent
         parts = None
+        part_fences = []
         with self._lock:                 # reference capture only, no copy
             runs = tuple(self.runs)
             clock = self.clock
             if include_buffer:
                 parts = []
                 for e in self._flushing:
-                    parts.extend(zip(e.raw_parts, e.ts_parts))
-                parts.extend(zip(self._buf_raw, self._buf_ts))
+                    parts.extend(zip(e.raw_parts, e.ts_parts, e.id_parts))
+                    part_fences.append(e.fence)
+                parts.extend(zip(self._buf_raw, self._buf_ts,
+                                 self._buf_ids))
+                part_fences.extend(self._buf_fence)
         buf = None
         if include_buffer:               # batch arrays are immutable —
             if parts:                    # concatenate outside the lock
                 raw = np.concatenate([p[0] for p in parts])
                 ts = np.concatenate([p[1] for p in parts])
+                ids = np.concatenate([p[2] for p in parts])
             else:
                 raw = np.zeros((0, self.cfg.series_len), np.float32)
                 ts = np.zeros(0, np.int64)
-            buf = FrozenBuffer(raw=raw, ts=ts)
+                ids = np.zeros(0, np.int64)
+            buf = FrozenBuffer(raw=raw, ts=ts, ids=ids)
+        # key fence over everything the snapshot can see: run fences are
+        # exact (sorted trees); buffer batches contribute the fence their
+        # insert declared, None poisoning the range to "unknown"
+        fences = [r.key_fence for r in runs if r.n]
+        if buf is not None and buf.n:
+            fences.extend(part_fences)
+        fence = _combine_fences(fences) if fences else None
         return Snapshot(runs=runs, clock=clock, mode=self.mode,
-                        io=self.io, buffer=buf)
+                        io=self.io, buffer=buf, key_fence=fence)
 
     def search_approx(self, query: np.ndarray, *,
+                      k: Optional[int] = None,
                       window: Optional[int] = None,
                       radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Approximate 1-NN over a consistent snapshot (Algorithm 4 per
-        run)."""
+        """Approximate k-NN over a consistent snapshot (Algorithm 4 per
+        run).  ``k=None`` keeps the deprecated scalar return."""
         return self.snapshot().search_approx(
-            query, window=window, radius_leaves=radius_leaves)
+            query, k=k, window=window, radius_leaves=radius_leaves)
 
     def search_exact(self, query: np.ndarray, *,
+                     k: Optional[int] = None,
                      window: Optional[int] = None,
-                     radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Exact 1-NN over a consistent snapshot: SIMS per qualifying run
+                     radius_leaves: int = 1,
+                     bsf: Optional[float] = None
+                     ) -> Tuple[float, int, dict]:
+        """Exact k-NN over a consistent snapshot: SIMS per qualifying run
         with a carried bsf (Algorithm 7), plus timestamp post-filtering in
-        ``pp`` mode."""
+        ``pp`` mode.  ``bsf`` seeds the chain with an external bound (the
+        sharded router); ``k=None`` keeps the deprecated scalar return."""
         return self.snapshot().search_exact(
-            query, window=window, radius_leaves=radius_leaves)
+            query, k=k, window=window, radius_leaves=radius_leaves,
+            bsf=bsf)
 
     def search_approx_batch(self, queries: np.ndarray, *,
                             k: int = 1,
@@ -623,13 +770,53 @@ class CoconutLSM:
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
                            window: Optional[int] = None,
-                           radius_leaves: int = 1
+                           radius_leaves: int = 1,
+                           bsf: Optional[np.ndarray] = None
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
         for the whole batch, per-query bounds carried run to run, cross-run
-        top-k merge.  With k=1, row qi equals ``search_exact(queries[qi])``."""
+        top-k merge.  With k=1, row qi equals ``search_exact(queries[qi])``.
+        ``bsf``: optional ``[Q]`` external per-query bounds (shard chain)."""
         return self.snapshot().search_exact_batch(
-            queries, k=k, window=window, radius_leaves=radius_leaves)
+            queries, k=k, window=window, radius_leaves=radius_leaves,
+            bsf=bsf)
+
+    # ------------------------------------------------------- sharding hooks
+    def advance_clock(self, t: int) -> None:
+        """Raise the logical clock to at least ``t`` (never lowers it).
+
+        The sharded router assigns timestamps from ONE global clock and
+        advances every shard after each routed batch, so window queries
+        (``clock - window``) cut at the same instant on every shard —
+        required for shard-count-invariant window answers."""
+        with self._lock:
+            if t > self.clock:
+                self.clock = t
+
+    def max_id(self) -> int:
+        """Highest global row id anywhere in the engine (-1 when empty).
+
+        Used by ``ShardedCoconutLSM.open`` to restart the global id
+        allocator: after a crash mid-routed-batch the surviving ids need
+        not be a dense prefix, so the next id is the max over shards."""
+        with self._lock:
+            runs = list(self.runs)
+            parts = [ids for e in self._flushing for ids in e.id_parts]
+            parts.extend(self._buf_ids)
+        m = -1
+        for r in runs:
+            if r.tree.ids is not None and r.n:
+                m = max(m, int(np.asarray(r.tree.ids).max()))
+        for a in parts:
+            if len(a):
+                m = max(m, int(a.max()))
+        return m
+
+    @property
+    def rows_inserted(self) -> int:
+        """Rows ever accepted by this engine (its local insert stream)."""
+        with self._lock:
+            return self._rows_inserted
 
     # ------------------------------------------------------------ diagnostics
     def level_histogram(self) -> dict:

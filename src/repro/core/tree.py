@@ -34,7 +34,7 @@ from .metrics import IOStats
 __all__ = ["CoconutTree", "build", "approx_search", "exact_search",
            "approx_search_batch", "exact_search_batch",
            "exact_search_budgeted", "merge_trees", "SearchStats",
-           "save", "load"]
+           "as_scalar_result", "save", "load"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -48,6 +48,7 @@ class CoconutTree:
     raw: Optional[jax.Array]        # [N, L] sorted raw series (materialized)
     raw_ref: Optional[jax.Array]    # [N, L] *unsorted* raw (non-materialized)
     timestamps: Optional[jax.Array]  # [N] int32 insertion times (optional)
+    ids: Optional[jax.Array] = None  # [N] int global row ids (sorted order)
     cfg: S.SummaryConfig = dataclasses.field(
         default_factory=S.SummaryConfig)
     leaf_size: int = 256
@@ -55,7 +56,7 @@ class CoconutTree:
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
         children = (self.keys, self.codes, self.paas, self.offsets,
-                    self.raw, self.raw_ref, self.timestamps)
+                    self.raw, self.raw_ref, self.timestamps, self.ids)
         aux = (self.cfg, self.leaf_size)
         return children, aux
 
@@ -111,6 +112,27 @@ class SearchStats:
     queries: int = 1             # batch size this accounting covers
     candidates_per_query: Optional[np.ndarray] = None   # [Q] rows verified
     leaves_per_query: Optional[np.ndarray] = None       # [Q] leaves touched
+    shards_touched: int = 0      # shards actually searched (sharded engine)
+    shards_pruned: int = 0       # shards skipped by key-fence mindist bound
+
+
+def as_scalar_result(dists: np.ndarray, offsets: np.ndarray
+                     ) -> Tuple[float, int]:
+    """THE scalar-return shim: ``([k], [k]) -> (float, int)`` of the top-1.
+
+    Every single-query entry point (tree, snapshot, LSM, sharded router)
+    funnels its legacy ``k=None`` scalar return through this one helper —
+    the scalar special case is deprecated in favor of passing ``k=1`` and
+    receiving length-k arrays, and lives nowhere else.
+    """
+    return float(dists[0]), int(offsets[0])
+
+
+def _report_column(tree: CoconutTree):
+    """Column reported as the 'offset' of an answer: the global row id
+    when the tree carries ids (LSM runs), else the position in the
+    original raw file (standalone trees keep their historical contract)."""
+    return tree.ids if tree.ids is not None else tree.offsets
 
 
 def build(raw: jax.Array,
@@ -119,20 +141,33 @@ def build(raw: jax.Array,
           leaf_size: int = 256,
           materialized: bool = True,
           timestamps: Optional[jax.Array] = None,
+          ids: Optional[jax.Array] = None,
           io: Optional[IOStats] = None,
-          znorm: bool = False) -> CoconutTree:
+          znorm: bool = False,
+          paas: Optional[jax.Array] = None,
+          codes: Optional[jax.Array] = None) -> CoconutTree:
     """Bulk-load a Coconut-Tree from raw series ``[N, L]`` (Algorithm 3).
 
     summarize -> invert (z-order) -> sort -> (optionally) co-sort raw.
     O(N/B) block transfers in the paper's model: we stream the raw file once
     (seq read), write the sorted summaries once (seq write), and for the
     materialized variant also rewrite the raw data once.
+
+    ``paas``/``codes``: optional precomputed summaries in row order (both
+    or neither) — the sharded router summarizes every batch once for
+    routing and threads the result here so flushes never re-summarize.
+    Must be the output of :func:`repro.core.summarization.summarize` on
+    the same rows (row-wise, so slicing/concatenating batches is safe).
     """
     raw = jnp.asarray(raw, jnp.float32)
     if znorm:
         raw = S.znormalize(raw)
     n = raw.shape[0]
-    paas, codes = S.summarize(raw, cfg)
+    if paas is None or codes is None:
+        paas, codes = S.summarize(raw, cfg)
+    else:
+        paas = jnp.asarray(paas, jnp.float32)
+        codes = jnp.asarray(codes, jnp.uint8)
     keys = S.invsax_keys(codes, cfg)
     order = K.lexsort_keys(keys)
     keys = keys[order]
@@ -140,6 +175,9 @@ def build(raw: jax.Array,
     paas = paas[order]
     offsets = order.astype(jnp.int32)
     ts = timestamps[order] if timestamps is not None else None
+    # device ids inherit the default int width (x64 is disabled); the
+    # int64 view lives host-side (np conversions, segment files, WAL)
+    ids_sorted = jnp.asarray(ids)[order] if ids is not None else None
     if io is not None:
         io.seq_read(n)            # pass over the raw file (summarize)
         io.seq_write(n)           # write sorted summaries
@@ -152,7 +190,7 @@ def build(raw: jax.Array,
         keys=keys, codes=codes, paas=paas, offsets=offsets,
         raw=raw[order] if materialized else None,
         raw_ref=None if materialized else raw,
-        timestamps=ts, cfg=cfg, leaf_size=leaf_size)
+        timestamps=ts, ids=ids_sorted, cfg=cfg, leaf_size=leaf_size)
 
 
 # ---------------------------------------------------------------------------
@@ -180,21 +218,24 @@ def _approx_candidates(tree: CoconutTree, query: jax.Array,
 
 
 def approx_search(tree: CoconutTree, query: jax.Array, *,
+                  k: Optional[int] = None,
                   radius_leaves: int = 1,
                   io: Optional[IOStats] = None
                   ) -> Tuple[float, int, SearchStats]:
-    """Approximate 1-NN: visit the leaves around the query's sorted position.
+    """Approximate k-NN: visit the leaves around the query's sorted position.
 
-    Returns (best ED^2, offset into the original raw file, stats).
+    Thin wrapper over :func:`approx_search_batch` with Q=1.  With ``k``
+    set, returns (dists ``[k]``, offsets ``[k]``, stats); the default
+    ``k=None`` keeps the deprecated scalar contract (best ED^2, offset)
+    via :func:`as_scalar_result`.
     """
-    d, idx = _approx_candidates(tree, query, radius_leaves=radius_leaves)
-    best = int(jnp.argmin(d))
-    stats = SearchStats(candidates=int(d.shape[0]),
-                        leaves_touched=2 * radius_leaves,
-                        exact=False)
-    if io is not None:
-        io.rand_read(2 * radius_leaves)
-    return float(d[best]), int(tree.offsets[idx[best]]), stats
+    q = jnp.asarray(query, jnp.float32)[None, :]
+    d, off, stats = approx_search_batch(
+        tree, q, k=1 if k is None else k,
+        radius_leaves=radius_leaves, io=io)
+    if k is None:
+        return (*as_scalar_result(d[0], off[0]), stats)
+    return d[0], off[0], stats
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +243,7 @@ def approx_search(tree: CoconutTree, query: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def exact_search(tree: CoconutTree, query: jax.Array, *,
+                 k: Optional[int] = None,
                  radius_leaves: int = 1,
                  chunk: int = 4096,
                  io: Optional[IOStats] = None,
@@ -209,71 +251,30 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
                  ts_min: Optional[int] = None,
                  bsf: Optional[float] = None,
                  ) -> Tuple[float, int, SearchStats]:
-    """Exact 1-NN via skip-sequential SIMS scan.
+    """Exact k-NN via the skip-sequential SIMS scan.
 
-    1. approximate search seeds the best-so-far (bsf);
-    2. mindist lower bounds for *all* in-memory summaries (Pallas hot loop);
-    3. only unpruned series are fetched and verified, in sorted-offset chunks
-       (skip-sequential access, as in the paper).
+    Thin wrapper over :func:`exact_search_batch` with Q=1 — one SIMS
+    implementation serves the single and batched paths, so the answer
+    bits are identical by construction.  With ``k`` set, returns
+    (dists ``[k]``, offsets ``[k]``, stats); the default ``k=None`` keeps
+    the deprecated scalar contract via :func:`as_scalar_result`.
 
     ``ts_min``: if set, restrict to entries with timestamp >= ts_min
     (post-processing window filtering, Sec. 5.1).
-    ``bsf``: optionally seed with an externally-known bound (LSM run chaining).
+    ``bsf``: externally-known bound (LSM run / shard chaining); it prunes
+    the scan but is never returned as an answer — a caller chaining
+    components keeps its own best and compares.
+    ``mindist_fn``: injectable kernel with the BATCHED signature
+    ``(q_paas [Q, w], codes [N, w]) -> [Q, N]``.
     """
-    q = jnp.asarray(query, jnp.float32)
-    if ts_min is not None and tree.timestamps is not None:
-        alive = np.asarray(tree.timestamps) >= ts_min
-    else:
-        alive = np.ones(tree.n, bool)
-
-    # seed from the approximate probe, restricted to in-window entries —
-    # an out-of-window seed would undercut the true window answer
-    _, idx0 = _approx_candidates(tree, q, radius_leaves=radius_leaves)
-    if io is not None:
-        io.rand_read(2 * radius_leaves)
-    idx0_np = np.asarray(idx0)
-    # canonical bits: recompute seed distances with the same eager kernel
-    # the verifier uses, so the distance returned for a row is identical
-    # whether it was seeded or verified — and therefore independent of how
-    # the data is partitioned into runs (the jitted probe may differ by an
-    # ulp from the eager kernel)
-    d0_np = np.asarray(S.euclidean_sq(q, tree.series(jnp.asarray(idx0_np))))
-    d0_np = np.where(alive[idx0_np], d0_np, np.inf)
-    seed_i = int(np.argmin(d0_np))
-    best_d = float(d0_np[seed_i])
-    best_off = (int(np.asarray(tree.offsets)[idx0_np[seed_i]])
-                if np.isfinite(best_d) else -1)
-    if bsf is not None and bsf < best_d:
-        best_d, best_off = bsf, -1
-
-    cfg = tree.cfg
-    q_paa = S.paa(q[None, :], cfg.segments)[0]
-    if mindist_fn is None:
-        mindist_fn = lambda qp, codes: S.mindist_sq(qp, codes, cfg)
-    md = np.asarray(mindist_fn(q_paa, tree.codes))
-
-    cand = np.nonzero((md < best_d) & alive)[0]
-    stats = SearchStats(candidates=0, exact=True)
-    stats.pruned_frac = 1.0 - len(cand) / max(tree.n, 1)
-    stats.leaves_touched = len(np.unique(cand // tree.leaf_size))
-    if io is not None and len(cand):
-        # skip-sequential: runs of adjacent leaves count as sequential blocks
-        io.seq_read(len(cand))
-
-    # verify in chunks, re-pruning against the improving bsf (skip-sequential)
-    for s in range(0, len(cand), chunk):
-        block = cand[s:s + chunk]
-        block = block[md[block] < best_d]
-        if len(block) == 0:
-            continue
-        rows = tree.series(jnp.asarray(block))
-        d = np.asarray(S.euclidean_sq(q, rows))
-        stats.candidates += len(block)
-        i = int(np.argmin(d))
-        if d[i] < best_d:
-            best_d = float(d[i])
-            best_off = int(np.asarray(tree.offsets)[block[i]])
-    return best_d, best_off, stats
+    q = jnp.asarray(query, jnp.float32)[None, :]
+    ext = None if bsf is None else np.asarray([bsf], np.float32)
+    d, off, stats = exact_search_batch(
+        tree, q, k=1 if k is None else k, radius_leaves=radius_leaves,
+        chunk=chunk, io=io, mindist_fn=mindist_fn, ts_min=ts_min, bsf=ext)
+    if k is None:
+        return (*as_scalar_result(d[0], off[0]), stats)
+    return d[0], off[0], stats
 
 
 @functools.partial(jax.jit, static_argnames=("budget", "radius_leaves"))
@@ -301,8 +302,9 @@ def exact_search_budgeted(tree: CoconutTree, query: jax.Array, *,
     best_i = jnp.argmin(d)
     best_d = jnp.minimum(d[best_i], seed)
     from_seed = seed <= d[best_i]
-    seed_off = tree.offsets[idx[jnp.argmin(d0)]]
-    best_off = jnp.where(from_seed, seed_off, tree.offsets[order[best_i]])
+    rep = _report_column(tree)
+    seed_off = rep[idx[jnp.argmin(d0)]]
+    best_off = jnp.where(from_seed, seed_off, rep[order[best_i]])
     certified = cand_md[budget - 1] >= best_d
     return best_d, best_off, certified
 
@@ -367,7 +369,7 @@ def approx_search_batch(tree: CoconutTree, queries: jax.Array, *,
     d, idx = _approx_candidates_batch(tree, queries,
                                       radius_leaves=radius_leaves)
     d = np.asarray(d)
-    offs = np.asarray(tree.offsets)[np.asarray(idx)]     # [Q, span]
+    offs = np.asarray(_report_column(tree))[np.asarray(idx)]   # [Q, span]
     out_d = np.empty((nq, k), np.float32)
     out_o = np.empty((nq, k), np.int64)
     for qi in range(nq):
@@ -428,7 +430,7 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
     rows0 = rows0.reshape(idx0.shape + rows0.shape[1:])       # [Q, C, L]
     diff0 = rows0 - queries[:, None, :]
     d0 = np.asarray(jnp.sum(diff0 * diff0, axis=-1), np.float32)
-    offs_all = np.asarray(tree.offsets)
+    offs_all = np.asarray(_report_column(tree))
     d0 = np.where(alive[idx0], d0, np.inf)
     offs0 = np.where(alive[idx0], offs_all[idx0], -1)
     best_d = np.empty((nq, k), np.float32)
@@ -510,6 +512,9 @@ def merge_trees(a: CoconutTree, b: CoconutTree, *,
     ts = None
     if a.timestamps is not None and b.timestamps is not None:
         ts = jnp.concatenate([a.timestamps, b.timestamps])
+    ids = None
+    if a.ids is not None and b.ids is not None:
+        ids = jnp.concatenate([a.ids, b.ids])
     order = K.lexsort_keys(keys)
     raw = raw_ref = None
     if a.materialized:
@@ -523,6 +528,7 @@ def merge_trees(a: CoconutTree, b: CoconutTree, *,
         keys=keys[order], codes=codes[order], paas=paas[order],
         offsets=offs[order].astype(jnp.int32), raw=raw, raw_ref=raw_ref,
         timestamps=None if ts is None else ts[order],
+        ids=None if ids is None else ids[order],
         cfg=a.cfg, leaf_size=a.leaf_size)
 
 

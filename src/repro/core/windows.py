@@ -14,6 +14,12 @@ paper's names and a single constructor for experiments:
     small windows cheap, large windows touch O(N/buffer) partitions.
   * BTP (bounded temporal part.)   — the paper's contribution: ratio-2
     merging bounds partitions at O(log N) while windows skip old runs.
+
+With ``shards > 1`` the same modes run inside a
+:class:`repro.distributed.sharded_lsm.ShardedCoconutLSM`: window queries
+then skip BOTH out-of-window runs (per shard, per mode) AND out-of-range
+shards (key-fence mindist pruning) — the temporal and keyspace partitions
+compose.
 """
 from __future__ import annotations
 
@@ -35,7 +41,9 @@ def window_engine(mode: str, cfg: SummaryConfig, *,
                   store=None,
                   concurrent: bool = False,
                   wal_fsync: str = "always",
-                  max_debt: int = 4) -> CoconutLSM:
+                  max_debt: int = 4,
+                  shards: int = 1,
+                  data_dir: Optional[str] = None):
     """Build a window-query engine; ``mode`` in {"pp", "tp", "btp"}.
 
     ``store``/``concurrent``/``wal_fsync``/``max_debt`` pass through to
@@ -44,9 +52,24 @@ def window_engine(mode: str, cfg: SummaryConfig, *,
     compactor so window queries run against immutable snapshots while
     ingest continues.  Concurrent engines should be closed (or used as a
     context manager) so the compactor thread shuts down deterministically.
+
+    ``shards > 1`` returns a key-range-partitioned
+    :class:`~repro.distributed.sharded_lsm.ShardedCoconutLSM` with the
+    same windowing mode on every shard; persistence then goes through
+    ``data_dir`` (a ``ShardDirectory`` root) instead of ``store``.
     """
     if mode not in WINDOW_MODES:
         raise ValueError(f"mode must be one of {WINDOW_MODES}, got {mode!r}")
+    if shards > 1:
+        if store is not None:
+            raise ValueError(
+                "sharded engines persist via data_dir=, not store=")
+        from ..distributed.sharded_lsm import ShardedCoconutLSM
+        return ShardedCoconutLSM(
+            cfg, shards=shards, buffer_capacity=buffer_capacity,
+            leaf_size=leaf_size, mode=mode, materialized=materialized,
+            io=io, data_dir=data_dir, concurrent=concurrent,
+            wal_fsync=wal_fsync, max_debt=max_debt)
     return CoconutLSM(cfg, buffer_capacity=buffer_capacity,
                       leaf_size=leaf_size, mode=mode,
                       materialized=materialized, io=io, store=store,

@@ -33,7 +33,26 @@ from .compat import shard_map
 
 from ..core import keys as K
 
-__all__ = ["sharded_sort", "local_topk_merge"]
+__all__ = ["sharded_sort", "splitters_from_sample", "local_topk_merge"]
+
+
+def splitters_from_sample(keys: np.ndarray, d: int) -> np.ndarray:
+    """Select ``d-1`` range splitters from a key sample — the host-side
+    twin of the splitter step inside :func:`sharded_sort` (sort the
+    sample, take every ``len/d``-th key).
+
+    ``keys``: ``[M, n_words]`` uint32 z-order keys (any order).
+    Returns ``[d-1, n_words]`` ascending splitter keys.  The sharded
+    streaming router uses this to estimate (and re-estimate) its shard
+    boundaries from sampled insert keys, so the static bulk-load and the
+    streaming engine partition the keyspace the same way.
+    """
+    keys = np.asarray(keys, np.uint32)
+    if d < 2:
+        return np.zeros((0, keys.shape[1]), np.uint32)
+    s = keys[K.lexsort_keys_np(keys)]
+    pos = (np.arange(1, d) * len(s)) // d
+    return np.ascontiguousarray(s[np.minimum(pos, len(s) - 1)])
 
 
 def sharded_sort(mesh, keys: jax.Array, payload: jax.Array, *,

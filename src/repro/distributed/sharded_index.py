@@ -47,6 +47,7 @@ class ShardedCoconutTree:
     cfg: S.SummaryConfig
     mesh: object
     axis: str = "data"
+    ts: Optional[jax.Array] = None   # [d*cap] f32 timestamps (co-routed)
 
     @property
     def n_valid(self) -> int:
@@ -55,11 +56,16 @@ class ShardedCoconutTree:
 
 def build_sharded(mesh, raw: jax.Array, cfg: S.SummaryConfig, *,
                   axis: str = "data",
-                  cap_factor: float = 2.0) -> ShardedCoconutTree:
+                  cap_factor: float = 2.0,
+                  timestamps: Optional[jax.Array] = None
+                  ) -> ShardedCoconutTree:
     """Distributed bulk-load: summarize locally, sample-sort globally.
 
     ``raw``: [N, L] float32 with N divisible by the axis size; arrives
-    sharded (or is resharded) over ``axis``.
+    sharded (or is resharded) over ``axis``.  ``timestamps`` (optional
+    [N] ints) are co-routed with their rows so window queries
+    (``ts_min``) filter on-shard; they ride the f32 payload, exact for
+    values < 2**24.
     """
     d = mesh.shape[axis]
     n, L = raw.shape
@@ -69,12 +75,11 @@ def build_sharded(mesh, raw: jax.Array, cfg: S.SummaryConfig, *,
     paas, codes = S.summarize(raw, cfg)
     keys = S.invsax_keys(codes, cfg)
     # payload rows: raw co-sorted with keys (materialized index) + the PAA /
-    # codes needed by the SIMS scan, packed as one f32 payload matrix
-    pay = jnp.concatenate([
-        raw,
-        paas,
-        codes.astype(jnp.float32),
-    ], axis=1)
+    # codes needed by the SIMS scan (+ optional ts), one f32 payload matrix
+    cols = [raw, paas, codes.astype(jnp.float32)]
+    if timestamps is not None:
+        cols.append(jnp.asarray(timestamps, jnp.float32)[:, None])
+    pay = jnp.concatenate(cols, axis=1)
     skeys, spay, counts = sharded_sort(mesh, keys, pay, axis=axis,
                                        cap_factor=cap_factor)
     if bool(jnp.any(counts < 0)):
@@ -84,57 +89,18 @@ def build_sharded(mesh, raw: jax.Array, cfg: S.SummaryConfig, *,
         keys=skeys,
         raw=spay[:, :L],
         paas=spay[:, L: L + w],
-        codes=spay[:, L + w:].astype(jnp.uint8),
+        codes=spay[:, L + w: L + 2 * w].astype(jnp.uint8),
+        ts=spay[:, L + 2 * w] if timestamps is not None else None,
         counts=counts, cfg=cfg, mesh=mesh, axis=axis)
 
 
-def distributed_exact_search(tree: ShardedCoconutTree, query: jax.Array,
-                             k: int = 1) -> Tuple[jax.Array, jax.Array]:
-    """Exact k-NN over the sharded index (jit/shard_map, one collective).
-
-    Returns (dists_sq [k], row_payloads [k, L]) — the k nearest raw series.
-
-    Per shard: mindist lower-bound scan over local summaries seeds pruning;
-    the shard verifies ALL its unpruned rows (masked ED — static shapes),
-    takes a local top-k, and one all_gather merges the shards' candidates.
-    """
-    cfg = tree.cfg
-    q = jnp.asarray(query, jnp.float32)
-    q_paa = S.paa(q[None, :], cfg.segments)[0]
-    axis = tree.axis
-
-    def body(codes, paas, raw, keys):
-        # local lower bounds (this is the Pallas mindist kernel's op shape)
-        md = S.mindist_sq(q_paa, codes, cfg)
-        valid = ~jnp.all(keys == jnp.uint32(0xFFFFFFFF), axis=1)
-        md = jnp.where(valid, md, jnp.inf)
-        # approximate seed: best ED among the leaf around the local
-        # insertion point is skipped here — the scan itself is exact; the
-        # seed only matters for the modeled I/O, not correctness.
-        ed = jnp.sum((raw - q[None, :]) ** 2, axis=1)
-        ed = jnp.where(valid & (md <= ed), ed, jnp.inf)
-        neg, idx = jax.lax.top_k(-ed, k)
-        cand_d = -neg
-        cand_rows = raw[idx]
-        d_all = jax.lax.all_gather(cand_d, axis).reshape(-1)
-        r_all = jax.lax.all_gather(cand_rows, axis).reshape(
-            -1, raw.shape[1])
-        neg2, idx2 = jax.lax.top_k(-d_all, k)
-        return -neg2, r_all[idx2]
-
-    fn = shard_map(
-        body, mesh=tree.mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None),
-                  P(axis, None)),
-        out_specs=(P(), P(None, None)), check_vma=False)
-    return fn(tree.codes, tree.paas, tree.raw, tree.keys)
-
-
 def distributed_exact_search_batch(tree: ShardedCoconutTree,
-                                   queries: jax.Array, k: int = 1
-                                   ) -> Tuple[jax.Array, jax.Array]:
+                                   queries: jax.Array, k: int = 1, *,
+                                   budget: Optional[int] = None,
+                                   ts_min: Optional[int] = None):
     """Batched exact k-NN: broadcast the query batch, per-shard ``[Q, k]``
-    partials, ONE all-gather for the whole batch.
+    partials, ONE all-gather for the whole batch — the single shard-map
+    body every distributed search entry point funnels through.
 
     queries ``[Q, L]`` -> (dists_sq ``[Q, k]``, rows ``[Q, k, L]``).  Each
     shard runs the batched mindist scan over its local summaries (one code
@@ -142,71 +108,96 @@ def distributed_exact_search_batch(tree: ShardedCoconutTree,
     collective cost is O(Q*k) per batch instead of O(k) per query — the
     distributed arm of the batched search engine.  Row qi with k=1 equals
     ``distributed_exact_search(tree, queries[qi])``.
+
+    ``ts_min``: restrict to rows with timestamp >= ts_min (window
+    filtering; requires ``build_sharded(..., timestamps=...)``).
+    ``budget``: verify only the ``budget`` best lower bounds per shard
+    (the skip-sequential discipline of SIMS, fixed-shape for jit); the
+    return grows a third element ``certified [Q]`` — True iff the
+    query's answer is provably exact under the budget.
     """
     cfg = tree.cfg
     q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))   # [Q, L]
     q_paas = S.paa(q, cfg.segments)                         # [Q, w]
     axis = tree.axis
+    nq = q.shape[0]
+    if ts_min is not None and tree.ts is None:
+        raise ValueError("ts_min needs a tree built with timestamps")
+    ts = tree.ts if tree.ts is not None else jnp.zeros(
+        tree.keys.shape[0], jnp.float32)
 
-    def body(codes, paas, raw, keys):
+    def body(codes, paas, raw, keys, ts_loc):
         # ONE local lower-bound pass for the whole batch (batched kernel
         # op shape), amortizing the code stream across all Q queries
         md = S.mindist_sq_batch(q_paas, codes, cfg)          # [Q, n_loc]
         valid = ~jnp.all(keys == jnp.uint32(0xFFFFFFFF), axis=1)
+        if ts_min is not None:
+            valid = valid & (ts_loc >= jnp.float32(ts_min))
         md = jnp.where(valid[None, :], md, jnp.inf)
-        ed = S.euclidean_sq_batch(q, raw)                    # [Q, n_loc]
-        ed = jnp.where(valid[None, :] & (md <= ed), ed, jnp.inf)
-        neg, idx = jax.lax.top_k(-ed, k)                     # [Q, k]
-        cand_d = -neg
-        cand_rows = raw[idx]                                 # [Q, k, L]
+        if budget is None:
+            # verify ALL unpruned rows (masked ED — static shapes)
+            ed = S.euclidean_sq_batch(q, raw)                # [Q, n_loc]
+            ed = jnp.where(valid[None, :] & (md <= ed), ed, jnp.inf)
+            neg, idx = jax.lax.top_k(-ed, k)                 # [Q, k]
+            cand_d = -neg
+            cand_rows = raw[idx]                             # [Q, k, L]
+            certified = jnp.ones(nq, bool)
+        else:
+            # verify only the budget best lower bounds per query
+            negm, order = jax.lax.top_k(-md, budget)         # [Q, budget]
+            rows = raw[order]                                # [Q, B, L]
+            diff = rows - q[:, None, :]
+            ed = jnp.sum(diff * diff, axis=-1)               # [Q, B]
+            ed = jnp.where(jnp.isfinite(-negm), ed, jnp.inf)
+            neg, idx = jax.lax.top_k(-ed, k)                 # [Q, k]
+            cand_d = -neg
+            cand_rows = jnp.take_along_axis(rows, idx[:, :, None],
+                                            axis=1)
+            # certified iff the worst verified lower bound exceeds the
+            # best found distance (per query, on this shard)
+            certified = (-negm[:, budget - 1]) >= cand_d[:, 0]
         d_all = jax.lax.all_gather(cand_d, axis)             # [d, Q, k]
         r_all = jax.lax.all_gather(cand_rows, axis)          # [d, Q, k, L]
+        c_all = jax.lax.all_gather(certified, axis)          # [d, Q]
         nd = d_all.shape[0]
-        d_all = jnp.transpose(d_all, (1, 0, 2)).reshape(q.shape[0], nd * k)
+        d_all = jnp.transpose(d_all, (1, 0, 2)).reshape(nq, nd * k)
         r_all = jnp.transpose(r_all, (1, 0, 2, 3)).reshape(
-            q.shape[0], nd * k, raw.shape[1])
+            nq, nd * k, raw.shape[1])
         neg2, idx2 = jax.lax.top_k(-d_all, k)                # [Q, k]
-        rows = jnp.take_along_axis(r_all, idx2[:, :, None], axis=1)
-        return -neg2, rows
+        rows_out = jnp.take_along_axis(r_all, idx2[:, :, None], axis=1)
+        return -neg2, rows_out, jnp.all(c_all, axis=0)
 
     fn = shard_map(
         body, mesh=tree.mesh,
-        in_specs=(P(axis, None),) * 4,
-        out_specs=(P(None, None), P(None, None, None)), check_vma=False)
-    return fn(tree.codes, tree.paas, tree.raw, tree.keys)
+        in_specs=(P(axis, None),) * 4 + (P(axis),),
+        out_specs=(P(None, None), P(None, None, None), P(None,)),
+        check_vma=False)
+    d, rows, cert = fn(tree.codes, tree.paas, tree.raw, tree.keys, ts)
+    if budget is None:
+        return d, rows
+    return d, rows, cert
+
+
+def distributed_exact_search(tree: ShardedCoconutTree, query: jax.Array,
+                             k: int = 1, *,
+                             ts_min: Optional[int] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Exact k-NN for one query — Q=1 wrapper over
+    :func:`distributed_exact_search_batch` (one body, one collective).
+
+    Returns (dists_sq [k], row_payloads [k, L]) — the k nearest raw series.
+    """
+    d, rows = distributed_exact_search_batch(
+        tree, jnp.asarray(query, jnp.float32)[None, :], k, ts_min=ts_min)
+    return d[0], rows[0]
 
 
 def distributed_exact_search_pruned(tree: ShardedCoconutTree,
                                     query: jax.Array, k: int = 1,
                                     budget: int = 1024):
-    """Budgeted variant: verify only the ``budget`` best lower bounds per
-    shard (the skip-sequential discipline of SIMS, fixed-shape for jit)."""
-    cfg = tree.cfg
-    q = jnp.asarray(query, jnp.float32)
-    q_paa = S.paa(q[None, :], cfg.segments)[0]
-    axis = tree.axis
-
-    def body(codes, paas, raw, keys):
-        md = S.mindist_sq(q_paa, codes, cfg)
-        valid = ~jnp.all(keys == jnp.uint32(0xFFFFFFFF), axis=1)
-        md = jnp.where(valid, md, jnp.inf)
-        negm, order = jax.lax.top_k(-md, budget)
-        rows = raw[order]
-        ed = jnp.sum((rows - q[None, :]) ** 2, axis=1)
-        ed = jnp.where(jnp.isfinite(-negm), ed, jnp.inf)
-        neg, idx = jax.lax.top_k(-ed, k)
-        cand_d, cand_rows = -neg, rows[idx]
-        # certified iff the worst verified lower bound exceeds best found
-        certified = (-negm[budget - 1]) >= cand_d[0]
-        d_all = jax.lax.all_gather(cand_d, axis).reshape(-1)
-        r_all = jax.lax.all_gather(cand_rows, axis).reshape(
-            -1, raw.shape[1])
-        c_all = jax.lax.all_gather(certified, axis)
-        neg2, idx2 = jax.lax.top_k(-d_all, k)
-        return -neg2, r_all[idx2], jnp.all(c_all)
-
-    fn = shard_map(
-        body, mesh=tree.mesh,
-        in_specs=(P(axis, None),) * 4,
-        out_specs=(P(), P(None, None), P()), check_vma=False)
-    return fn(tree.codes, tree.paas, tree.raw, tree.keys)
+    """Deprecated alias: the budgeted path now lives in
+    :func:`distributed_exact_search_batch` (``budget=``); this wrapper
+    keeps the (dists [k], rows [k, L], certified) single-query shape."""
+    d, rows, cert = distributed_exact_search_batch(
+        tree, jnp.asarray(query, jnp.float32)[None, :], k, budget=budget)
+    return d[0], rows[0], cert[0]

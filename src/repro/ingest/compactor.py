@@ -121,8 +121,18 @@ class Compactor:
                 eng._bg_step(force=force)
                 with self._cv:
                     self._cv.notify_all()    # backpressured inserters, drains
+                self._notify_external()      # sharded router's shared budget
         except BaseException as e:           # park for the foreground thread
             self.error = e
             with self._cv:
                 self._drain_done = self._drain_req
                 self._cv.notify_all()
+            self._notify_external()
+
+    def _notify_external(self) -> None:
+        """Poke the engine's optional external debt condition — the
+        sharded router's shared backpressure budget waits on it."""
+        cv = getattr(self._engine, "debt_cv", None)
+        if cv is not None:
+            with cv:
+                cv.notify_all()

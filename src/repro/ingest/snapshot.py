@@ -14,14 +14,22 @@ are bit-identical whether a row sits in a level-3 run, a fresh level-0
 run, or the frozen buffer (the buffer is scanned brute-force with the
 same ``euclidean_sq`` kernels the SIMS verifier uses).  That is what lets
 the concurrent engine return the same answers as the synchronous one at
-every interleaving point.  Offsets keep their PR-1 semantics — they
-address the raw array of the component that produced them (buffer hits
-report the row's position in the frozen buffer).
+every interleaving point — and what lets the sharded router return the
+same answers for any shard count.  Answers report *global row ids* (the
+row's absolute position in the insert stream), which the engine threads
+through runs and the frozen buffer alike, so the reported neighbor is
+unambiguous across runs, shards, and restarts.
 
-The single-query and batched entry points mirror
-``CoconutLSM.search_{approx,exact}[_batch]`` exactly; the synchronous
-engine now delegates here with ``buffer=None``, which reproduces its
-historical behavior (unflushed rows invisible until ``flush()``).
+Every exact entry point accepts an external ``bsf`` bound (the sharded
+router's best-so-far chain): it prunes the scan but is never returned as
+an answer.  ``key_fence`` carries the z-order key range of everything the
+snapshot can see (runs + frozen buffer), letting the router skip whole
+shards whose fence mindist bound cannot beat the chain's bsf.
+
+The single-query entry points are thin wrappers over the batched ones
+(Q=1) and keep the deprecated scalar return through
+:func:`repro.core.tree.as_scalar_result` — one scalar shim for the whole
+stack.
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ class FrozenBuffer:
     """Point-in-time copy of the not-yet-flushed insert tail."""
     raw: np.ndarray                    # [M, L] float32, insertion order
     ts: np.ndarray                     # [M] int64
+    ids: np.ndarray                    # [M] int64 global row ids
 
     @property
     def n(self) -> int:
@@ -52,10 +61,11 @@ class FrozenBuffer:
 def _merge_run_topk(cur_d: np.ndarray, cur_off: np.ndarray,
                     new_d: np.ndarray, new_off: np.ndarray, k: int
                     ) -> Tuple[np.ndarray, np.ndarray]:
-    """Merge two per-query ``[Q, k]`` pools.  No offset dedup: offsets
-    from different runs address different raw files.  Stable sort keeps
-    the earlier (newer-component) entry on ties, matching the strict
-    ``d < bsf`` rule of the single-query chain."""
+    """Merge two per-query ``[Q, k]`` pools.  No id dedup needed: every
+    row lives in exactly one component, so its global id appears in at
+    most one pool.  Stable sort keeps the earlier (newer-component) entry
+    on ties, matching the strict ``d < bsf`` rule of the single-query
+    chain."""
     d = np.concatenate([cur_d, new_d], axis=1)
     off = np.concatenate([cur_off, new_off], axis=1)
     sel = np.argsort(d, axis=1, kind="stable")[:, :k]
@@ -71,6 +81,7 @@ class Snapshot:
     mode: str                          # "pp" | "tp" | "btp"
     io: Optional[IOStats] = None
     buffer: Optional[FrozenBuffer] = None
+    key_fence: Optional[Tuple[int, int]] = None   # (lo, hi) z-order bigints
 
     @property
     def n(self) -> int:
@@ -98,32 +109,19 @@ class Snapshot:
     # ---------------------------------------------------------- buffer scans
     def _buffer_rows(self, ts_min: Optional[int]
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """In-window buffer rows and their buffer-relative offsets."""
+        """In-window buffer rows and their global row ids."""
         buf = self.buffer
         if ts_min is None:
-            return buf.raw, np.arange(buf.n, dtype=np.int64)
+            return buf.raw, buf.ids
         keep = np.nonzero(buf.ts >= ts_min)[0]
-        return buf.raw[keep], keep.astype(np.int64)
-
-    def _buffer_best(self, query: np.ndarray, ts_min: Optional[int]
-                     ) -> Tuple[float, int, int]:
-        """(best_d, offset, rows_scanned) over the frozen buffer —
-        brute-force with the same kernel the SIMS verifier uses, so the
-        distance bits match a post-flush search of the same rows."""
-        rows, offs = self._buffer_rows(ts_min)
-        if len(rows) == 0:
-            return np.inf, -1, 0
-        if self.io is not None:
-            self.io.seq_read(len(rows))
-        d = np.asarray(S.euclidean_sq(jnp.asarray(query),
-                                      jnp.asarray(rows)))
-        i = int(np.argmin(d))
-        return float(d[i]), int(offs[i]), len(rows)
+        return buf.raw[keep], buf.ids[keep]
 
     def _buffer_topk(self, queries: np.ndarray, k: int,
                      ts_min: Optional[int]
                      ) -> Tuple[np.ndarray, np.ndarray, int]:
-        """Per-query ``[Q, k]`` pools over the frozen buffer (brute force)."""
+        """Per-query ``[Q, k]`` pools over the frozen buffer — brute-force
+        with the same kernel the SIMS verifier uses, so the distance bits
+        match a post-flush search of the same rows."""
         nq = queries.shape[0]
         best_d = np.full((nq, k), np.inf, np.float32)
         best_off = np.full((nq, k), -1, np.int64)
@@ -142,56 +140,39 @@ class Snapshot:
 
     # ----------------------------------------------------------- single query
     def search_approx(self, query: np.ndarray, *,
+                      k: Optional[int] = None,
                       window: Optional[int] = None,
                       radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Approximate 1-NN over the qualifying runs (Algorithm 4 per run),
-        plus a brute-force pass over the frozen buffer when present."""
-        runs = self._qualifying_runs(window)
-        best = (np.inf, -1)
-        buf_rows = 0
-        if self.buffer is not None:
-            d, off, buf_rows = self._buffer_best(query,
-                                                 self._ts_min(window))
-            if d < best[0]:
-                best = (d, off)
-        for r in runs:
-            d, off, _ = T.approx_search(r.tree, jnp.asarray(query),
-                                        radius_leaves=radius_leaves,
-                                        io=self.io)
-            if d < best[0]:
-                best = (d, off)
-        return best[0], best[1], {"partitions_touched": len(runs),
-                                  "buffer_rows": buf_rows}
+        """Approximate k-NN over the qualifying runs (Algorithm 4 per run)
+        plus the frozen buffer; Q=1 wrapper over the batched path.  The
+        default ``k=None`` keeps the deprecated scalar return."""
+        q = np.asarray(query, np.float32)[None, :]
+        d, off, info = self.search_approx_batch(
+            q, k=1 if k is None else k, window=window,
+            radius_leaves=radius_leaves)
+        if k is None:
+            return (*T.as_scalar_result(d[0], off[0]), info)
+        return d[0], off[0], info
 
     def search_exact(self, query: np.ndarray, *,
+                     k: Optional[int] = None,
                      window: Optional[int] = None,
-                     radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Exact 1-NN: SIMS per qualifying run with a carried bsf
-        (Algorithm 7), plus timestamp post-filtering in ``pp`` mode.  The
-        frozen buffer is scanned first — it is the newest component, and
-        its exact distances seed the bound for every run scan."""
-        runs = self._qualifying_runs(window)
-        ts_min = self._ts_min(window)
-        bsf, bsf_off = np.inf, -1
-        touched = 0
-        cands = 0
-        buf_rows = 0
-        if self.buffer is not None:
-            bsf, bsf_off, buf_rows = self._buffer_best(query, ts_min)
-            cands += buf_rows
-        for r in runs:
-            run_ts_min = self._run_ts_min(r, window, ts_min)
-            d, off, st = T.exact_search(
-                r.tree, jnp.asarray(query), radius_leaves=radius_leaves,
-                io=self.io, ts_min=run_ts_min,
-                bsf=bsf if np.isfinite(bsf) else None)
-            touched += 1
-            cands += st.candidates
-            if d < bsf:
-                bsf, bsf_off = d, off
-        return bsf, bsf_off, {"partitions_touched": touched,
-                              "candidates": cands,
-                              "buffer_rows": buf_rows}
+                     radius_leaves: int = 1,
+                     bsf: Optional[float] = None
+                     ) -> Tuple[float, int, dict]:
+        """Exact k-NN: SIMS per qualifying run with a carried bsf
+        (Algorithm 7), plus timestamp post-filtering in ``pp`` mode; Q=1
+        wrapper over the batched path.  ``bsf`` seeds the chain with an
+        external bound (shard chaining) — it prunes but is never returned.
+        The default ``k=None`` keeps the deprecated scalar return."""
+        q = np.asarray(query, np.float32)[None, :]
+        ext = None if bsf is None else np.asarray([bsf], np.float32)
+        d, off, info = self.search_exact_batch(
+            q, k=1 if k is None else k, window=window,
+            radius_leaves=radius_leaves, bsf=ext)
+        if k is None:
+            return (*T.as_scalar_result(d[0], off[0]), info)
+        return d[0], off[0], info
 
     # -------------------------------------------------------- batched queries
     def search_approx_batch(self, queries: np.ndarray, *,
@@ -201,8 +182,7 @@ class Snapshot:
                             ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched approximate k-NN: one probe per run serves all Q queries.
 
-        Returns (dists ``[Q, k]``, offsets ``[Q, k]``, info).  With k=1,
-        row qi equals ``search_approx(queries[qi])``.
+        Returns (dists ``[Q, k]``, ids ``[Q, k]``, info).
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
@@ -228,18 +208,24 @@ class Snapshot:
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
                            window: Optional[int] = None,
-                           radius_leaves: int = 1
+                           radius_leaves: int = 1,
+                           bsf: Optional[np.ndarray] = None
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
         for the whole batch (vs Q scans in the single-query loop), with the
         per-query k-th-best bound carried run to run (Algorithm 7) and a
-        cross-run top-k merge.  With k=1, row qi equals
-        ``search_exact(queries[qi])``.
+        cross-run top-k merge.
+
+        ``bsf``: optional ``[Q]`` external per-query bounds (the sharded
+        router's cross-shard chain) — combined with the internal k-th-best
+        bound for pruning on every run scan, never returned as an answer.
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
         runs = self._qualifying_runs(window)
         ts_min = self._ts_min(window)
+        ext = (np.full(nq, np.inf, np.float32) if bsf is None
+               else np.asarray(bsf, np.float32))
         best_d = np.full((nq, k), np.inf, np.float32)
         best_off = np.full((nq, k), -1, np.int64)
         touched = 0
@@ -257,7 +243,8 @@ class Snapshot:
             d, off, st = T.exact_search_batch(
                 r.tree, jnp.asarray(queries), k=k,
                 radius_leaves=radius_leaves, io=self.io,
-                ts_min=run_ts_min, bsf=best_d[:, -1])
+                ts_min=run_ts_min,
+                bsf=np.minimum(best_d[:, -1], ext))
             touched += 1
             cands += st.candidates
             cands_pq += st.candidates_per_query

@@ -14,7 +14,8 @@ Layout: ``wal-NNNNNN.log`` files beside the segment files.  Each file is
     +----------------------------------------------+
     | record*: u32 crc32(payload), u32 len,        |
     |          payload = u64 start_row, u32 n,     |
-    |          u32 L, raw f32[n*L], ts i64[n]      |
+    |          u32 L, u32 flags, raw f32[n*L],     |
+    |          ts i64[n][, ids i64[n]]             |
     +----------------------------------------------+
 
 ``start_row`` is the record's absolute position in the insert stream
@@ -57,10 +58,12 @@ __all__ = ["WriteAheadLog", "WALCorruptionError", "FSYNC_POLICIES"]
 
 MAGIC = b"COCOWAL1"
 HEADER_SIZE = 16
-VERSION = 1
+VERSION = 2
 _WAL_RE = re.compile(r"^wal-(\d{6,})\.log$")
 _REC_FMT = "<II"             # crc32(payload), payload length
-_PAY_FMT = "<QII"            # start_row, n, L
+_PAY_FMT = "<QIII"           # start_row, n, L, flags (v2)
+_PAY_FMT_V1 = "<QII"         # start_row, n, L        (v1, read-only)
+_PF_HAS_IDS = 1 << 0         # ids i64[n] trail the timestamps
 FSYNC_POLICIES = ("always", "commit", "never")
 
 
@@ -77,11 +80,14 @@ def _wal_files(root: str) -> List[Tuple[int, str]]:
 
 
 def _read_records(path: str, *, is_last_file: bool
-                  ) -> Iterator[Tuple[int, np.ndarray, np.ndarray]]:
-    """Yield (start_row, raw [n, L], ts [n]) for every intact record.
+                  ) -> Iterator[Tuple[int, np.ndarray, np.ndarray,
+                                      Optional[np.ndarray]]]:
+    """Yield (start_row, raw [n, L], ts [n], ids [n] | None) for every
+    intact record.
 
     A short/corrupt record in the last file ends iteration (torn tail
-    from an interrupted append); anywhere else it raises.
+    from an interrupted append); anywhere else it raises.  Version-1
+    files (no ids) are still readable; their ids come back as None.
     """
     size = os.path.getsize(path)
     with open(path, "rb") as f:
@@ -89,7 +95,7 @@ def _read_records(path: str, *, is_last_file: bool
         if len(head) < HEADER_SIZE or head[:8] != MAGIC:
             raise WALCorruptionError(f"{path}: bad WAL header")
         version, = struct.unpack_from("<I", head, 8)
-        if version != VERSION:
+        if version not in (1, VERSION):
             raise WALCorruptionError(f"{path}: unknown WAL version")
         pos = HEADER_SIZE
         rec_hdr = struct.calcsize(_REC_FMT)
@@ -106,16 +112,26 @@ def _read_records(path: str, *, is_last_file: bool
                     return               # torn tail: interrupted append
                 raise WALCorruptionError(
                     f"{path}: corrupt record at byte {pos}")
-            start_row, n, L = struct.unpack_from(_PAY_FMT, payload, 0)
-            body = payload[struct.calcsize(_PAY_FMT):]
+            if version == 1:
+                start_row, n, L = struct.unpack_from(_PAY_FMT_V1, payload, 0)
+                flags = 0
+                body = payload[struct.calcsize(_PAY_FMT_V1):]
+            else:
+                start_row, n, L, flags = struct.unpack_from(_PAY_FMT,
+                                                            payload, 0)
+                body = payload[struct.calcsize(_PAY_FMT):]
             raw_bytes = 4 * n * L
-            if len(body) != raw_bytes + 8 * n:
+            ids_bytes = 8 * n if flags & _PF_HAS_IDS else 0
+            if len(body) != raw_bytes + 8 * n + ids_bytes:
                 raise WALCorruptionError(
                     f"{path}: record at byte {pos} has inconsistent size")
             raw = np.frombuffer(body[:raw_bytes],
                                 np.float32).reshape(n, L).copy()
-            ts = np.frombuffer(body[raw_bytes:], np.int64).copy()
-            yield start_row, raw, ts
+            ts = np.frombuffer(body[raw_bytes: raw_bytes + 8 * n],
+                               np.int64).copy()
+            ids = (np.frombuffer(body[raw_bytes + 8 * n:], np.int64).copy()
+                   if ids_bytes else None)
+            yield start_row, raw, ts, ids
             pos += rec_hdr + want
 
 
@@ -160,21 +176,30 @@ class WriteAheadLog:
 
     # ----------------------------------------------------------------- append
     @staticmethod
-    def _encode(start_row: int, raw: np.ndarray, ts: np.ndarray) -> bytes:
+    def _encode(start_row: int, raw: np.ndarray, ts: np.ndarray,
+                ids: Optional[np.ndarray] = None) -> bytes:
         raw = np.ascontiguousarray(raw, np.float32)
         ts = np.ascontiguousarray(ts, np.int64)
         n, L = raw.shape
-        payload = (struct.pack(_PAY_FMT, start_row, n, L)
-                   + raw.tobytes() + ts.tobytes())
+        flags = 0
+        tail = b""
+        if ids is not None:
+            flags |= _PF_HAS_IDS
+            tail = np.ascontiguousarray(ids, np.int64).tobytes()
+        payload = (struct.pack(_PAY_FMT, start_row, n, L, flags)
+                   + raw.tobytes() + ts.tobytes() + tail)
         return struct.pack(_REC_FMT, zlib.crc32(payload),
                            len(payload)) + payload
 
     def append(self, raw: np.ndarray, ts: np.ndarray,
-               start_row: int) -> int:
+               start_row: int, ids: Optional[np.ndarray] = None) -> int:
         """Log one insert batch; returns bytes written.  With
         ``fsync="always"`` the record is on stable storage on return —
-        the caller may then ack the insert."""
-        rec = self._encode(start_row, raw, ts)
+        the caller may then ack the insert.  ``ids`` (global row ids) are
+        logged alongside so replay restores exactly the ids the batch was
+        acked with — the sharded router's ids are not reconstructible
+        from the shard-local stream."""
+        rec = self._encode(start_row, raw, ts, ids)
         self._f.write(rec)
         self._f.flush()
         if self.fsync == "always":
@@ -190,18 +215,19 @@ class WriteAheadLog:
         return len(rec)
 
     # --------------------------------------------------------------- rotation
-    def rotate(self, tail: List[Tuple[int, np.ndarray, np.ndarray]]) -> None:
+    def rotate(self, tail: List[Tuple[int, np.ndarray, np.ndarray,
+                                      Optional[np.ndarray]]]) -> None:
         """Supersede every existing WAL file with a fresh one holding only
-        ``tail`` — the (start_row, raw, ts) batches not yet covered by the
-        committed manifest.  Called *after* the manifest commit, so a crash
-        at any point leaves a replayable log.  The new file is always
+        ``tail`` — the (start_row, raw, ts, ids) batches not yet covered by
+        the committed manifest.  Called *after* the manifest commit, so a
+        crash at any point leaves a replayable log.  The new file is always
         fsynced before the old ones are deleted, regardless of policy."""
         old = [f for _, f in _wal_files(self.root)]
         self._f.close()
         self._seq += 1
         self._open_active()
-        for start_row, raw, ts in tail:
-            rec = self._encode(start_row, raw, ts)
+        for start_row, raw, ts, ids in tail:
+            rec = self._encode(start_row, raw, ts, ids)
             self._f.write(rec)
             self._live_bytes += len(rec)
         self._f.flush()
@@ -225,22 +251,23 @@ class WriteAheadLog:
     # ----------------------------------------------------------------- replay
     @staticmethod
     def replay(root: str, start_row: int
-               ) -> List[Tuple[np.ndarray, np.ndarray]]:
-        """Recover every logged (raw, ts) batch from ``start_row`` on.
+               ) -> List[Tuple[np.ndarray, np.ndarray,
+                               Optional[np.ndarray]]]:
+        """Recover every logged (raw, ts, ids) batch from ``start_row`` on.
 
         Walks the WAL files oldest-first, slicing each record to the rows
         not yet consumed (rotation leaves overlapping coverage on purpose;
         content for a given absolute row is identical in every copy).  A
         gap in coverage raises — acked rows would otherwise silently
-        vanish.
+        vanish.  ``ids`` is None for records logged without ids (v1 files).
         """
         files = _wal_files(root)
-        out: List[Tuple[np.ndarray, np.ndarray]] = []
+        out: List[Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]] = []
         nxt = start_row
         for i, (_, name) in enumerate(files):
             path = os.path.join(root, name)
             last = i == len(files) - 1
-            for s, raw, ts in _read_records(path, is_last_file=last):
+            for s, raw, ts, ids in _read_records(path, is_last_file=last):
                 n = len(raw)
                 if s + n <= nxt:
                     continue             # fully consumed by committed runs
@@ -249,7 +276,8 @@ class WriteAheadLog:
                         f"{path}: gap in WAL coverage — have rows up to "
                         f"{nxt}, next record starts at {s}")
                 lo = nxt - s
-                out.append((raw[lo:], ts[lo:]))
+                out.append((raw[lo:], ts[lo:],
+                            None if ids is None else ids[lo:]))
                 nxt = s + n
         return out
 

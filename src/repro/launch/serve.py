@@ -27,6 +27,14 @@ a fresh store is created there.  Every flush commits the manifest and
 ``--checkpoint-every`` adds step-aligned flushes on top; the WAL makes
 every acked insert crash-safe between commits.
 
+With ``--shards N`` the index is a ``ShardedCoconutLSM``: inserts route
+by z-order key range to N shards (each a full CoconutLSM with its own
+WAL + compactor under a shared backpressure budget), probe micro-batches
+fan out cheapest-shard-first with best-so-far chaining, and the run
+reports aggregated ingest metrics plus shards touched/pruned per probe
+batch.  ``--data-dir`` then names a ShardDirectory (per-shard stores +
+one atomic top-level manifest).
+
 Usage: PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
            --steps 32 --batch 4 --probe-batch 8 --concurrent \
            --data-dir /tmp/coconut-serve --checkpoint-every 16
@@ -75,9 +83,17 @@ def main(argv=None) -> None:
     ap.add_argument("--max-debt", type=int, default=4,
                     help="backpressure threshold: insert blocks once this "
                          "many flush/merge units are outstanding")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="key-range-partition the streaming index into N "
+                         "CoconutLSM shards behind a z-order router "
+                         "(inserts route by interleaved key, probes fan "
+                         "out cheapest-shard-first with bsf chaining)")
     ap.add_argument("--data-dir", default=None,
                     help="persist the index here: reopen if a manifest "
-                         "exists, else create a new segment store")
+                         "exists, else create a new segment store (with "
+                         "--shards N: one ShardDirectory of per-shard "
+                         "stores under a single atomic top-level "
+                         "manifest)")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="extra flush + manifest commit every N decode "
                          "steps; the WAL already covers acked inserts "
@@ -104,22 +120,65 @@ def main(argv=None) -> None:
     tokens = jnp.argmax(last, -1)[:, None]
 
     icfg = SummaryConfig(series_len=64, segments=16, bits=8)
-    store = None
     if args.data_dir:
-        from ..storage import SegmentStore
-        store = SegmentStore(args.data_dir)
-    if store is not None and store.exists():
-        index = CoconutLSM.open(store, concurrent=args.concurrent,
-                                wal_fsync=args.wal_fsync,
-                                max_debt=args.max_debt)
-        print(f"reopened {store.describe()}: {index.n} entries in "
-              f"{len(index.runs)} runs (clock={index.clock})")
+        # refuse to shadow one persisted layout with the other: a
+        # sharded dir holds SHARDS.json, an unsharded store MANIFEST.json
+        import os
+
+        from ..storage.store import MANIFEST_NAME, SHARDS_NAME
+        has_single = os.path.exists(
+            os.path.join(args.data_dir, MANIFEST_NAME))
+        has_sharded = os.path.exists(
+            os.path.join(args.data_dir, SHARDS_NAME))
+        if args.shards > 1 and has_single:
+            raise SystemExit(
+                f"{args.data_dir} holds an unsharded index "
+                "(MANIFEST.json); rerun without --shards or pick "
+                "another --data-dir")
+        if args.shards <= 1 and has_sharded:
+            raise SystemExit(
+                f"{args.data_dir} holds a sharded index (SHARDS.json); "
+                "rerun with --shards N or pick another --data-dir")
+    store = None
+    if args.shards > 1:
+        from ..distributed.sharded_lsm import ShardedCoconutLSM
+        from ..storage import ShardDirectory
+        if args.data_dir and ShardDirectory(args.data_dir).exists():
+            index = ShardedCoconutLSM.open(args.data_dir,
+                                           concurrent=args.concurrent,
+                                           wal_fsync=args.wal_fsync,
+                                           max_debt=args.max_debt)
+            print(f"reopened {index.describe()}: {index.n} entries in "
+                  f"{len(index.runs)} runs across {index.n_shards} "
+                  f"shards (clock={index.clock})")
+            if index.n_shards != args.shards:
+                print(f"note: --shards {args.shards} ignored — "
+                      f"{args.data_dir} is partitioned into "
+                      f"{index.n_shards} shards and reopening keeps the "
+                      "persisted layout (re-shard via a fresh data dir)")
+        else:
+            index = ShardedCoconutLSM(icfg, shards=args.shards,
+                                      buffer_capacity=64, leaf_size=32,
+                                      mode="btp", data_dir=args.data_dir,
+                                      concurrent=args.concurrent,
+                                      wal_fsync=args.wal_fsync,
+                                      max_debt=args.max_debt)
     else:
-        index = CoconutLSM(icfg, buffer_capacity=64, leaf_size=32,
-                           mode="btp", store=store,
-                           concurrent=args.concurrent,
-                           wal_fsync=args.wal_fsync,
-                           max_debt=args.max_debt)
+        if args.data_dir:
+            from ..storage import SegmentStore
+            store = SegmentStore(args.data_dir)
+        if store is not None and store.exists():
+            index = CoconutLSM.open(store, concurrent=args.concurrent,
+                                    wal_fsync=args.wal_fsync,
+                                    max_debt=args.max_debt)
+            print(f"reopened {store.describe()}: {index.n} entries in "
+                  f"{len(index.runs)} runs (clock={index.clock})")
+        else:
+            index = CoconutLSM(icfg, buffer_capacity=64, leaf_size=32,
+                               mode="btp", store=store,
+                               concurrent=args.concurrent,
+                               wal_fsync=args.wal_fsync,
+                               max_debt=args.max_debt)
 
     base = T + (cfg.frontend_tokens
                 if cfg.frontend != "none" and not cfg.is_encdec else 0)
@@ -150,7 +209,7 @@ def main(argv=None) -> None:
         index.insert(h)
         rows_ingested += len(h)
         pending.append(h[0])          # one probe per step (sequence 0)
-        if store is not None and args.checkpoint_every \
+        if args.data_dir and args.checkpoint_every \
                 and (s + 1) % args.checkpoint_every == 0:
             # periodic durable checkpoint: inline flush+commit for the
             # synchronous engine, a non-blocking commit request for the
@@ -169,20 +228,24 @@ def main(argv=None) -> None:
         probes_answered += len(pending)
         last_d = float(d[-1, 0])
     lag_at_end = index.ingest_lag()
-    if store is not None:
-        index.flush()                 # final checkpoint: commit manifest
-        print(f"checkpointed {store.describe()}")
+    if args.data_dir:
+        index.flush()                 # final checkpoint: commit manifests
+        print(f"checkpointed "
+              f"{store.describe() if store is not None else index.describe()}")
     im = index.ingest.snapshot()
     index.close()
     qps = probes_answered / max(sum(probe_lat), 1e-9)
     mode = "concurrent" if args.concurrent else "inline"
+    shard_note = (f" shards touched={st.get('shards_touched', 1)}/"
+                  f"pruned={st.get('shards_pruned', 0)}"
+                  if args.shards > 1 and isinstance(st, dict) else "")
     print(f"arch={args.arch} [{mode}]: {args.steps} steps x {B} seqs in "
           f"{dt*1e3:.0f} ms ({args.steps*B/dt:.1f} tok/s); "
           f"index={index.n} entries/{len(index.runs)} runs; "
           f"kNN(window={args.knn_window},k={args.knn_k}) "
           f"{probes_answered} probes in {len(probe_lat)} micro-batches "
           f"of {args.probe_batch} ({qps:.1f} probes/s) last_d={last_d:.4f} "
-          f"partitions={st['partitions_touched']}")
+          f"partitions={st['partitions_touched']}{shard_note}")
     lat = (f"p50={_pctl(probe_lat, 50)*1e3:.1f} ms "
            f"p99={_pctl(probe_lat, 99)*1e3:.1f} ms "
            f"max={max(probe_lat)*1e3:.1f} ms" if probe_lat else "n/a")

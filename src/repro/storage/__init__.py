@@ -6,8 +6,8 @@ manifest commit protocol, and the recovery rules.
 from .external_sort import build_external
 from .segment import (Segment, SegmentFormatError, SegmentWriter,
                       exact_search_mmap, write_segment)
-from .store import SegmentStore
+from .store import SegmentStore, ShardDirectory
 
 __all__ = ["Segment", "SegmentWriter", "SegmentFormatError",
-           "SegmentStore", "build_external", "exact_search_mmap",
-           "write_segment"]
+           "SegmentStore", "ShardDirectory", "build_external",
+           "exact_search_mmap", "write_segment"]

@@ -19,6 +19,7 @@ needs:
     |                                    materialized, original    |
     |                                    order otherwise)          |
     | fences      [ceil(N/leaf), n_words] uint32  leaf-first keys  |
+    | ids         [N]          int64    global row ids (optional)  |
     +--------------------------------------------------------------+
     | footer (20 B): magic, n, header-crc echo                     |
     +--------------------------------------------------------------+
@@ -64,13 +65,17 @@ VERSION = 1
 F_MATERIALIZED = 1 << 0    # raw block is co-sorted with the keys
 F_HAS_TS = 1 << 1          # timestamps column present
 F_HAS_RAW = 1 << 2         # raw block present
+F_HAS_IDS = 1 << 3         # global row ids column present
 
+# "ids" appended LAST so the positional column table of pre-ids files
+# still parses: their header's 8th entry reads as zero padding (0, 0, 0),
+# which matches the absent-column layout when F_HAS_IDS is clear.
 _COLUMNS = ("keys", "codes", "paas", "offsets", "timestamps", "raw",
-            "fences")
+            "fences", "ids")
 _DTYPES = {
     "keys": np.uint32, "codes": np.uint8, "paas": np.float32,
     "offsets": np.int64, "timestamps": np.int64, "raw": np.float32,
-    "fences": np.uint32,
+    "fences": np.uint32, "ids": np.int64,
 }
 
 # header: magic, crc, version, flags, n, L, w, b, leaf, n_words, n_fences
@@ -88,7 +93,7 @@ def _align(off: int) -> int:
 
 
 def _layout(n: int, cfg: S.SummaryConfig, leaf_size: int,
-            has_ts: bool, has_raw: bool) -> dict:
+            has_ts: bool, has_raw: bool, has_ids: bool = False) -> dict:
     """Column name -> (offset, nbytes, shape).  Deterministic given the
     header fields, so the writer can place columns before any data exists."""
     w, nw, L = cfg.segments, cfg.n_words, cfg.series_len
@@ -98,6 +103,7 @@ def _layout(n: int, cfg: S.SummaryConfig, leaf_size: int,
         "offsets": (n,), "timestamps": (n,) if has_ts else None,
         "raw": (n, L) if has_raw else None,
         "fences": (n_fences, nw),
+        "ids": (n,) if has_ids else None,
     }
     out, off = {}, HEADER_SIZE
     for name in _COLUMNS:
@@ -128,6 +134,7 @@ class SegmentWriter:
     def __init__(self, path: str, cfg: S.SummaryConfig, n: int, *,
                  leaf_size: int = 256, materialized: bool = True,
                  has_timestamps: bool = False, has_raw: bool = True,
+                 has_ids: bool = False,
                  io: Optional[IOStats] = None):
         if materialized and not has_raw:
             raise ValueError("materialized segment requires the raw block")
@@ -138,9 +145,10 @@ class SegmentWriter:
         self.materialized = bool(materialized)
         self.has_ts = bool(has_timestamps)
         self.has_raw = bool(has_raw)
+        self.has_ids = bool(has_ids)
         self.io = io
         self._layout = _layout(self.n, cfg, self.leaf_size,
-                               self.has_ts, self.has_raw)
+                               self.has_ts, self.has_raw, self.has_ids)
         self._pos = {name: 0 for name in _COLUMNS}   # rows written per col
         self._crc = {name: 0 for name in _COLUMNS}
         self._fences: list[np.ndarray] = []
@@ -173,7 +181,8 @@ class SegmentWriter:
     def append(self, keys: np.ndarray, codes: np.ndarray, paas: np.ndarray,
                offsets: np.ndarray,
                timestamps: Optional[np.ndarray] = None,
-               raw: Optional[np.ndarray] = None) -> None:
+               raw: Optional[np.ndarray] = None,
+               ids: Optional[np.ndarray] = None) -> None:
         """Append a batch of *sorted-order* rows to every sorted column.
 
         ``raw`` is required (and co-sorted) iff the segment is
@@ -189,6 +198,10 @@ class SegmentWriter:
             if timestamps is None:
                 raise ValueError("segment expects timestamps")
             self._put("timestamps", timestamps)
+        if self.has_ids:
+            if ids is None:
+                raise ValueError("segment expects global row ids")
+            self._put("ids", ids)
         if self.materialized:
             if raw is None:
                 raise ValueError("materialized segment expects raw rows")
@@ -241,7 +254,8 @@ class SegmentWriter:
     def _header_bytes(self) -> bytes:
         flags = ((F_MATERIALIZED if self.materialized else 0)
                  | (F_HAS_TS if self.has_ts else 0)
-                 | (F_HAS_RAW if self.has_raw else 0))
+                 | (F_HAS_RAW if self.has_raw else 0)
+                 | (F_HAS_IDS if self.has_ids else 0))
         n_fences = self._layout["fences"][2][0]
         head = bytearray(HEADER_SIZE)
         struct.pack_into(_HEAD_FMT, head, 0, MAGIC, 0, VERSION, flags,
@@ -268,15 +282,18 @@ def write_segment(path: str, tree, *, io: Optional[IOStats] = None) -> None:
     """
     has_ts = tree.timestamps is not None
     has_raw = tree.raw is not None or tree.raw_ref is not None
+    has_ids = tree.ids is not None
     w = SegmentWriter(path, tree.cfg, tree.n, leaf_size=tree.leaf_size,
                       materialized=tree.materialized,
-                      has_timestamps=has_ts, has_raw=has_raw, io=io)
+                      has_timestamps=has_ts, has_raw=has_raw,
+                      has_ids=has_ids, io=io)
     try:
         w.append(np.asarray(tree.keys), np.asarray(tree.codes),
                  np.asarray(tree.paas), np.asarray(tree.offsets),
                  timestamps=(np.asarray(tree.timestamps)
                              if has_ts else None),
-                 raw=np.asarray(tree.raw) if tree.materialized else None)
+                 raw=np.asarray(tree.raw) if tree.materialized else None,
+                 ids=np.asarray(tree.ids) if has_ids else None)
         if has_raw and not tree.materialized:
             w.append_raw(np.asarray(tree.raw_ref))
         w.finalize()
@@ -325,7 +342,8 @@ class Segment:
         pos = struct.calcsize(_HEAD_FMT)
         cols, crcs = {}, {}
         lay = _layout(n, cfg, leaf,
-                      bool(flags & F_HAS_TS), bool(flags & F_HAS_RAW))
+                      bool(flags & F_HAS_TS), bool(flags & F_HAS_RAW),
+                      bool(flags & F_HAS_IDS))
         for name in _COLUMNS:
             off, nbytes, col_crc = struct.unpack_from(_COL_FMT, head, pos)
             pos += struct.calcsize(_COL_FMT)
@@ -388,6 +406,10 @@ class Segment:
         return self.columns["raw"]
 
     @property
+    def ids(self) -> Optional[np.memmap]:
+        return self.columns["ids"]
+
+    @property
     def fences(self) -> np.memmap:
         return self.columns["fences"]
 
@@ -429,6 +451,7 @@ class Segment:
         if self.raw is not None:
             block = jnp.asarray(np.asarray(self.raw))
             raw, raw_ref = (block, None) if mat else (None, block)
+        ids = self.ids
         return CoconutTree(
             keys=jnp.asarray(np.asarray(self.keys)),
             codes=jnp.asarray(np.asarray(self.codes)),
@@ -437,6 +460,8 @@ class Segment:
             raw=raw, raw_ref=raw_ref,
             timestamps=(None if ts is None
                         else jnp.asarray(np.asarray(ts))),
+            ids=(None if ids is None
+                 else jnp.asarray(np.asarray(ids))),
             cfg=self.cfg, leaf_size=self.leaf_size)
 
     def iter_sorted(self, batch: int = 8192
@@ -506,7 +531,9 @@ def exact_search_mmap(seg: Segment, queries: np.ndarray, *,
     span = 2 * radius_leaves * seg.leaf_size
     best_d = np.full((nq, k), np.inf, np.float32)
     best_off = np.full((nq, k), -1, np.int64)
-    offs_mm = seg.offsets
+    # report global row ids when the segment carries them (LSM runs),
+    # matching repro.core.tree search on the same data
+    offs_mm = seg.ids if seg.ids is not None else seg.offsets
     for qi in range(nq):
         center = int(leaf[qi]) * seg.leaf_size
         start = min(max(center - span // 2, 0), max(seg.n - span, 0))

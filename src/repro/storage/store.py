@@ -26,17 +26,21 @@ import dataclasses
 import json
 import os
 import re
+import shutil
 from typing import Dict, List, Optional
 
 from ..core import summarization as S
 from ..core.metrics import IOStats
 from .segment import Segment, SegmentFormatError, write_segment
 
-__all__ = ["SegmentStore", "MANIFEST_NAME"]
+__all__ = ["SegmentStore", "ShardDirectory", "MANIFEST_NAME", "SHARDS_NAME"]
 
 MANIFEST_NAME = "MANIFEST.json"
+SHARDS_NAME = "SHARDS.json"
 _SEG_RE = re.compile(r"^seg-(\d{6})\.coco$")
+_SHARD_DIR_RE = re.compile(r"^shard-\d{3}-g\d+$")
 MANIFEST_VERSION = 1
+SHARDS_VERSION = 1
 
 
 def _fsync_dir(path: str) -> None:
@@ -45,6 +49,19 @@ def _fsync_dir(path: str) -> None:
         os.fsync(fd)
     finally:
         os.close(fd)
+
+
+def write_json_atomic(path: str, obj: dict) -> None:
+    """Write + fsync ``path.tmp``, then ``os.replace`` — the one atomic
+    commit primitive shared by per-shard manifests and the top-level
+    shard manifest.  A crash leaves either the old file or the new one."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path) or ".")
 
 
 @dataclasses.dataclass
@@ -80,13 +97,7 @@ class SegmentStore:
     def commit_manifest(self, manifest: dict) -> None:
         """Atomic manifest replace — THE commit point for every mutation."""
         manifest = dict(manifest, version=MANIFEST_VERSION)
-        tmp = self.manifest_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(manifest, f, indent=1)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.manifest_path)
-        _fsync_dir(self.root)
+        write_json_atomic(self.manifest_path, manifest)
         if self.io is not None:
             self.io.rand_write(1)
 
@@ -201,3 +212,102 @@ class SegmentStore:
                 f"segments, {nruns} live runs, "
                 f"{self.total_bytes() / 1e6:.2f} MB, "
                 f"WAL {self.wal_bytes() / 1e3:.1f} kB)")
+
+
+# ---------------------------------------------------------------------------
+# Multi-shard namespace: one data dir, one atomic top-level manifest
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardDirectory:
+    """One data directory holding N shard stores plus ``SHARDS.json``.
+
+    Layout::
+
+        root/
+          SHARDS.json            <- the atomic top-level commit point
+          shard-000-g0/          <- one full SegmentStore per shard
+            MANIFEST.json  seg-*.coco  wal-*.log
+          shard-001-g0/
+          ...
+
+    ``SHARDS.json`` records the shard count, the routing boundaries
+    (z-order splitter keys), and which subdirectories are live.  It is
+    committed with the same write-fsync-replace protocol as a per-shard
+    manifest, so the *set of shards and their key ranges* changes
+    atomically; each shard's contents stay crash-consistent through its
+    own manifest + WAL.  Rebalancing migrations build a new generation of
+    shard dirs, commit ``SHARDS.json`` pointing at them, then delete the
+    old generation — :meth:`cleanup` removes dirs from either side of a
+    crash (new-but-uncommitted, or old-but-superseded).
+    """
+    root: str
+    io: Optional[IOStats] = None
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+
+    @property
+    def meta_path(self) -> str:
+        return os.path.join(self.root, SHARDS_NAME)
+
+    def exists(self) -> bool:
+        return os.path.exists(self.meta_path)
+
+    def load(self) -> Optional[dict]:
+        if not self.exists():
+            return None
+        with open(self.meta_path) as f:
+            meta = json.load(f)
+        if meta.get("version") != SHARDS_VERSION:
+            raise SegmentFormatError(
+                f"{self.meta_path}: unknown shard-manifest version")
+        return meta
+
+    def commit(self, meta: dict) -> None:
+        """Atomically publish shard count / boundaries / live dirs."""
+        meta = dict(meta, version=SHARDS_VERSION)
+        write_json_atomic(self.meta_path, meta)
+        if self.io is not None:
+            self.io.rand_write(1)
+
+    @staticmethod
+    def shard_dir_name(index: int, generation: int = 0) -> str:
+        return f"shard-{index:03d}-g{generation}"
+
+    def shard_store(self, name: str) -> SegmentStore:
+        return SegmentStore(os.path.join(self.root, name), io=self.io)
+
+    def shard_dirs_on_disk(self) -> List[str]:
+        return sorted(d for d in os.listdir(self.root)
+                      if _SHARD_DIR_RE.match(d)
+                      and os.path.isdir(os.path.join(self.root, d)))
+
+    def cleanup(self) -> List[str]:
+        """Remove shard dirs the committed ``SHARDS.json`` doesn't
+        reference — orphans of a crashed migration (either generation)
+        — plus a torn ``SHARDS.json.tmp``.  Returns what was removed."""
+        removed = []
+        tmp = self.meta_path + ".tmp"
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+            removed.append(os.path.basename(tmp))
+        meta = self.load()
+        live = set(meta["dirs"]) if meta else set()
+        for d in self.shard_dirs_on_disk():
+            if d not in live:
+                shutil.rmtree(os.path.join(self.root, d))
+                removed.append(d)
+        return removed
+
+    def describe(self) -> str:
+        meta = self.load()
+        if meta is None:
+            return f"ShardDirectory({self.root}: uncommitted)"
+        stores = [self.shard_store(d) for d in meta["dirs"]]
+        total = sum(s.total_bytes() for s in stores)
+        wal = sum(s.wal_bytes() for s in stores)
+        segs = sum(len(s.segment_files()) for s in stores)
+        return (f"ShardDirectory({self.root}: {len(stores)} shards, "
+                f"{segs} segments, {total / 1e6:.2f} MB, "
+                f"WAL {wal / 1e3:.1f} kB)")

@@ -55,6 +55,57 @@ def test_sharded_sort_and_exact_search():
     assert "DIST_OK" in out
 
 
+def test_batch_fold_bit_parity_and_ts_window():
+    """Satellite (ISSUE 4): the budgeted path is folded into
+    distributed_exact_search_batch — one shard-map body.  Bit-parity vs
+    the single-device mesh (per-row distances are computed by the same
+    contiguous reduction on every shard, so sharding cannot change the
+    bits), including ts_min window filtering and the budget+certified
+    variant; the deprecated pruned wrapper stays answer-identical."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import summarization as S
+        from repro.data.series import random_walk
+        from repro.distributed.sharded_index import build_sharded, \\
+            distributed_exact_search_batch, distributed_exact_search_pruned
+        cfg = S.SummaryConfig(series_len=32, segments=8, bits=4)
+        raw = np.asarray(random_walk(jax.random.PRNGKey(2), 4096, 32))
+        ts = np.arange(4096, dtype=np.int64)
+        qs = jnp.asarray(raw[[5, 900, 2048, 4000]])
+        mesh8 = jax.make_mesh((8, 1), ("data", "model"))
+        mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+        t8 = build_sharded(mesh8, jnp.asarray(raw), cfg, timestamps=ts)
+        t1 = build_sharded(mesh1, jnp.asarray(raw), cfg, timestamps=ts)
+        # full-verify path: 8-shard answer == 1-shard answer, bit for bit
+        d8, r8 = distributed_exact_search_batch(t8, qs, k=3)
+        d1, r1 = distributed_exact_search_batch(t1, qs, k=3)
+        np.testing.assert_array_equal(np.asarray(d8), np.asarray(d1))
+        # ts_min window filtering, vs brute force over the window
+        W = 1500
+        dw8, _ = distributed_exact_search_batch(t8, qs, k=3,
+                                                ts_min=4096 - W)
+        dw1, _ = distributed_exact_search_batch(t1, qs, k=3,
+                                                ts_min=4096 - W)
+        np.testing.assert_array_equal(np.asarray(dw8), np.asarray(dw1))
+        for i, q in enumerate(np.asarray(qs)):
+            bf = np.sort(np.asarray(S.euclidean_sq(
+                jnp.asarray(q), jnp.asarray(raw[-W:]))))[:3]
+            np.testing.assert_allclose(np.asarray(dw8)[i], bf,
+                                       rtol=1e-4, atol=1e-4)
+        # budgeted variant folded into the same body + certified flags
+        db, rb, cert = distributed_exact_search_batch(t8, qs, k=3,
+                                                      budget=1024)
+        assert np.asarray(cert).shape == (4,)
+        np.testing.assert_array_equal(np.asarray(db), np.asarray(d8))
+        # deprecated single-query wrapper keeps its contract
+        dp, rp, cp = distributed_exact_search_pruned(t8, np.asarray(qs)[0],
+                                                     k=3, budget=1024)
+        np.testing.assert_array_equal(np.asarray(dp), np.asarray(d8)[0])
+        print("FOLD_OK", bool(np.asarray(cert).all()), bool(cp))
+    """)
+    assert "FOLD_OK" in out
+
+
 def test_samplesort_balance():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

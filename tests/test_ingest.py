@@ -59,12 +59,12 @@ def test_wal_roundtrip_and_truncation(tmp_path, data):
     wal.append(raw[100:250], np.arange(100, 250, dtype=np.int64), 100)
     wal.close()
     got = WriteAheadLog.replay(root, 0)
-    assert sum(len(r) for r, _ in got) == 250
-    np.testing.assert_array_equal(np.concatenate([r for r, _ in got]),
+    assert sum(len(r) for r, *_ in got) == 250
+    np.testing.assert_array_equal(np.concatenate([r for r, *_ in got]),
                                   raw[:250])
     # skip an already-durable prefix, mid-record
     got = WriteAheadLog.replay(root, 130)
-    assert sum(len(r) for r, _ in got) == 120
+    assert sum(len(r) for r, *_ in got) == 120
     np.testing.assert_array_equal(got[0][0], raw[130:250])
     np.testing.assert_array_equal(got[0][1],
                                   np.arange(130, 250, dtype=np.int64))
@@ -79,7 +79,7 @@ def test_wal_torn_tail_discarded_gap_raises(tmp_path, data):
     with open(wal.active_path, "ab") as f:
         f.write(b"\x01\x02torn-half-record")     # interrupted append
     got = WriteAheadLog.replay(root, 0)
-    assert sum(len(r) for r, _ in got) == 64     # tail dropped, rest intact
+    assert sum(len(r) for r, *_ in got) == 64     # tail dropped, rest intact
     # a gap in coverage (acked rows missing) must raise, not silently skip
     with pytest.raises(WALCorruptionError, match="gap"):
         WriteAheadLog.replay(root, -10)
@@ -91,11 +91,12 @@ def test_wal_rotation_supersedes(tmp_path, data):
     wal = WriteAheadLog(root, fsync="commit")
     wal.append(raw[:300], np.arange(300, dtype=np.int64), 0)
     # rows [0, 256) became durable; rotate down to the 44-row tail
-    wal.rotate([(256, raw[256:300], np.arange(256, 300, dtype=np.int64))])
+    wal.rotate([(256, raw[256:300],
+                np.arange(256, 300, dtype=np.int64), None)])
     wal.close()
     assert len([f for f in os.listdir(root) if f.startswith("wal-")]) == 1
     got = WriteAheadLog.replay(root, 256)
-    assert sum(len(r) for r, _ in got) == 44
+    assert sum(len(r) for r, *_ in got) == 44
     np.testing.assert_array_equal(got[0][0], raw[256:300])
 
 

@@ -1,0 +1,481 @@
+"""ShardedCoconutLSM: the key-range-partitioned multi-shard serving layer.
+
+The acceptance bar (ISSUE 4): for fixed data and queries, exact answers
+(distance bits AND global row ids) from ``ShardedCoconutLSM`` are
+identical for shards in {1, 2, 4} and identical to a single
+``CoconutLSM`` — including under concurrent ingest snapshots and BTP
+window filtering — and shard pruning is observable (shards_touched /
+shards_pruned in the search info, verified candidates not growing with
+shard count).  Multi-shard crash recovery (kill between per-shard
+manifest commits) and boundary round-tripping extend the
+``test_ingest`` / ``test_storage`` patterns.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import keys as K, summarization as S, tree as T
+from repro.core.lsm import CoconutLSM
+from repro.core.windows import window_engine
+from repro.data.series import query_workload, random_walk
+from repro.distributed.router import (KeyRangeRouter, batch_keys,
+                                      fence_mindist_sq, key_fence_of,
+                                      key_range_code_bounds)
+from repro.distributed.sharded_lsm import ShardedCoconutLSM
+
+CFG = S.SummaryConfig(series_len=32, segments=8, bits=4)
+N = 1600
+NQ = 6
+L = 32
+SHARD_COUNTS = (1, 2, 4)
+
+
+@pytest.fixture(scope="module")
+def data():
+    raw = np.asarray(random_walk(jax.random.PRNGKey(0), N, L))
+    queries = np.asarray(query_workload(jax.random.PRNGKey(1),
+                                        jnp.asarray(raw), NQ))
+    return raw, queries
+
+
+def _batches(raw, size=173):
+    for s in range(0, len(raw), size):
+        yield raw[s: s + size]
+
+
+def _fill(engine, raw):
+    for b in _batches(raw):
+        engine.insert(b)
+    engine.flush()
+    return engine
+
+
+@pytest.fixture(scope="module")
+def engines(data):
+    raw, _ = data
+    single = _fill(CoconutLSM(CFG, buffer_capacity=256, leaf_size=32), raw)
+    sharded = {s: _fill(ShardedCoconutLSM(CFG, shards=s,
+                                          buffer_capacity=256,
+                                          leaf_size=32), raw)
+               for s in SHARD_COUNTS}
+    return single, sharded
+
+
+# ------------------------------------------------------- bit-parity (static)
+
+def test_exact_parity_across_shard_counts(data, engines):
+    """THE acceptance criterion: distances AND global ids identical for
+    every shard count, and identical to the unsharded engine."""
+    raw, queries = data
+    single, sharded = engines
+    for k in (1, 3):
+        d_ref, off_ref, _ = single.search_exact_batch(queries, k=k)
+        for s, eng in sharded.items():
+            d, off, info = eng.search_exact_batch(queries, k=k)
+            np.testing.assert_array_equal(d, d_ref, err_msg=f"shards={s}")
+            np.testing.assert_array_equal(off, off_ref,
+                                          err_msg=f"shards={s}")
+            assert info["shards_touched"] + info["shards_pruned"] == s
+    # the reported ids are global insert-stream positions: they index the
+    # original stream directly (brute-force argmin agrees)
+    bf = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
+                                         jnp.asarray(raw)))
+    d1, off1, _ = single.search_exact_batch(queries, k=1)
+    np.testing.assert_array_equal(off1[:, 0], bf.argmin(axis=1))
+
+
+def test_exact_parity_single_query_and_k_kwarg(data, engines):
+    """Satellite: the single-query paths take k= and return length-k
+    arrays matching the batch row; k=None keeps the scalar shim."""
+    raw, queries = data
+    single, sharded = engines
+    eng = sharded[2]
+    d_b, off_b, _ = eng.search_exact_batch(queries, k=3)
+    for qi in range(NQ):
+        d_k, off_k, _ = eng.search_exact(queries[qi], k=3)
+        np.testing.assert_array_equal(d_k, d_b[qi])
+        np.testing.assert_array_equal(off_k, off_b[qi])
+        d_s, off_s, _ = eng.search_exact(queries[qi])     # deprecated path
+        assert (d_s, off_s) == (float(d_b[qi, 0]), int(off_b[qi, 0]))
+        # same contract on the unsharded engine and the bare tree
+        d_u, off_u, _ = single.search_exact(queries[qi], k=3)
+        np.testing.assert_array_equal(d_u, d_b[qi])
+        np.testing.assert_array_equal(off_u, off_b[qi])
+    tree = T.build(jnp.asarray(raw), CFG, leaf_size=32)
+    dt_k, ot_k, _ = T.exact_search(tree, queries[0], k=2)
+    dt_b, ot_b, _ = T.exact_search_batch(tree, queries[:1], k=2)
+    np.testing.assert_array_equal(dt_k, dt_b[0])
+    np.testing.assert_array_equal(ot_k, ot_b[0])
+    da_k, oa_k, _ = T.approx_search(tree, queries[0], k=2)
+    da_b, oa_b, _ = T.approx_search_batch(tree, queries[:1], k=2)
+    np.testing.assert_array_equal(da_k, da_b[0])
+    np.testing.assert_array_equal(oa_k, oa_b[0])
+
+
+@pytest.mark.parametrize("mode", ["pp", "tp", "btp"])
+def test_window_parity_across_shard_counts(data, mode):
+    """BTP window filtering (and pp/tp) cut at the same global-clock
+    instant on every shard — windowed answers are shard-count-invariant."""
+    raw, queries = data
+    single = _fill(CoconutLSM(CFG, buffer_capacity=256, leaf_size=32,
+                              mode=mode), raw)
+    for s in (2, 4):
+        eng = _fill(window_engine(mode, CFG, buffer_capacity=256,
+                                  leaf_size=32, shards=s), raw)
+        for W in (300, 900, None):
+            d_ref, off_ref, _ = single.search_exact_batch(queries, k=2,
+                                                          window=W)
+            d, off, _ = eng.search_exact_batch(queries, k=2, window=W)
+            np.testing.assert_array_equal(d, d_ref)
+            np.testing.assert_array_equal(off, off_ref)
+
+
+def test_approx_fanout_is_sane(data, engines):
+    """Approximate fan-out: merged shard answers are real rows and at
+    least as good as any single shard's local answer."""
+    raw, queries = data
+    _, sharded = engines
+    d, off, info = sharded[4].search_approx_batch(queries, k=1)
+    assert np.all(np.isfinite(d[:, 0])) and np.all(off[:, 0] >= 0)
+    bf = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
+                                         jnp.asarray(raw)))
+    got = bf[np.arange(NQ), off[:, 0]]
+    np.testing.assert_allclose(d[:, 0], got, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- fence pruning
+
+def test_fence_bound_is_a_lower_bound(data):
+    """The key-fence mindist bound never exceeds the true mindist (hence
+    never the true ED) of any row inside the fence."""
+    raw, queries = data
+    keys = batch_keys(raw, CFG)
+    # carve an arbitrary contiguous key range out of the sorted keys
+    chunk = K.lexsort_keys_np(keys)[200:700]
+    lo, hi = key_fence_of(keys[chunk])
+    clo, chi = key_range_code_bounds(lo, hi, CFG)
+    q_paas = np.asarray(S.paa(jnp.asarray(queries), CFG.segments))
+    bound = fence_mindist_sq(q_paas, clo, chi, CFG)          # [Q]
+    _, codes = S.summarize(jnp.asarray(raw), CFG)
+    md = np.asarray(S.mindist_sq_batch(jnp.asarray(q_paas),
+                                       jnp.asarray(np.asarray(codes)[chunk]),
+                                       CFG))                 # [Q, chunk]
+    assert np.all(bound[:, None] <= md + 1e-5)
+    ed = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
+                                         jnp.asarray(raw[chunk])))
+    assert np.all(bound[:, None] <= ed + 1e-4)
+
+
+def test_shard_pruning_observable(data):
+    """Near-duplicate queries: the home shard's bsf prunes the cold
+    shards whole, and verified candidates do not grow with shard count."""
+    raw, _ = data
+    dup_queries = raw[np.linspace(0, N - 1, NQ, dtype=int)] \
+        + np.float32(1e-3)
+    cands = {}
+    for s in (1, 4, 8):
+        eng = _fill(ShardedCoconutLSM(CFG, shards=s, buffer_capacity=256,
+                                      leaf_size=32), raw)
+        d, off, info = eng.search_exact_batch(dup_queries, k=1)
+        assert info["shards_touched"] >= 1
+        if s > 1:
+            assert info["shards_pruned"] >= 1, info
+        cands[s] = int(info["candidates_per_query"].sum())
+        # stats surface through SearchStats too
+        st = info["stats"]
+        assert st.shards_touched == info["shards_touched"]
+        assert st.shards_pruned == info["shards_pruned"]
+    assert cands[8] <= 2 * cands[1]
+
+
+def test_router_roundtrip_and_routing_matches_samplesort_rule(data):
+    raw, _ = data
+    keys = batch_keys(raw, CFG)
+    router = KeyRangeRouter(CFG, 4)
+    assert router.ensure_boundaries(keys)
+    dest = router.route(keys)
+    assert dest.min() >= 0 and dest.max() <= 3
+    # quantile splitters keep the first batch roughly balanced
+    counts = np.bincount(dest, minlength=4)
+    assert counts.max() <= 2 * len(keys) // 4
+    # boundaries survive JSON round-trip bit-exactly
+    back = KeyRangeRouter.boundaries_from_json(router.boundaries_json())
+    np.testing.assert_array_equal(back, router.boundaries)
+
+
+# -------------------------------------------------- concurrent-ingest parity
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(300)
+def test_concurrent_sharded_parity(data):
+    """At every interleaving point, the concurrent sharded engine's
+    snapshot answers (runs in whatever per-shard compaction state the
+    background threads reached + frozen buffers) are bit-identical to
+    the synchronous single engine over the same inserts."""
+    raw, queries = data
+    sync = CoconutLSM(CFG, buffer_capacity=128, leaf_size=32)
+    with ShardedCoconutLSM(CFG, shards=3, buffer_capacity=128,
+                           leaf_size=32, concurrent=True,
+                           max_debt=4) as conc:
+        for b in _batches(raw, 211):
+            sync.insert(b)
+            sync.flush()                 # sync searches only see runs
+            conc.insert(b)               # compactors race the searches
+            d_s, off_s, _ = sync.search_exact_batch(queries, k=2)
+            d_c, off_c, _ = conc.search_exact_batch(queries, k=2)
+            np.testing.assert_array_equal(d_s, d_c)
+            np.testing.assert_array_equal(off_s, off_c)
+            dw_s, ow_s, _ = sync.search_exact_batch(queries, k=1,
+                                                    window=400)
+            dw_c, ow_c, _ = conc.search_exact_batch(queries, k=1,
+                                                    window=400)
+            np.testing.assert_array_equal(dw_s, dw_c)
+            np.testing.assert_array_equal(ow_s, ow_c)
+        conc.flush()
+        conc.check_invariants()
+        assert conc.n == sync.n == N
+
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(180)
+def test_shared_backpressure_bounds_total_debt(data):
+    """The budget is shared: TOTAL outstanding debt across shards stays
+    bounded even when every shard compacts concurrently."""
+    raw, _ = data
+    with ShardedCoconutLSM(CFG, shards=3, buffer_capacity=64,
+                           leaf_size=32, concurrent=True,
+                           max_debt=2) as eng:
+        seen = 0
+        for b in _batches(raw, 50):
+            eng.insert(b)
+            seen = max(seen, eng.compaction_debt())
+        # insert() returns only once total debt <= max_debt; right after,
+        # the next batch can add at most one unit per shard it touched
+        assert seen <= eng.max_debt + eng.n_shards
+        eng.flush()
+        assert eng.n == N
+        assert eng.ingest.get("bg_flushes") > 0
+
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(180)
+def test_search_during_sharded_ingest(data):
+    """Queries answer consistent prefixes while an ingest thread hammers
+    routed inserts and per-shard compactors churn underneath."""
+    raw, queries = data
+    stop = threading.Event()
+    with ShardedCoconutLSM(CFG, shards=2, buffer_capacity=128,
+                           leaf_size=32, concurrent=True,
+                           max_debt=3) as eng:
+
+        def ingest():
+            for b in _batches(raw, 64):
+                if stop.is_set():
+                    return
+                eng.insert(b)
+
+        t = threading.Thread(target=ingest)
+        t.start()
+        done = False
+        try:
+            for _ in range(10):
+                d, off, _ = eng.search_exact(queries[0])
+                if np.isfinite(d):
+                    # the id is a global stream position; its row's true
+                    # distance must equal the reported distance
+                    true = float(np.asarray(S.euclidean_sq(
+                        jnp.asarray(queries[0]),
+                        jnp.asarray(raw[off][None])))[0])
+                    assert abs(d - true) < 1e-4
+            done = True
+        finally:
+            if not done:                 # abort the ingester on failure;
+                stop.set()               # otherwise let it finish the
+            t.join()                     # stream before the final check
+        eng.flush()
+        d, off, _ = eng.search_exact(queries[0])
+        bf = np.asarray(S.euclidean_sq(jnp.asarray(queries[0]),
+                                       jnp.asarray(raw)))
+        assert abs(d - bf.min()) < 1e-4 and off == bf.argmin()
+
+
+def test_snapshot_set_atomic_under_stuck_epoch(data, engines):
+    """A search that keeps finding the insert epoch mid-flight falls
+    back to the ingest mutex for a guaranteed-atomic multi-shard cut
+    (bounded wait, correct answers)."""
+    raw, queries = data
+    single, sharded = engines
+    eng = sharded[2]
+    with eng._state_lock:
+        eng._epoch += 1                  # simulate a batch stuck in flight
+    try:
+        d, off, _ = eng.search_exact_batch(queries, k=1)
+    finally:
+        with eng._state_lock:
+            eng._epoch += 1
+    d_ref, off_ref, _ = single.search_exact_batch(queries, k=1)
+    np.testing.assert_array_equal(d, d_ref)
+    np.testing.assert_array_equal(off, off_ref)
+
+
+# --------------------------------------------------- durability + recovery
+
+@pytest.mark.disk
+def test_multi_shard_crash_between_manifest_commits(tmp_path, data):
+    """Kill between per-shard manifest commits: shard 0 committed its
+    flush, shard 1 still holds acked rows only in its WAL.  Reopen must
+    recover every acked row, round-trip the routing boundaries, and
+    answer exactly as before the crash."""
+    raw, queries = data
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=4096,
+                            leaf_size=32, data_dir=str(tmp_path),
+                            wal_fsync="always")
+    for b in _batches(raw[:1000], 200):
+        eng.insert(b)
+    boundaries = eng.router.boundaries.copy()
+    # flush ONE shard only — the crash point sits between the two
+    # per-shard manifest commits of a full checkpoint
+    eng._shards[0].flush()
+    d0, off0, _ = eng.search_exact_batch(
+        queries, k=2)                    # pre-crash truth: runs + buffers
+    del eng                              # crash: no close, no full flush
+
+    re = ShardedCoconutLSM.open(str(tmp_path))
+    assert re.n == 1000                  # no acked row lost
+    np.testing.assert_array_equal(re.router.boundaries, boundaries)
+    re.flush()
+    d1, off1, _ = re.search_exact_batch(queries, k=2)
+    # WAL replay restored global ids and timestamps, so the recovered
+    # answers carry the same bits AND the same ids
+    sync = _fill(CoconutLSM(CFG, buffer_capacity=256, leaf_size=32),
+                 raw[:1000])
+    d_ref, off_ref, _ = sync.search_exact_batch(queries, k=2)
+    np.testing.assert_array_equal(d1, d_ref)
+    np.testing.assert_array_equal(off1, off_ref)
+    # the reopened engine keeps ingesting, ids continue past the max
+    re.insert(raw[1000:1200])
+    assert re.n == 1200
+    re.close()
+
+
+@pytest.mark.disk
+@pytest.mark.concurrency
+@pytest.mark.timeout(180)
+def test_concurrent_sharded_close_is_durable(tmp_path, data):
+    raw, _ = data
+    with ShardedCoconutLSM(CFG, shards=2, buffer_capacity=128,
+                           leaf_size=32, data_dir=str(tmp_path),
+                           concurrent=True) as eng:
+        for b in _batches(raw[:500], 90):
+            eng.insert(b)
+    re = ShardedCoconutLSM.open(str(tmp_path))
+    assert re.n == 500
+    re.close()
+
+
+@pytest.mark.disk
+def test_sharded_store_refuses_silent_overwrite(tmp_path, data):
+    raw, _ = data
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=256,
+                            leaf_size=32, data_dir=str(tmp_path))
+    eng.insert(raw[:300])
+    eng.flush()
+    eng.close()
+    with pytest.raises(ValueError, match="reopen"):
+        ShardedCoconutLSM(CFG, shards=2, data_dir=str(tmp_path))
+
+
+# -------------------------------------------------------------- rebalancing
+
+def test_rebalance_preserves_answers_and_improves_balance(data):
+    """A skewed stream (sorted by key) piles onto few shards; rebalance
+    migrates under re-estimated boundaries with ids/timestamps preserved
+    — answers are bit-identical before and after."""
+    raw, queries = data
+    keys = batch_keys(raw, CFG)
+    skewed = raw[K.lexsort_keys_np(keys)]   # key-sorted insert order
+    eng = ShardedCoconutLSM(CFG, shards=4, buffer_capacity=256,
+                            leaf_size=32)
+    # boundaries estimated from the FIRST batch — a prefix of the sorted
+    # stream — so later batches all route to the last shard
+    for b in _batches(skewed, 200):
+        eng.insert(b)
+    eng.flush()
+    sizes_before = eng.shard_sizes()
+    assert max(sizes_before) > 2 * N // 4       # genuinely skewed
+    d0, off0, _ = eng.search_exact_batch(queries, k=3)
+    assert eng.rebalance(force=True)
+    sizes_after = eng.shard_sizes()
+    assert eng.n == N
+    assert max(sizes_after) < max(sizes_before)
+    d1, off1, _ = eng.search_exact_batch(queries, k=3)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(off0, off1)
+    eng.check_invariants()
+
+
+@pytest.mark.disk
+def test_failed_migration_cleans_up_and_retries(tmp_path, data,
+                                                monkeypatch):
+    """A migration that dies mid-fill must retire its half-built
+    generation in-process: the next rebalance() retries cleanly instead
+    of tripping the 'already holds a committed index' guard on the
+    leftover dirs, and the old generation keeps serving throughout."""
+    import repro.distributed.sharded_lsm as SL
+    raw, queries = data
+    keys = batch_keys(raw, CFG)
+    skewed = raw[K.lexsort_keys_np(keys)]
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=256,
+                            leaf_size=32, data_dir=str(tmp_path))
+    for b in _batches(skewed, 200):
+        eng.insert(b)
+    eng.flush()
+    d0, off0, _ = eng.search_exact_batch(queries, k=2)
+    real = SL.key_fence_of
+    monkeypatch.setattr(SL, "key_fence_of",
+                        lambda keys: (_ for _ in ()).throw(
+                            RuntimeError("injected mid-fill failure")))
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.rebalance(force=True)
+    monkeypatch.setattr(SL, "key_fence_of", real)
+    d1, off1, _ = eng.search_exact_batch(queries, k=2)   # still serving
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(off0, off1)
+    assert eng.rebalance(force=True)                     # retry succeeds
+    assert eng.n == N
+    d2, off2, _ = eng.search_exact_batch(queries, k=2)
+    np.testing.assert_array_equal(d0, d2)
+    np.testing.assert_array_equal(off0, off2)
+    eng.close()
+    re = ShardedCoconutLSM.open(str(tmp_path))           # reopens clean
+    assert re.n == N
+    re.close()
+
+
+@pytest.mark.disk
+def test_rebalance_durable_generation_swap(tmp_path, data):
+    """Store-backed rebalance: a new generation of shard dirs is
+    committed atomically in SHARDS.json and the old one retired; reopen
+    sees the rebalanced layout and identical answers."""
+    raw, queries = data
+    keys = batch_keys(raw, CFG)
+    skewed = raw[K.lexsort_keys_np(keys)]
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=256,
+                            leaf_size=32, data_dir=str(tmp_path))
+    for b in _batches(skewed, 200):
+        eng.insert(b)
+    eng.flush()
+    d0, off0, _ = eng.search_exact_batch(queries, k=2)
+    assert eng.rebalance(force=True)
+    gen_dirs = set(eng._dirs)
+    eng.close()
+    re = ShardedCoconutLSM.open(str(tmp_path))
+    assert set(re._dirs) == gen_dirs            # old generation retired
+    assert re.n == N
+    d1, off1, _ = re.search_exact_batch(queries, k=2)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(off0, off1)
+    re.close()

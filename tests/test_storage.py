@@ -347,6 +347,36 @@ def test_store_refuses_silent_overwrite(tmp_path, data):
         CoconutLSM(CFG, store=SegmentStore(str(tmp_path / "lsm")))
 
 
+def test_pre_ids_store_upgrades_on_open(tmp_path, data):
+    """Stores written before the global-ids column existed reopen with
+    synthesized unique ids (oldest-first run bases + per-run offsets),
+    so later merges with new id-carrying runs never drop the column or
+    report ambiguous component-local offsets as ids."""
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    store = SegmentStore(str(tmp_path / "lsm"))
+    old = T.build(raw[: N // 2], CFG, leaf_size=64,
+                  timestamps=jnp.arange(N // 2))      # NO ids column
+    f = store.write_tree(old)
+    store.commit_manifest(SegmentStore.manifest_for(
+        CFG, [{"file": f, "level": 3, "t_min": 0, "t_max": N // 2 - 1}],
+        clock=N // 2, mode="btp", buffer_capacity=512, leaf_size=64,
+        size_ratio=2, materialized=True, merges=0, wal_start=N // 2))
+    re = CoconutLSM.open(store)
+    assert re.runs[0].tree.ids is not None            # synthesized
+    # new inserts merge with the upgraded run without losing ids
+    re.insert(raw_np[N // 2:])
+    re.flush()
+    re.check_invariants()
+    assert all(r.tree.ids is not None for r in re.runs)
+    d, off, _ = re.search_exact(np.asarray(queries[0]))
+    bf = np.asarray(S.euclidean_sq(queries[0], raw))
+    assert abs(d - bf.min()) < 1e-3
+    # every reported id is unique across the whole engine
+    all_ids = np.concatenate([np.asarray(r.tree.ids) for r in re.runs])
+    assert len(np.unique(all_ids)) == len(all_ids) == N
+
+
 def test_nonmaterialized_lsm_roundtrip(tmp_path, data):
     raw, queries = data
     store = SegmentStore(str(tmp_path / "lsm"))

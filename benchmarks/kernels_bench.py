@@ -44,6 +44,25 @@ def bench_kernels(n: int = 200000, L: int = 256) -> None:
     emit("kernels/batch_euclid/jnp", us,
          f"GBps={(n * L * 4) / (us * 1e-6) / 1e9:.2f}")
 
+    # fused scan+verify vs the two-step chain it replaces: one pass
+    # computing bound + masked ED + top-k, no host round trip between
+    nq, nv = 8, 50000
+    queries, q_paas = raw[:nq], paa[:nq]
+    bound = jnp.full(nq, jnp.inf, jnp.float32)
+    us = timeit(lambda: block(ops.scan_verify(
+        queries, q_paas, codes[:nv], raw[:nv], bound, cfg,
+        k=5, mode="jnp")[0]))
+    emit("kernels/scan_verify_fused/jnp", us,
+         f"GBps={(nv * (L * 4 + 16)) / (us * 1e-6) / 1e9:.2f}")
+
+    def two_step():
+        md = ops.mindist_batch(q_paas, codes[:nv], cfg, mode="jnp")
+        ed = ops.batch_euclid_multi(queries, raw[:nv], mode="jnp")
+        return block(jnp.where(md < bound[:, None], ed, jnp.inf))
+    us2 = timeit(two_step)
+    emit("kernels/scan_verify_twostep/jnp", us2,
+         f"fused_speedup={us2 / max(us, 1e-9):.2f}x")
+
     # interpret-mode parity spot check (tiny n — interpret is slow)
     small = raw[:512]
     for name, fn_i, fn_j in (

@@ -30,7 +30,7 @@ def _exact_bruteforce(raw, q):
     return float(jnp.min(S.euclidean_sq(q, raw)))
 
 
-def bench_query(sizes=(4000, 16000, 64000)) -> None:
+def bench_query(sizes=(4000, 16000, 64000), *, smoke=False) -> None:
     cfg = cfg_for()
     leaf = 64
     queries = dataset(16, seed=9)
@@ -49,14 +49,25 @@ def bench_query(sizes=(4000, 16000, 64000)) -> None:
         d, off, st = T.exact_search(tree, q)
         emit(f"query/ctree_sims_exact/n{n}", us_ex,
              f"pruned={st.pruned_frac:.3f};cands={st.candidates};"
-             f"leaves={st.leaves_touched}")
+             f"leaves={st.leaves_touched};"
+             f"leaves_pruned={st.leaves_pruned};"
+             f"leaves_scanned={st.leaves_scanned}")
+        if smoke:
+            # planner regression guards: the leaf-fence bounds must
+            # actually skip leaves, and the per-query verified-candidate
+            # count must stay a small fraction of the dataset
+            assert st.leaves_pruned > 0, st
+            assert st.candidates <= n * 0.2, st
 
         us_ap = timeit(lambda: T.approx_search(tree, q)[0], repeat=2)
         emit(f"query/ctree_approx/n{n}", us_ap, "")
 
         # correctness cross-check
         bf = _exact_bruteforce(raw, q)
+        d = float(d[0])
         assert abs(bf - d) < 1e-3, (bf, d)
+    if smoke:
+        return                      # CI smoke: skip the sweeps below
 
     # ---- radius sweep (Fig. 13c/d) ----------------------------------------
     n = 16000
@@ -71,7 +82,8 @@ def bench_query(sizes=(4000, 16000, 64000)) -> None:
                 tree, q, radius_leaves=radius)[0], repeat=1)
             d_ap, _, _ = T.approx_search(tree, q, radius_leaves=radius)
             d_ex = _exact_bruteforce(raw, q)
-            errs.append(np.sqrt(d_ap) / max(np.sqrt(d_ex), 1e-9))
+            errs.append(np.sqrt(float(d_ap[0]))
+                        / max(np.sqrt(d_ex), 1e-9))
             times.append(us)
         emit(f"query/approx_radius{radius}/n{n}", float(np.mean(times)),
              f"dist_ratio={np.mean(errs):.3f}")
@@ -94,6 +106,7 @@ def bench_query(sizes=(4000, 16000, 64000)) -> None:
         q = queries[qi]
         d_ex = _exact_bruteforce(raw, q)
         d_z, _, _ = T.approx_search(tree, q)
+        d_z = float(d_z[0])
         _, q_codes = S.summarize(q[None, :], cfg)
         pos = int(np.searchsorted(
             np.asarray(codes)[lex_order][:, 0], np.asarray(q_codes)[0, 0]))
@@ -139,11 +152,18 @@ def bench_batched_query(n: int = 16000,
         d_b, off_b, _ = T.exact_search_batch(tree, queries)
         for i in range(q_batch):
             d_s, off_s, _ = T.exact_search(tree, queries[i])
-            assert abs(float(d_b[i, 0]) - d_s) < 1e-3, (i, d_b[i, 0], d_s)
-            assert int(off_b[i, 0]) == off_s, (i, off_b[i, 0], off_s)
+            assert abs(float(d_b[i, 0]) - float(d_s[0])) < 1e-3, \
+                (i, d_b[i, 0], d_s)
+            assert int(off_b[i, 0]) == int(off_s[0]), \
+                (i, off_b[i, 0], off_s)
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    if smoke:
+        # tiny planner-regression smoke for CI: one size, batch parity
+        bench_query(sizes=(4000,), smoke=True)
+        bench_batched_query(n=4000, batch_sizes=(1, 8))
+        return
     bench_query()
     bench_batched_query()
 

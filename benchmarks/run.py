@@ -18,6 +18,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                                   shard-prune rate, verified/query
   roofline       (assignment)     arch x shape terms from the dry-run
 """
+import inspect
 import sys
 
 
@@ -34,10 +35,19 @@ def main() -> None:
         "storage": storage, "streaming": streaming,
         "sharded_streaming": sharded_streaming, "roofline": roofline,
     }
-    only = sys.argv[1:] or list(mods)
+    args = sys.argv[1:]
+    # --smoke: tiny CI-sized runs with built-in regression asserts
+    # (planner leaf pruning, candidates/query) for the modules that
+    # support it; the benchmark fails fast instead of silently slowing
+    smoke = "--smoke" in args
+    only = [a for a in args if a != "--smoke"] or list(mods)
     print("name,us_per_call,derived")
     for name in only:
-        mods[name].main()
+        fn = mods[name].main
+        if smoke and "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=True)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

@@ -28,13 +28,15 @@ from .common import cfg_for, dataset, emit
 def bench_sharded(n: int = 24000, batch: int = 256,
                   buffer_capacity: int = 2048,
                   probe_every: int = 8, nq: int = 8,
-                  mode: str = "btp") -> None:
+                  mode: str = "btp", shard_counts=(1, 2, 4, 8),
+                  smoke: bool = False) -> None:
     cfg = cfg_for()
     raw = np.asarray(dataset(n))
     queries = raw[np.linspace(0, n - 1, nq, dtype=int)] \
         + np.float32(0.01)
 
-    for shards in (1, 2, 4, 8):
+    cands_by_shards = {}
+    for shards in shard_counts:
         engine = ShardedCoconutLSM(cfg, shards=shards,
                                    buffer_capacity=buffer_capacity,
                                    leaf_size=64, mode=mode,
@@ -61,6 +63,7 @@ def bench_sharded(n: int = 24000, batch: int = 256,
         sizes = engine.shard_sizes()
         engine.close()
 
+        cands_by_shards[shards] = cands / max(probes, 1)
         lat = np.asarray(probe_lat) * 1e3
         prune_rate = pruned / max(touched + pruned, 1)
         emit(f"sharded_{mode}_s{shards}_ingest", dt / n * 1e6,
@@ -70,9 +73,21 @@ def bench_sharded(n: int = 24000, batch: int = 256,
              f"p50={np.percentile(lat, 50):.1f}ms "
              f"prune_rate={prune_rate:.2f} "
              f"verified/query={cands / max(probes, 1):.0f}")
+    if smoke and len(cands_by_shards) > 1:
+        # planner/bsf-chain regression guard: verified candidates per
+        # query must not blow up with shard count (near-dup probes make
+        # the home shard's bsf tight, so the factor-2 bound is slack)
+        base = cands_by_shards[min(cands_by_shards)]
+        worst = max(cands_by_shards.values())
+        assert worst <= 2 * base + 1, cands_by_shards
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    if smoke:
+        bench_sharded(n=4096, batch=256, buffer_capacity=1024,
+                      probe_every=4, nq=4, shard_counts=(1, 2),
+                      smoke=True)
+        return
     bench_sharded()
 
 

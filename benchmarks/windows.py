@@ -27,7 +27,7 @@ def _run(mode: str, batches, queries, window, leaf=64):
         lsm.flush()
         q = queries[bi % len(queries)]
         _, _, st = lsm.search_exact(q, window=window)
-        touched += st["partitions_touched"]
+        touched += st["partitions_touched"] + st["partitions_pruned"]
     return io, touched, len(lsm.runs)
 
 

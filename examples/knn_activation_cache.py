@@ -69,7 +69,7 @@ def main() -> None:
     probe = (probe - probe.mean()) / (probe.std() + 1e-8)
     for window, label in ((64, "recent-64"), (None, "all-time")):
         d, off, st = cache.search_exact(probe, window=window)
-        print(f"kNN over {label:10s}: d={d:8.4f} "
+        print(f"kNN over {label:10s}: d={float(d[0]):8.4f} "
               f"partitions={st['partitions_touched']}")
     print(f"\ndecoded {STEPS} steps x {B} seqs; "
           f"generation {t_gen*1e3:.0f} ms, ingestion {t_ing*1e3:.0f} ms, "

@@ -50,6 +50,7 @@ def main() -> None:
         lsm.insert(raw[s: s + 2500])
     lsm.flush()
     d0, off0, _ = lsm.search_exact(queries[0])
+    d0, off0 = float(d0[0]), int(off0[0])
     print(f"built   {store.describe()}")
     print(f"        query answer d={d0:.4f} off={off0}")
 
@@ -57,7 +58,8 @@ def main() -> None:
     del lsm                                        # "process exit"
     lsm = CoconutLSM.open(data_dir)
     d1, off1, _ = lsm.search_exact(queries[0])
-    assert (d1, off1) == (d0, off0), "reopened index must answer identically"
+    assert (float(d1[0]), int(off1[0])) == (d0, off0), \
+        "reopened index must answer identically"
     db, ob, _ = lsm.search_exact_batch(queries, k=3)
     print(f"reopened {len(lsm.runs)} runs, {lsm.n} entries "
           f"(clock={lsm.clock}); answers identical ✓")
@@ -72,7 +74,7 @@ def main() -> None:
     lsm = CoconutLSM.open(data_dir)                # runs recovery
     assert set(store.segment_files()) == committed
     d2, off2, _ = lsm.search_exact(queries[0])
-    assert (d2, off2) == (d0, off0)
+    assert (float(d2[0]), int(off2[0])) == (d0, off0)
     print(f"crash demo: orphan {orphan} + torn manifest discarded, "
           "state replayed from last commit ✓")
 

@@ -31,9 +31,11 @@ def main() -> None:
         q = queries[i]
         t0 = time.perf_counter()
         d_ap, off_ap, _ = approx_search(tree, q)
+        d_ap = float(d_ap[0])
         t_ap = time.perf_counter() - t0
         t0 = time.perf_counter()
         d_ex, off_ex, st = exact_search(tree, q)
+        d_ex = float(d_ex[0])
         t_ex = time.perf_counter() - t0
         bf = float(jnp.min(S.euclidean_sq(q, raw)))
         print(f"q{i}: approx d={d_ap:9.4f} ({t_ap*1e3:6.1f} ms)  "

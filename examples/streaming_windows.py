@@ -45,7 +45,8 @@ def main() -> None:
                 t0 = time.perf_counter()
                 d, off, st = lsm.search_exact(q, window=window)
                 totals[mode] += time.perf_counter() - t0
-                touched[mode] += st["partitions_touched"]
+                touched[mode] += (st["partitions_touched"]
+                                  + st["partitions_pruned"])
         if bi % 4 == 3:
             print(f"[batch {bi+1:2d}] runs: "
                   + "  ".join(f"{m}={len(l.runs)}"

@@ -732,27 +732,30 @@ class CoconutLSM:
             fences.extend(part_fences)
         fence = _combine_fences(fences) if fences else None
         return Snapshot(runs=runs, clock=clock, mode=self.mode,
-                        io=self.io, buffer=buf, key_fence=fence)
+                        io=self.io, buffer=buf, key_fence=fence,
+                        cfg=self.cfg)
 
     def search_approx(self, query: np.ndarray, *,
-                      k: Optional[int] = None,
+                      k: int = 1,
                       window: Optional[int] = None,
-                      radius_leaves: int = 1) -> Tuple[float, int, dict]:
+                      radius_leaves: int = 1
+                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Approximate k-NN over a consistent snapshot (Algorithm 4 per
-        run).  ``k=None`` keeps the deprecated scalar return."""
+        run).  Returns (dists ``[k]``, ids ``[k]``, info)."""
         return self.snapshot().search_approx(
             query, k=k, window=window, radius_leaves=radius_leaves)
 
     def search_exact(self, query: np.ndarray, *,
-                     k: Optional[int] = None,
+                     k: int = 1,
                      window: Optional[int] = None,
                      radius_leaves: int = 1,
                      bsf: Optional[float] = None
-                     ) -> Tuple[float, int, dict]:
-        """Exact k-NN over a consistent snapshot: SIMS per qualifying run
-        with a carried bsf (Algorithm 7), plus timestamp post-filtering in
-        ``pp`` mode.  ``bsf`` seeds the chain with an external bound (the
-        sharded router); ``k=None`` keeps the deprecated scalar return."""
+                     ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Exact k-NN over a consistent snapshot through the unified
+        pipeline (plan -> prune -> scan -> verify), with timestamp
+        post-filtering in ``pp`` mode.  ``bsf`` seeds the chain with an
+        external bound (the sharded router).  Returns (dists ``[k]``,
+        ids ``[k]``, info)."""
         return self.snapshot().search_exact(
             query, k=k, window=window, radius_leaves=radius_leaves,
             bsf=bsf)

@@ -34,7 +34,7 @@ from .metrics import IOStats
 __all__ = ["CoconutTree", "build", "approx_search", "exact_search",
            "approx_search_batch", "exact_search_batch",
            "exact_search_budgeted", "merge_trees", "SearchStats",
-           "as_scalar_result", "save", "load"]
+           "save", "load"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -90,42 +90,10 @@ class CoconutTree:
         return self.keys[:: self.leaf_size]
 
 
-@dataclasses.dataclass
-class SearchStats:
-    """Per-query accounting for the paper's query-cost experiments.
-
-    The batched entry points return ONE SearchStats for the whole batch
-    (``queries`` > 1).  Batch-level totals and per-query breakdowns are
-    BOTH reported so per-query cost is never conflated across the batch:
-    ``candidates`` counts distinct raw rows fetched (shared across the
-    batch), ``pruned_frac`` is the mean pruned fraction over queries,
-    ``leaves_touched`` counts distinct leaf blocks in the union of all
-    queries' candidate sets, and ``candidates_per_query`` /
-    ``leaves_per_query`` are ``[Q]`` arrays attributing verified rows and
-    touched leaves to each individual query (for Q=1 they reduce to the
-    scalar totals).
-    """
-    candidates: int = 0          # raw series whose true ED was computed
-    pruned_frac: float = 0.0     # fraction of index pruned by mindist
-    leaves_touched: int = 0      # distinct leaf blocks read
-    exact: bool = True
-    queries: int = 1             # batch size this accounting covers
-    candidates_per_query: Optional[np.ndarray] = None   # [Q] rows verified
-    leaves_per_query: Optional[np.ndarray] = None       # [Q] leaves touched
-    shards_touched: int = 0      # shards actually searched (sharded engine)
-    shards_pruned: int = 0       # shards skipped by key-fence mindist bound
-
-
-def as_scalar_result(dists: np.ndarray, offsets: np.ndarray
-                     ) -> Tuple[float, int]:
-    """THE scalar-return shim: ``([k], [k]) -> (float, int)`` of the top-1.
-
-    Every single-query entry point (tree, snapshot, LSM, sharded router)
-    funnels its legacy ``k=None`` scalar return through this one helper —
-    the scalar special case is deprecated in favor of passing ``k=1`` and
-    receiving length-k arrays, and lives nowhere else.
-    """
-    return float(dists[0]), int(offsets[0])
+# SearchStats lives with the merger (the pipeline piece that owns query
+# accounting); re-exported here because every search entry point returns
+# one and historical callers import it as ``repro.core.tree.SearchStats``.
+from ..query.merger import SearchStats  # noqa: E402
 
 
 def _report_column(tree: CoconutTree):
@@ -218,23 +186,19 @@ def _approx_candidates(tree: CoconutTree, query: jax.Array,
 
 
 def approx_search(tree: CoconutTree, query: jax.Array, *,
-                  k: Optional[int] = None,
+                  k: int = 1,
                   radius_leaves: int = 1,
                   io: Optional[IOStats] = None
-                  ) -> Tuple[float, int, SearchStats]:
+                  ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
     """Approximate k-NN: visit the leaves around the query's sorted position.
 
-    Thin wrapper over :func:`approx_search_batch` with Q=1.  With ``k``
-    set, returns (dists ``[k]``, offsets ``[k]``, stats); the default
-    ``k=None`` keeps the deprecated scalar contract (best ED^2, offset)
-    via :func:`as_scalar_result`.
+    Thin wrapper over :func:`approx_search_batch` with Q=1: returns
+    (dists ``[k]``, offsets ``[k]``, stats).  The pre-PR-4 scalar return
+    (``float``, ``int``) is gone — index ``[0]`` for the old contract.
     """
     q = jnp.asarray(query, jnp.float32)[None, :]
     d, off, stats = approx_search_batch(
-        tree, q, k=1 if k is None else k,
-        radius_leaves=radius_leaves, io=io)
-    if k is None:
-        return (*as_scalar_result(d[0], off[0]), stats)
+        tree, q, k=k, radius_leaves=radius_leaves, io=io)
     return d[0], off[0], stats
 
 
@@ -243,21 +207,20 @@ def approx_search(tree: CoconutTree, query: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def exact_search(tree: CoconutTree, query: jax.Array, *,
-                 k: Optional[int] = None,
+                 k: int = 1,
                  radius_leaves: int = 1,
                  chunk: int = 4096,
                  io: Optional[IOStats] = None,
                  mindist_fn=None,
                  ts_min: Optional[int] = None,
                  bsf: Optional[float] = None,
-                 ) -> Tuple[float, int, SearchStats]:
+                 ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
     """Exact k-NN via the skip-sequential SIMS scan.
 
-    Thin wrapper over :func:`exact_search_batch` with Q=1 — one SIMS
-    implementation serves the single and batched paths, so the answer
-    bits are identical by construction.  With ``k`` set, returns
-    (dists ``[k]``, offsets ``[k]``, stats); the default ``k=None`` keeps
-    the deprecated scalar contract via :func:`as_scalar_result`.
+    Thin wrapper over :func:`exact_search_batch` with Q=1 — one pipeline
+    serves the single and batched paths, so the answer bits are
+    identical by construction.  Returns (dists ``[k]``, offsets ``[k]``,
+    stats); the pre-PR-4 scalar return is gone — index ``[0]``.
 
     ``ts_min``: if set, restrict to entries with timestamp >= ts_min
     (post-processing window filtering, Sec. 5.1).
@@ -270,10 +233,8 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
     q = jnp.asarray(query, jnp.float32)[None, :]
     ext = None if bsf is None else np.asarray([bsf], np.float32)
     d, off, stats = exact_search_batch(
-        tree, q, k=1 if k is None else k, radius_leaves=radius_leaves,
+        tree, q, k=k, radius_leaves=radius_leaves,
         chunk=chunk, io=io, mindist_fn=mindist_fn, ts_min=ts_min, bsf=ext)
-    if k is None:
-        return (*as_scalar_result(d[0], off[0]), stats)
     return d[0], off[0], stats
 
 
@@ -313,23 +274,8 @@ def exact_search_budgeted(tree: CoconutTree, query: jax.Array, *,
 # Batched multi-query search: one summarization pass serves a whole batch
 # ---------------------------------------------------------------------------
 
-def _merge_topk(dists: np.ndarray, offsets: np.ndarray, k: int
-                ) -> Tuple[np.ndarray, np.ndarray]:
-    """Top-k of a candidate pool, dedup'd by offset (same row may appear in
-    both the approximate window and the verified set).  Stable: on equal
-    distances the earlier pool entry wins, matching the strict ``d < bsf``
-    update rule of the single-query path.  Pads to k with (inf, -1)."""
-    offsets = np.asarray(offsets)
-    dists = np.asarray(dists, np.float32)
-    _, first = np.unique(offsets, return_index=True)
-    first.sort()                       # keep original pool order
-    d, o = dists[first], offsets[first]
-    sel = np.argsort(d, kind="stable")[:k]
-    out_d = np.full(k, np.inf, np.float32)
-    out_o = np.full(k, -1, np.int64)
-    out_d[: len(sel)] = d[sel]
-    out_o[: len(sel)] = o[sel]
-    return out_d, out_o
+# pool merging lives with the merger; re-imported for the approx path
+from ..query.merger import merge_topk as _merge_topk  # noqa: E402
 
 
 @functools.partial(jax.jit, static_argnames=("radius_leaves",))
@@ -394,99 +340,27 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
                        ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
     """Batched exact k-NN via ONE amortized SIMS scan (the tentpole path).
 
-    1. the batched approximate probe seeds a per-query best-so-far pool;
-    2. ONE pass over the in-memory summarizations evaluates the mindist
-       lower bound for every (query, entry) pair — ``[Q, N]`` — instead of
-       Q separate scans (``mindist_fn(q_paas, codes) -> [Q, N]``; defaults
-       to :func:`repro.core.summarization.mindist_sq_batch`, with the
-       Pallas kernel injectable via ``repro.kernels.ops.mindist_batch``);
-    3. the union of all queries' unpruned rows is fetched once, in
-       sorted-offset chunks (skip-sequential), and verified against every
-       query that still needs it, tightening each query's k-th-best bound
-       as chunks complete.
+    Delegates to the unified query pipeline
+    (:mod:`repro.query`): the partition's leaf fences price every leaf
+    with a z-order envelope mindist bound, the executor scans only the
+    surviving leaves cheapest-bound-first (skip-sequential SIMS),
+    verifies unpruned rows with the batched Euclidean kernel, and the
+    merger chains the per-query k-th-best bound across chunks.
 
     ``bsf``: optional ``[Q]`` per-query external bounds (LSM run chaining).
+    ``mindist_fn``: injectable lower-bound kernel,
+    ``(q_paas [Q, w], codes [B, w]) -> [Q, B]`` (defaults to
+    :func:`repro.core.summarization.mindist_sq_batch`; the Pallas kernel
+    drops in via ``repro.kernels.ops.mindist_batch``).
     Returns (dists ``[Q, k]``, offsets ``[Q, k]``, batch stats); with k=1
     row qi matches ``exact_search(tree, queries[qi])``.
     """
-    queries = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
-    nq = queries.shape[0]
-    if ts_min is not None and tree.timestamps is not None:
-        alive = np.asarray(tree.timestamps) >= ts_min
-    else:
-        alive = np.ones(tree.n, bool)
-
-    # -- seed pools from the batched approximate probe (in-window only) -----
-    _, idx0 = _approx_candidates_batch(tree, queries,
-                                       radius_leaves=radius_leaves)
-    if io is not None:
-        io.rand_read(2 * radius_leaves * nq)
-    idx0 = np.asarray(idx0)
-    # canonical bits (see exact_search): seed distances re-verified with
-    # the eager kernel's reduction (sum over the contiguous last axis) so
-    # returned values never depend on partitioning — one gather + one
-    # batched op for the whole seed pool, not a per-query loop
-    rows0 = tree.series(jnp.asarray(idx0.reshape(-1)))
-    rows0 = rows0.reshape(idx0.shape + rows0.shape[1:])       # [Q, C, L]
-    diff0 = rows0 - queries[:, None, :]
-    d0 = np.asarray(jnp.sum(diff0 * diff0, axis=-1), np.float32)
-    offs_all = np.asarray(_report_column(tree))
-    d0 = np.where(alive[idx0], d0, np.inf)
-    offs0 = np.where(alive[idx0], offs_all[idx0], -1)
-    best_d = np.empty((nq, k), np.float32)
-    best_off = np.empty((nq, k), np.int64)
-    for qi in range(nq):
-        best_d[qi], best_off[qi] = _merge_topk(d0[qi], offs0[qi], k)
-    ext = (np.full(nq, np.inf, np.float32) if bsf is None
-           else np.asarray(bsf, np.float32))
-    bound = np.minimum(best_d[:, -1], ext)               # k-th best per query
-
-    # -- ONE lower-bound scan for the whole batch ---------------------------
-    cfg = tree.cfg
-    q_paas = S.paa(queries, cfg.segments)
-    if mindist_fn is None:
-        mindist_fn = lambda qp, codes: S.mindist_sq_batch(qp, codes, cfg)
-    md = np.asarray(mindist_fn(q_paas, tree.codes))      # [Q, N]
-
-    prune = (md < bound[:, None]) & alive[None, :]
-    union = np.nonzero(prune.any(axis=0))[0]
-    stats = SearchStats(candidates=0, exact=True, queries=nq)
-    stats.pruned_frac = 1.0 - float(prune.sum()) / max(nq * tree.n, 1)
-    stats.leaves_touched = len(np.unique(union // tree.leaf_size))
-    # per-query attribution (not conflated across the batch): rows verified
-    # and distinct leaves touched FOR each query, from its own prune row
-    stats.candidates_per_query = np.zeros(nq, np.int64)
-    stats.leaves_per_query = np.asarray(
-        [len(np.unique(np.nonzero(prune[qi])[0] // tree.leaf_size))
-         for qi in range(nq)], np.int64)
-    if io is not None and len(union):
-        io.seq_read(len(union))
-
-    # -- shared verification over the union, re-pruning per chunk -----------
-    # bound the [Q, B, L] verification intermediate: rows-per-chunk scales
-    # down with batch size (Q=64 x 4096 x L floats thrashes host memory)
-    eff_chunk = min(chunk, max(64, 32768 // nq))
-    for s in range(0, len(union), eff_chunk):
-        block = union[s:s + eff_chunk]
-        live = md[:, block] < bound[:, None]              # [Q, B]
-        keep = live.any(axis=0)
-        block = block[keep]
-        if len(block) == 0:
-            continue
-        mask = live[:, keep]
-        rows = tree.series(jnp.asarray(block))
-        dd = np.asarray(S.euclidean_sq_batch(queries, rows))   # [Q, B]
-        stats.candidates += len(block)
-        for qi in range(nq):
-            m = mask[qi]
-            if not m.any():
-                continue
-            stats.candidates_per_query[qi] += int(m.sum())
-            best_d[qi], best_off[qi] = _merge_topk(
-                np.concatenate([best_d[qi], dd[qi][m]]),
-                np.concatenate([best_off[qi], offs_all[block[m]]]), k)
-            bound[qi] = min(best_d[qi, -1], ext[qi])
-    return best_d, best_off, stats
+    from ..query import Partition, exact_knn
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    return exact_knn([Partition.from_tree(tree)], queries, tree.cfg,
+                     k=k, ts_min=ts_min, bsf=bsf,
+                     radius_leaves=radius_leaves, chunk=chunk, io=io,
+                     mindist_fn=mindist_fn)
 
 
 # ---------------------------------------------------------------------------

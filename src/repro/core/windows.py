@@ -6,7 +6,14 @@ paper's names and a single constructor for experiments:
 
     engine = window_engine("btp", cfg, buffer_capacity=4096)
     engine.insert(batch); engine.flush()
-    d, off, stats = engine.search_exact(q, window=1_000_000)
+    d, off, info = engine.search_exact(q, k=1, window=1_000_000)
+    # d/off are length-k arrays; info carries the unified pipeline's
+    # accounting (partitions touched/pruned, leaves scanned/pruned)
+
+Every mode's exact search runs through the one query pipeline
+(:mod:`repro.query`): the planner drops out-of-window runs (the BTP/TP
+saving), post-filters straddlers row-wise, and fence-prunes whole
+leaves; PP disables the temporal drop and post-filters everything.
 
   * PP  (post-processing)          — one fully-merged index; timestamp
     filtering after retrieval; cannot save bandwidth on old data.

@@ -192,12 +192,6 @@ def distributed_exact_search(tree: ShardedCoconutTree, query: jax.Array,
     return d[0], rows[0]
 
 
-def distributed_exact_search_pruned(tree: ShardedCoconutTree,
-                                    query: jax.Array, k: int = 1,
-                                    budget: int = 1024):
-    """Deprecated alias: the budgeted path now lives in
-    :func:`distributed_exact_search_batch` (``budget=``); this wrapper
-    keeps the (dists [k], rows [k, L], certified) single-query shape."""
-    d, rows, cert = distributed_exact_search_batch(
-        tree, jnp.asarray(query, jnp.float32)[None, :], k, budget=budget)
-    return d[0], rows[0], cert[0]
+# (the deprecated `distributed_exact_search_pruned` alias is gone —
+# call `distributed_exact_search_batch(..., budget=)`, which returns the
+# batched (dists [Q, k], rows [Q, k, L], certified [Q]) shape.)

@@ -56,7 +56,7 @@ from ..core import summarization as S
 from ..core import tree as T
 from ..core.lsm import CoconutLSM
 from ..core.metrics import IngestMetrics, IOStats
-from ..ingest.snapshot import _merge_run_topk
+from ..query.merger import merge_pools
 from .router import (KeyRangeRouter, batch_summaries, fence_mindist_sq,
                      key_fence_of, key_range_code_bounds)
 
@@ -616,7 +616,8 @@ class ShardedCoconutLSM:
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN across shards, cheapest-shard-first.
 
-        Per-shard fence bounds order the visit; the merged pool's k-th
+        Per-shard fence bounds order the visit; each shard runs the
+        unified query pipeline over its snapshot, the merged pool's k-th
         best seeds every later shard's scan (``bsf=``), and shards whose
         bound cannot beat it are pruned whole.  Answers (distance bits
         AND global ids) are identical for any shard count.
@@ -638,24 +639,28 @@ class ShardedCoconutLSM:
         stats = T.SearchStats(candidates=0, exact=True, queries=nq)
         stats.candidates_per_query = np.zeros(nq, np.int64)
         stats.leaves_per_query = np.zeros(nq, np.int64)
-        info = {"partitions_touched": 0, "buffer_rows": 0}
+        info = {"partitions_touched": 0, "partitions_pruned": 0,
+                "buffer_rows": 0}
         scanned = set()
 
         def scan(si: int, qsel: np.ndarray) -> None:
-            """Run one shard's amortized SIMS over a query subset and
-            fold its pools into the global chain."""
+            """Run one shard's pipeline over a query subset and fold its
+            pools into the global chain."""
             sn = snaps[si]
             idx = np.nonzero(qsel)[0]
             d, off, sub = sn.search_exact_batch(
                 queries[idx], k=k, window=window,
                 radius_leaves=radius_leaves, bsf=bound_vec[idx].copy())
-            stats.candidates += sub["candidates"]
+            stats.merge(sub["stats"])
+            stats.candidates += sub["stats"].buffer_rows  # historical:
+            # info-level "candidates" includes brute-forced buffer rows
             stats.candidates_per_query[idx] += sub["candidates_per_query"]
             stats.leaves_per_query[idx] += sub["leaves_per_query"]
             info["partitions_touched"] += sub["partitions_touched"]
+            info["partitions_pruned"] += sub["partitions_pruned"]
             info["buffer_rows"] += sub["buffer_rows"]
-            md, mo = _merge_run_topk(best_d[idx], best_off[idx],
-                                     d, off, k)
+            md, mo = merge_pools(best_d[idx], best_off[idx],
+                                 d, off, k)
             best_d[idx], best_off[idx] = md, mo
             bound_vec[idx] = md[:, -1]
 
@@ -682,6 +687,8 @@ class ShardedCoconutLSM:
             if not qsel.any():
                 if si not in scanned:
                     stats.shards_pruned += 1
+                    stats.leaves_pruned += sum(
+                        r.tree.n_leaves for r in snaps[si].runs)
                 continue
             scan(si, qsel)
             scanned.add(si)
@@ -689,6 +696,8 @@ class ShardedCoconutLSM:
         info.update(candidates=stats.candidates,
                     candidates_per_query=stats.candidates_per_query,
                     leaves_per_query=stats.leaves_per_query,
+                    leaves_pruned=stats.leaves_pruned,
+                    leaves_scanned=stats.leaves_scanned,
                     shards_touched=stats.shards_touched,
                     shards_pruned=stats.shards_pruned,
                     stats=stats)
@@ -718,34 +727,30 @@ class ShardedCoconutLSM:
             info["partitions_touched"] += sub["partitions_touched"]
             info["buffer_rows"] += sub["buffer_rows"]
             cands_pq += sub["candidates_per_query"]
-            best_d, best_off = _merge_run_topk(best_d, best_off, d, off, k)
+            best_d, best_off = merge_pools(best_d, best_off, d, off, k)
         info["candidates_per_query"] = cands_pq
         return best_d, best_off, info
 
     def search_exact(self, query: np.ndarray, *,
-                     k: Optional[int] = None,
+                     k: int = 1,
                      window: Optional[int] = None,
-                     radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Exact k-NN for one query (Q=1 wrapper; ``k=None`` keeps the
-        deprecated scalar return through the one shared shim)."""
+                     radius_leaves: int = 1
+                     ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Exact k-NN for one query (Q=1 wrapper over the batched
+        pipeline; returns length-k arrays)."""
         q = np.asarray(query, np.float32)[None, :]
         d, off, info = self.search_exact_batch(
-            q, k=1 if k is None else k, window=window,
-            radius_leaves=radius_leaves)
-        if k is None:
-            return (*T.as_scalar_result(d[0], off[0]), info)
+            q, k=k, window=window, radius_leaves=radius_leaves)
         return d[0], off[0], info
 
     def search_approx(self, query: np.ndarray, *,
-                      k: Optional[int] = None,
+                      k: int = 1,
                       window: Optional[int] = None,
-                      radius_leaves: int = 1) -> Tuple[float, int, dict]:
-        """Approximate k-NN for one query (Q=1 wrapper; ``k=None`` keeps
-        the deprecated scalar return)."""
+                      radius_leaves: int = 1
+                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Approximate k-NN for one query (Q=1 wrapper; returns
+        length-k arrays)."""
         q = np.asarray(query, np.float32)[None, :]
         d, off, info = self.search_approx_batch(
-            q, k=1 if k is None else k, window=window,
-            radius_leaves=radius_leaves)
-        if k is None:
-            return (*T.as_scalar_result(d[0], off[0]), info)
+            q, k=k, window=window, radius_leaves=radius_leaves)
         return d[0], off[0], info

@@ -8,6 +8,14 @@ private, so every ``search_*`` below executes against a consistent,
 point-in-time view while flushes and merges swap the live run list
 underneath — readers never block writers and vice versa.
 
+Every exact search delegates to the unified query pipeline
+(:mod:`repro.query`): the runs and the frozen buffer become
+:class:`~repro.query.partition.Partition` objects, the planner applies
+the window cut (BTP/TP run skipping, row-level ``ts_min`` for
+straddling runs, PP post-filtering) and prices every run and leaf with
+z-order fence bounds, and the executor scans the surviving leaves with
+one shared best-so-far chain.
+
 Exactness is partition-independent: an exact query verifies true
 Euclidean distances over every qualifying row, so its answer *distances*
 are bit-identical whether a row sits in a level-3 run, a fresh level-0
@@ -27,21 +35,19 @@ snapshot can see (runs + frozen buffer), letting the router skip whole
 shards whose fence mindist bound cannot beat the chain's bsf.
 
 The single-query entry points are thin wrappers over the batched ones
-(Q=1) and keep the deprecated scalar return through
-:func:`repro.core.tree.as_scalar_result` — one scalar shim for the whole
-stack.
+(Q=1) returning length-k arrays; the pre-PR-5 scalar return is gone.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import summarization as S
-from ..core import tree as T
 from ..core.metrics import IOStats
+from ..query import Partition, exact_knn, merge_pools
+from ..query.merger import SearchStats
 
 __all__ = ["Snapshot", "FrozenBuffer"]
 
@@ -58,21 +64,6 @@ class FrozenBuffer:
         return len(self.raw)
 
 
-def _merge_run_topk(cur_d: np.ndarray, cur_off: np.ndarray,
-                    new_d: np.ndarray, new_off: np.ndarray, k: int
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-    """Merge two per-query ``[Q, k]`` pools.  No id dedup needed: every
-    row lives in exactly one component, so its global id appears in at
-    most one pool.  Stable sort keeps the earlier (newer-component) entry
-    on ties, matching the strict ``d < bsf`` rule of the single-query
-    chain."""
-    d = np.concatenate([cur_d, new_d], axis=1)
-    off = np.concatenate([cur_off, new_off], axis=1)
-    sel = np.argsort(d, axis=1, kind="stable")[:, :k]
-    return (np.take_along_axis(d, sel, axis=1),
-            np.take_along_axis(off, sel, axis=1))
-
-
 @dataclasses.dataclass(frozen=True)
 class Snapshot:
     """Consistent read view: frozen run tuple + optional frozen buffer."""
@@ -82,11 +73,17 @@ class Snapshot:
     io: Optional[IOStats] = None
     buffer: Optional[FrozenBuffer] = None
     key_fence: Optional[Tuple[int, int]] = None   # (lo, hi) z-order bigints
+    cfg: Optional[S.SummaryConfig] = None
 
     @property
     def n(self) -> int:
         return (sum(r.n for r in self.runs)
                 + (self.buffer.n if self.buffer else 0))
+
+    def _cfg(self) -> S.SummaryConfig:
+        if self.cfg is not None:
+            return self.cfg
+        return self.runs[0].tree.cfg
 
     # ------------------------------------------------------------- qualifying
     def _qualifying_runs(self, window: Optional[int]) -> Sequence:
@@ -100,78 +97,45 @@ class Snapshot:
     def _ts_min(self, window: Optional[int]) -> Optional[int]:
         return None if window is None else self.clock - window
 
-    def _run_ts_min(self, r, window: Optional[int],
-                    ts_min: Optional[int]) -> Optional[int]:
-        if window is not None and self.mode != "pp" and r.t_min >= ts_min:
-            return None                  # run entirely inside window
-        return ts_min                    # straddling run: post-filter
-
-    # ---------------------------------------------------------- buffer scans
-    def _buffer_rows(self, ts_min: Optional[int]
-                     ) -> Tuple[np.ndarray, np.ndarray]:
-        """In-window buffer rows and their global row ids."""
-        buf = self.buffer
-        if ts_min is None:
-            return buf.raw, buf.ids
-        keep = np.nonzero(buf.ts >= ts_min)[0]
-        return buf.raw[keep], buf.ids[keep]
-
-    def _buffer_topk(self, queries: np.ndarray, k: int,
-                     ts_min: Optional[int]
-                     ) -> Tuple[np.ndarray, np.ndarray, int]:
-        """Per-query ``[Q, k]`` pools over the frozen buffer — brute-force
-        with the same kernel the SIMS verifier uses, so the distance bits
-        match a post-flush search of the same rows."""
-        nq = queries.shape[0]
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_off = np.full((nq, k), -1, np.int64)
-        rows, offs = self._buffer_rows(ts_min)
-        if len(rows) == 0:
-            return best_d, best_off, 0
-        if self.io is not None:
-            self.io.seq_read(len(rows))
-        d = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
-                                            jnp.asarray(rows)))   # [Q, M]
-        sel = np.argsort(d, axis=1, kind="stable")[:, :k]
-        take = min(k, d.shape[1])
-        best_d[:, :take] = np.take_along_axis(d, sel, axis=1)[:, :take]
-        best_off[:, :take] = offs[sel][:, :take]
-        return best_d, best_off, len(rows)
+    # ------------------------------------------------------------- partitions
+    def _partitions(self):
+        """The pipeline view of everything this snapshot can see: the
+        frozen buffer (newest rows, brute-force scanned) + one partition
+        per run, window-qualified and leaf-priced by the planner."""
+        parts = []
+        if self.buffer is not None and self.buffer.n:
+            parts.append(Partition.from_buffer(self.buffer, self._cfg()))
+        parts.extend(Partition.from_run(r) for r in self.runs)
+        return parts
 
     # ----------------------------------------------------------- single query
     def search_approx(self, query: np.ndarray, *,
-                      k: Optional[int] = None,
+                      k: int = 1,
                       window: Optional[int] = None,
-                      radius_leaves: int = 1) -> Tuple[float, int, dict]:
+                      radius_leaves: int = 1
+                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Approximate k-NN over the qualifying runs (Algorithm 4 per run)
-        plus the frozen buffer; Q=1 wrapper over the batched path.  The
-        default ``k=None`` keeps the deprecated scalar return."""
+        plus the frozen buffer; Q=1 wrapper over the batched path
+        returning length-k arrays."""
         q = np.asarray(query, np.float32)[None, :]
         d, off, info = self.search_approx_batch(
-            q, k=1 if k is None else k, window=window,
-            radius_leaves=radius_leaves)
-        if k is None:
-            return (*T.as_scalar_result(d[0], off[0]), info)
+            q, k=k, window=window, radius_leaves=radius_leaves)
         return d[0], off[0], info
 
     def search_exact(self, query: np.ndarray, *,
-                     k: Optional[int] = None,
+                     k: int = 1,
                      window: Optional[int] = None,
                      radius_leaves: int = 1,
                      bsf: Optional[float] = None
-                     ) -> Tuple[float, int, dict]:
-        """Exact k-NN: SIMS per qualifying run with a carried bsf
-        (Algorithm 7), plus timestamp post-filtering in ``pp`` mode; Q=1
-        wrapper over the batched path.  ``bsf`` seeds the chain with an
-        external bound (shard chaining) — it prunes but is never returned.
-        The default ``k=None`` keeps the deprecated scalar return."""
+                     ) -> Tuple[np.ndarray, np.ndarray, dict]:
+        """Exact k-NN over the snapshot; Q=1 wrapper over the batched
+        path returning length-k arrays.  ``bsf`` seeds the chain with an
+        external bound (shard chaining) — it prunes but is never
+        returned."""
         q = np.asarray(query, np.float32)[None, :]
         ext = None if bsf is None else np.asarray([bsf], np.float32)
         d, off, info = self.search_exact_batch(
-            q, k=1 if k is None else k, window=window,
-            radius_leaves=radius_leaves, bsf=ext)
-        if k is None:
-            return (*T.as_scalar_result(d[0], off[0]), info)
+            q, k=k, window=window, radius_leaves=radius_leaves, bsf=ext)
         return d[0], off[0], info
 
     # -------------------------------------------------------- batched queries
@@ -184,6 +148,9 @@ class Snapshot:
 
         Returns (dists ``[Q, k]``, ids ``[Q, k]``, info).
         """
+        import jax.numpy as jnp
+
+        from ..core import tree as T
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
         runs = self._qualifying_runs(window)
@@ -200,10 +167,30 @@ class Snapshot:
                 r.tree, jnp.asarray(queries), k=k,
                 radius_leaves=radius_leaves, io=self.io)
             cands_pq += st.candidates_per_query
-            best_d, best_off = _merge_run_topk(best_d, best_off, d, off, k)
+            best_d, best_off = merge_pools(best_d, best_off, d, off, k)
         return best_d, best_off, {"partitions_touched": len(runs),
                                   "candidates_per_query": cands_pq,
                                   "buffer_rows": buf_rows}
+
+    def _buffer_topk(self, queries: np.ndarray, k: int,
+                     ts_min: Optional[int]
+                     ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Per-query ``[Q, k]`` pools over the frozen buffer — the
+        approximate path's buffer scan, sharing the executor's one
+        brute-force contract (:func:`repro.query.executor.buffer_topk`)
+        so the tie-breaking/padding rule lives in one place."""
+        import jax.numpy as jnp
+
+        from ..query.executor import buffer_topk
+        buf = self.buffer
+        if ts_min is None:
+            rows, offs = buf.raw, buf.ids
+        else:
+            keep = np.nonzero(buf.ts >= ts_min)[0]
+            rows, offs = buf.raw[keep], buf.ids[keep]
+        best_d, best_off = buffer_topk(jnp.asarray(queries), rows,
+                                       np.asarray(offs), k, io=self.io)
+        return best_d, best_off, len(rows)
 
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
@@ -211,47 +198,38 @@ class Snapshot:
                            radius_leaves: int = 1,
                            bsf: Optional[np.ndarray] = None
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
-        """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
-        for the whole batch (vs Q scans in the single-query loop), with the
-        per-query k-th-best bound carried run to run (Algorithm 7) and a
-        cross-run top-k merge.
+        """Batched exact k-NN through the unified pipeline: the planner
+        window-qualifies the runs and prices every leaf with its z-order
+        fence bound, the executor scans surviving leaves cheapest-first
+        with ONE shared per-query best-so-far chain (vs Q scans in the
+        single-query loop), and the merger owns the cross-partition
+        top-k.
 
         ``bsf``: optional ``[Q]`` external per-query bounds (the sharded
-        router's cross-shard chain) — combined with the internal k-th-best
-        bound for pruning on every run scan, never returned as an answer.
+        router's cross-shard chain) — combined with the internal
+        k-th-best bound for pruning on every scan, never returned as an
+        answer.
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
-        nq = queries.shape[0]
-        runs = self._qualifying_runs(window)
-        ts_min = self._ts_min(window)
-        ext = (np.full(nq, np.inf, np.float32) if bsf is None
-               else np.asarray(bsf, np.float32))
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_off = np.full((nq, k), -1, np.int64)
-        touched = 0
-        cands = 0
-        cands_pq = np.zeros(nq, np.int64)
-        leaves_pq = np.zeros(nq, np.int64)
-        buf_rows = 0
-        if self.buffer is not None:
-            best_d, best_off, buf_rows = self._buffer_topk(queries, k,
-                                                           ts_min)
-            cands += buf_rows
-            cands_pq += buf_rows
-        for r in runs:
-            run_ts_min = self._run_ts_min(r, window, ts_min)
-            d, off, st = T.exact_search_batch(
-                r.tree, jnp.asarray(queries), k=k,
-                radius_leaves=radius_leaves, io=self.io,
-                ts_min=run_ts_min,
-                bsf=np.minimum(best_d[:, -1], ext))
-            touched += 1
-            cands += st.candidates
-            cands_pq += st.candidates_per_query
-            leaves_pq += st.leaves_per_query
-            best_d, best_off = _merge_run_topk(best_d, best_off, d, off, k)
-        return best_d, best_off, {"partitions_touched": touched,
-                                  "candidates": cands,
-                                  "candidates_per_query": cands_pq,
-                                  "leaves_per_query": leaves_pq,
-                                  "buffer_rows": buf_rows}
+        best_d, best_off, stats = exact_knn(
+            self._partitions(), queries, self._cfg(), k=k,
+            ts_min=self._ts_min(window),
+            temporal_prune=(self.mode != "pp"),
+            bsf=bsf, radius_leaves=radius_leaves, io=self.io)
+        info = self._info(stats)
+        return best_d, best_off, info
+
+    @staticmethod
+    def _info(stats: SearchStats) -> dict:
+        """The dict contract the engines/tests read, derived from the
+        pipeline's SearchStats (``candidates`` includes the brute-forced
+        buffer rows, matching the historical accounting)."""
+        return {"partitions_touched": stats.partitions_touched,
+                "partitions_pruned": stats.partitions_pruned,
+                "candidates": stats.candidates + stats.buffer_rows,
+                "candidates_per_query": stats.candidates_per_query,
+                "leaves_per_query": stats.leaves_per_query,
+                "leaves_pruned": stats.leaves_pruned,
+                "leaves_scanned": stats.leaves_scanned,
+                "buffer_rows": stats.buffer_rows,
+                "stats": stats}

@@ -7,5 +7,8 @@ is the pure-jnp oracle the tests compare against):
   * sax_summarize  — fused PAA + SAX quantization (construction pass)
   * zorder         — invSAX bit interleave (Algorithm 1)
   * batch_euclid   — candidate verification / brute force
+  * scan_verify    — fused serving-path scan: lower bound + masked
+                     early-abandoning verification + on-device top-k
+                     in one HBM pass (the query executor's TPU mode)
 """
 from . import ops, ref  # noqa: F401

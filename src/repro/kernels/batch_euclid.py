@@ -8,6 +8,7 @@ one multiply-add per element, reduced on the VPU.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +27,17 @@ def _kernel(q_ref, x_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def batch_euclid_pallas(query: jax.Array, series: jax.Array, *,
                         block_n: int = 256,
-                        interpret: bool = True) -> jax.Array:
-    """query ``[L]``, series ``[N, L]`` -> squared ED ``[N]`` float32."""
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """query ``[L]``, series ``[N, L]`` -> squared ED ``[N]`` float32.
+
+    ``interpret=None`` resolves through the backend dispatch policy
+    (compiled on TPU, interpret mode elsewhere) instead of the old
+    hard-coded ``True``, which silently ran the interpreter even where
+    the compiled kernel was available — prefer calling through
+    :func:`repro.kernels.ops.batch_euclid`, which picks the mode.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, L = series.shape
     n_pad = -(-n // block_n) * block_n
     x_p = jnp.pad(series.astype(jnp.float32), ((0, n_pad - n), (0, 0)))

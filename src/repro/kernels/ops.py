@@ -30,14 +30,18 @@ _mindist_batch_jit = jax.jit(ref.mindist_batch_ref,
 _sax_jit = jax.jit(ref.sax_summarize_ref, static_argnames=("segments",))
 _euclid_jit = jax.jit(ref.batch_euclid_ref)
 _euclid_multi_jit = jax.jit(ref.batch_euclid_multi_ref)
+_scan_verify_jit = jax.jit(ref.scan_verify_ref,
+                           static_argnames=("scale", "k"))
 from .batch_euclid import batch_euclid_pallas
 from .mindist_batch import mindist_batch_pallas
 from .mindist_scan import mindist_pallas
 from .sax_summarize import sax_summarize_pallas
+from .scan_verify import scan_verify_pallas
 from .zorder import zorder_pallas
 
 __all__ = ["mindist", "mindist_batch", "sax_summarize", "zorder",
-           "batch_euclid", "batch_euclid_multi", "summarize_and_key"]
+           "batch_euclid", "batch_euclid_multi", "scan_verify",
+           "summarize_and_key"]
 
 # large finite sentinels: TPU tables prefer finite values; any PAA value is
 # within a few sigma, so 1e30 behaves as +/-inf in the bound arithmetic.
@@ -126,6 +130,37 @@ def batch_euclid_multi(queries: jax.Array, series: jax.Array,
     """
     del mode
     return _euclid_multi_jit(queries, series)
+
+
+def scan_verify(queries: jax.Array, q_paas: jax.Array, codes: jax.Array,
+                raw: jax.Array, bound: jax.Array, cfg: S.SummaryConfig,
+                *, k: int = 1, mode: str = "auto",
+                dead: jax.Array = None):
+    """Fused SIMS scan+verify: one pass computing the iSAX lower bound,
+    the bound-masked (early-abandoning) Euclidean verification, and the
+    per-query top-k on device.
+
+    queries ``[Q, L]``, q_paas ``[Q, w]``, codes ``[B, w]``, raw
+    ``[B, L]``, bound ``[Q]`` per-query best-so-far, ``dead`` optional
+    ``[B]`` row filter (nonzero = excluded, e.g. window cuts).  Returns
+    (dists ``[Q, k]`` inf-padded, row indices ``[Q, k]`` int32 with -1
+    padding, verified counts ``[Q]`` int32, union-verified rows int32 —
+    rows live for ANY query, the batch-level ``candidates`` figure).
+    Replaces the separate ``mindist_batch`` -> host mask -> gather ->
+    ``batch_euclid`` round trips on the serving path.
+    """
+    mode = _resolve(mode)
+    scale = cfg.series_len / cfg.segments
+    lower, upper = _finite_bounds(cfg.bits)
+    if dead is None:
+        dead = jnp.zeros(codes.shape[0], jnp.int32)
+    if mode == "jnp":
+        return _scan_verify_jit(queries, q_paas, codes, raw, lower, upper,
+                                bound, dead, scale=scale, k=k)
+    return scan_verify_pallas(queries, q_paas, codes.astype(jnp.int32),
+                              raw, lower, upper, bound, dead,
+                              scale=scale, k=k,
+                              interpret=(mode == "interpret"))
 
 
 def summarize_and_key(x: jax.Array, cfg: S.SummaryConfig,

@@ -13,7 +13,8 @@ from ..core import keys as K
 from ..core import summarization as S
 
 __all__ = ["mindist_ref", "mindist_batch_ref", "sax_summarize_ref",
-           "zorder_ref", "batch_euclid_ref", "batch_euclid_multi_ref"]
+           "zorder_ref", "batch_euclid_ref", "batch_euclid_multi_ref",
+           "scan_verify_ref"]
 
 
 def mindist_ref(q_paa: jax.Array, codes: jax.Array, lower: jax.Array,
@@ -68,3 +69,31 @@ def batch_euclid_multi_ref(queries: jax.Array,
     diff = (series.astype(jnp.float32)[None, :, :]
             - queries.astype(jnp.float32)[:, None, :])
     return jnp.sum(diff * diff, axis=-1)
+
+
+def scan_verify_ref(queries: jax.Array, q_paas: jax.Array,
+                    codes: jax.Array, raw: jax.Array,
+                    lower: jax.Array, upper: jax.Array,
+                    bound: jax.Array, dead: jax.Array, *,
+                    scale: float, k: int):
+    """Fused SIMS scan+verify oracle: lower bound, bound-masked Euclidean
+    verification, and top-k in one pass.
+
+    queries [Q, L], q_paas [Q, w], codes [N, w], raw [N, L],
+    bound [Q] (rows with mindist >= bound are abandoned before the
+    Euclidean distance is consulted), dead [N] (nonzero = row filtered
+    out, e.g. by a window cut).  Returns (top-k dists [Q, k] with inf
+    padding, top-k row indices [Q, k] int32 with -1 padding, verified
+    counts [Q] int32, union int32 — distinct rows live for ANY query,
+    the batch-level ``candidates`` accounting).
+    """
+    md = mindist_batch_ref(q_paas, codes, lower, upper, scale)   # [Q, N]
+    live = (md < bound[:, None]) & (dead[None, :] == 0)
+    ed = batch_euclid_multi_ref(queries, raw)                    # [Q, N]
+    ed = jnp.where(live, ed, jnp.inf)
+    neg, idx = jax.lax.top_k(-ed, k)
+    d = -neg
+    idx = jnp.where(jnp.isfinite(d), idx.astype(jnp.int32), -1)
+    counts = jnp.sum(live, axis=1).astype(jnp.int32)
+    union = jnp.sum(jnp.any(live, axis=0)).astype(jnp.int32)
+    return d, idx, counts, union

@@ -1,0 +1,162 @@
+"""Fused Pallas TPU kernel for the SIMS scan+verify hot loop.
+
+The pre-fusion pipeline round-trips three times per leaf group:
+``mindist_batch`` (one kernel launch) -> host-side mask -> gather of the
+unpruned rows -> ``batch_euclid`` (another launch) -> host-side top-k
+merge.  Serving traffic pays that latency per probe micro-batch.  This
+kernel fuses the whole chain over one streaming pass: each ``[block_n]``
+tile of the code AND raw columns is read HBM -> VMEM exactly once, the
+iSAX lower bound masks the Euclidean verification in-register
+(early-abandoning: a row whose bound cannot beat the per-query bsf
+never contributes arithmetic to the top-k), and a running per-query
+top-k is carried across grid steps on device — only ``[Q, k]`` answers
+ever cross back to the host.
+
+TPU adaptation notes:
+  * The query tiles (raw + PAA), the region-bound tables, and the
+    running top-k accumulators use constant index maps, so they stay
+    VMEM-resident across the entire N-grid.
+  * The per-code region lookup reuses the one-hot compare+select+reduce
+    trick from ``mindist_batch`` (gathers are hostile to the VPU).
+  * The top-k merge is gather-free selection: k unrolled rounds of
+    min/argmin + one-hot masking over the ``[Q, k + block_n]``
+    concatenation — no sort network, no dynamic indexing.
+  * Grid steps execute sequentially on TPU, so read-modify-write on the
+    constant-mapped output tiles is the standard accumulation pattern.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["scan_verify_pallas"]
+
+
+def _kernel(codes_ref, raw_ref, q_ref, qpaa_ref, lower_ref, upper_ref,
+            bound_ref, dead_ref, outd_ref, outi_ref, cnt_ref, uni_ref, *,
+            card: int, scale: float, k: int, n: int, block_n: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        outd_ref[...] = jnp.full(outd_ref.shape, jnp.inf, jnp.float32)
+        outi_ref[...] = jnp.full(outi_ref.shape, -1, jnp.int32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+        uni_ref[...] = jnp.zeros(uni_ref.shape, jnp.int32)
+
+    codes = codes_ref[...].astype(jnp.int32)          # [bn, w]
+    q_paa = qpaa_ref[...]                             # [Q, w]
+    bn, w = codes.shape
+    # one-hot region-bound lookup: VPU compare+select+reduce, no gather
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, w, card), 2)
+    onehot = codes[:, :, None] == iota
+    lb = jnp.sum(jnp.where(onehot, lower_ref[...][0][None, None, :], 0.0),
+                 axis=-1)
+    ub = jnp.sum(jnp.where(onehot, upper_ref[...][0][None, None, :], 0.0),
+                 axis=-1)
+    below = jnp.maximum(lb[None, :, :] - q_paa[:, None, :], 0.0)
+    above = jnp.maximum(q_paa[:, None, :] - ub[None, :, :], 0.0)
+    d = below + above
+    md = scale * jnp.sum(d * d, axis=-1)              # [Q, bn]
+
+    rowid = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (bn,), 0)
+    valid = (rowid < n) & (dead_ref[...][0] == 0)
+    bound = bound_ref[...][0]                         # [Q]
+    live = (md < bound[:, None]) & valid[None, :]     # [Q, bn]
+    cnt_ref[...] = cnt_ref[...] + \
+        jnp.sum(live, axis=1).astype(jnp.int32)[None, :]
+    uni_ref[...] = uni_ref[...] + \
+        jnp.sum(jnp.any(live, axis=0)).astype(jnp.int32)
+
+    # early-abandoning verify: rows the bound pruned contribute inf only
+    x = raw_ref[...]                                  # [bn, L]
+    qq = q_ref[...]                                   # [Q, L]
+    diff = x[None, :, :] - qq[:, None, :]
+    ed = jnp.sum(diff * diff, axis=-1)                # [Q, bn]
+    ed = jnp.where(live, ed, jnp.inf)
+
+    # merge the tile into the running top-k (gather-free selection)
+    cat_d = jnp.concatenate([outd_ref[...], ed], axis=1)   # [Q, k+bn]
+    cat_i = jnp.concatenate(
+        [outi_ref[...], jnp.broadcast_to(rowid[None, :], ed.shape)],
+        axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, cat_d.shape, 1)
+    sel_d, sel_i = [], []
+    for _ in range(k):
+        dmin = jnp.min(cat_d, axis=1)                 # [Q]
+        amin = jnp.argmin(cat_d, axis=1).astype(jnp.int32)
+        hit = cols == amin[:, None]
+        imin = jnp.sum(jnp.where(hit, cat_i, 0), axis=1)
+        sel_d.append(dmin)
+        sel_i.append(jnp.where(jnp.isfinite(dmin), imin, -1))
+        cat_d = jnp.where(hit, jnp.inf, cat_d)
+    outd_ref[...] = jnp.stack(sel_d, axis=1)
+    outi_ref[...] = jnp.stack(sel_i, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "k", "block_n", "interpret"))
+def scan_verify_pallas(queries: jax.Array, q_paas: jax.Array,
+                       codes: jax.Array, raw: jax.Array,
+                       lower: jax.Array, upper: jax.Array,
+                       bound: jax.Array, dead: jax.Array, *,
+                       scale: float, k: int = 1, block_n: int = 256,
+                       interpret: Optional[bool] = None):
+    """Fused scan+verify: queries ``[Q, L]``, q_paas ``[Q, w]``, codes
+    ``[N, w]``, raw ``[N, L]``, bound ``[Q]``, dead ``[N]`` ->
+    (top-k dists ``[Q, k]``, top-k indices ``[Q, k]`` int32 with -1
+    padding, verified counts ``[Q]`` int32, union-verified rows int32).
+
+    ``interpret=None`` resolves through the backend dispatch policy:
+    compiled on TPU, interpret mode elsewhere (CPU validation of the TPU
+    kernel body) — never hard-code it at a call site; go through
+    :func:`repro.kernels.ops.scan_verify`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, w = codes.shape
+    nq, L = queries.shape
+    card = lower.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    raw_p = jnp.pad(raw.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    dead_p = jnp.pad(dead.astype(jnp.int32), (0, n_pad - n),
+                     constant_values=1)
+    grid = (n_pad // block_n,)
+    out_d, out_i, cnt, uni = pl.pallas_call(
+        functools.partial(_kernel, card=card, scale=float(scale), k=k,
+                          n=n, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, L), lambda i: (i, 0)),
+            pl.BlockSpec((nq, L), lambda i: (0, 0)),
+            pl.BlockSpec((nq, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, card), lambda i: (0, 0)),
+            pl.BlockSpec((1, card), lambda i: (0, 0)),
+            pl.BlockSpec((1, nq), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((nq, k), lambda i: (0, 0)),
+            pl.BlockSpec((nq, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, nq), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+            jax.ShapeDtypeStruct((1, nq), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(codes_p, raw_p, queries.astype(jnp.float32),
+      q_paas.astype(jnp.float32),
+      lower[None, :].astype(jnp.float32),
+      upper[None, :].astype(jnp.float32),
+      bound[None, :].astype(jnp.float32), dead_p[None, :])
+    return out_d, out_i, cnt[0], uni[0, 0]

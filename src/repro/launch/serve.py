@@ -239,13 +239,19 @@ def main(argv=None) -> None:
     shard_note = (f" shards touched={st.get('shards_touched', 1)}/"
                   f"pruned={st.get('shards_pruned', 0)}"
                   if args.shards > 1 and isinstance(st, dict) else "")
+    # leaf-granular planner observability on the serving path: every
+    # probe micro-batch runs the unified plan->prune->scan->verify
+    # pipeline, and the last batch's leaf accounting is reported here
+    leaf_note = (f" leaves scanned={st.get('leaves_scanned', 0)}/"
+                 f"pruned={st.get('leaves_pruned', 0)}"
+                 if isinstance(st, dict) and "leaves_scanned" in st else "")
     print(f"arch={args.arch} [{mode}]: {args.steps} steps x {B} seqs in "
           f"{dt*1e3:.0f} ms ({args.steps*B/dt:.1f} tok/s); "
           f"index={index.n} entries/{len(index.runs)} runs; "
           f"kNN(window={args.knn_window},k={args.knn_k}) "
           f"{probes_answered} probes in {len(probe_lat)} micro-batches "
           f"of {args.probe_batch} ({qps:.1f} probes/s) last_d={last_d:.4f} "
-          f"partitions={st['partitions_touched']}{shard_note}")
+          f"partitions={st['partitions_touched']}{shard_note}{leaf_note}")
     lat = (f"p50={_pctl(probe_lat, 50)*1e3:.1f} ms "
            f"p99={_pctl(probe_lat, 99)*1e3:.1f} ms "
            f"max={max(probe_lat)*1e3:.1f} ms" if probe_lat else "n/a")

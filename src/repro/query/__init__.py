@@ -1,0 +1,28 @@
+"""Unified query subsystem: one plan -> prune -> scan -> verify pipeline.
+
+Every exact-search entry point in the repo (tree, LSM snapshot, sharded
+LSM, mmap segment, serving loop) funnels through the three pieces here:
+
+* :mod:`repro.query.partition` — the uniform :class:`Partition` view a
+  search source must expose: ``(keys, codes, leaf_fences, ts_range,
+  backend)`` over a sorted Coconut run (device tree or mmap segment) or
+  an unsorted frozen buffer.
+* :mod:`repro.query.planner`   — turns a set of partitions into a
+  leaf-granular :class:`ScanPlan`: window/``ts_min`` filtering,
+  whole-partition fence bounds, and per-leaf z-order fence envelopes
+  ordered by mindist (the skip-sequential discipline of SIMS).
+* :mod:`repro.query.executor`  — runs the plan: seed probes, leaf-masked
+  lower-bound scan, batched Euclidean verification (eager kernels on
+  CPU, the fused ``kernels/scan_verify`` Pallas kernel on TPU), against
+  device arrays or straight off an mmap.
+* :mod:`repro.query.merger`    — owns cross-partition best-so-far
+  chaining, k-NN pool merging, and the per-query :class:`SearchStats`
+  accounting (``leaves_pruned`` / ``leaves_scanned``).
+"""
+from .executor import execute, exact_knn
+from .merger import KnnPool, SearchStats, merge_pools, merge_topk
+from .partition import Partition
+from .planner import ScanPlan, build_plan
+
+__all__ = ["Partition", "ScanPlan", "build_plan", "execute", "exact_knn",
+           "KnnPool", "SearchStats", "merge_pools", "merge_topk"]

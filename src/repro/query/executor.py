@@ -1,0 +1,299 @@
+"""Plan execution: seed -> leaf-masked lower-bound scan -> verify.
+
+One executor serves every backend: sorted partitions are scanned
+leaf-granularly (surviving leaves only, cheapest fence bound first —
+skip-sequential SIMS), whether the codes live on device
+(``CoconutTree``) or on disk behind an mmap (``Segment``, with every
+byte that crosses the storage boundary charged to ``IOStats``);
+unsorted frozen buffers are brute-force verified with the same
+Euclidean kernel, so answer *distances* are bit-identical regardless of
+how rows are partitioned — the invariant the streaming and sharded
+engines are built on.
+
+The default scan path keeps the eager kernel chain
+(:func:`repro.core.summarization.mindist_sq_batch` lower bounds +
+:func:`repro.core.summarization.euclidean_sq_batch` verification) whose
+bits every entry point historically returned; ``scan_mode`` opts into
+the fused :mod:`repro.kernels.scan_verify` Pallas kernel (one pass:
+bound + masked verify + on-device top-k), which is the TPU serving
+path and is validated against the eager chain in the kernel tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import summarization as S
+from .merger import KnnPool, SearchStats
+from .partition import Partition
+from .planner import ScanEntry, ScanPlan, build_plan
+
+__all__ = ["execute", "exact_knn", "buffer_topk"]
+
+
+def buffer_topk(queries_j, rows: np.ndarray, offs: np.ndarray, k: int,
+                io=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Brute-force per-query ``[Q, k]`` pools over unsorted rows with
+    the verification kernel — THE buffer-scan contract (stable sort,
+    (inf, -1) padding) shared by the exact executor and the snapshot's
+    approximate path, so the distance bits always match a post-flush
+    search of the same rows."""
+    import jax.numpy as jnp
+    nq = queries_j.shape[0]
+    best_d = np.full((nq, k), np.inf, np.float32)
+    best_off = np.full((nq, k), -1, np.int64)
+    if len(rows) == 0:
+        return best_d, best_off
+    if io is not None:
+        io.seq_read(len(rows))
+    d = np.asarray(S.euclidean_sq_batch(queries_j,
+                                        jnp.asarray(rows)))     # [Q, M]
+    sel = np.argsort(d, axis=1, kind="stable")[:, :k]
+    take = min(k, d.shape[1])
+    best_d[:, :take] = np.take_along_axis(d, sel, axis=1)[:, :take]
+    best_off[:, :take] = offs[sel][:, :take]
+    return best_d, best_off
+
+
+def _scan_buffer(entry: ScanEntry, queries_j, k: int,
+                 pool: KnnPool, stats: SearchStats, io) -> None:
+    part = entry.partition
+    rows = part.buffer_raw()
+    offs = part.report_ids()
+    if entry.ts_min is not None:
+        ts = part.timestamps()
+        keep = np.nonzero(ts >= entry.ts_min)[0]
+        rows, offs = rows[keep], offs[keep]
+    if len(rows) == 0:
+        return
+    new_d, new_off = buffer_topk(queries_j, rows, offs, k, io=io)
+    pool.update_batch(new_d, new_off)
+    stats.buffer_rows += len(rows)
+    stats.candidates_per_query += len(rows)
+
+
+def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
+                 pool: KnnPool, stats: SearchStats, *,
+                 radius_leaves: int, chunk: int, io, mindist_fn,
+                 scan_mode: Optional[str]) -> int:
+    """Seed + leaf-skip scan + verify one sorted partition.  Returns the
+    number of live (query, row) pairs the lower bound could not prune."""
+    import jax.numpy as jnp
+    part = entry.partition
+    nq = queries_j.shape[0]
+    leaf = part.leaf_size
+    alive = None
+    if entry.ts_min is not None:
+        ts = part.timestamps()
+        if ts is not None:
+            alive = ts >= entry.ts_min
+    offs_all = part.report_ids()
+    # the fused kernel streams the whole leaf group's raw rows (that is
+    # the fusion); on mmap partitions that would fetch pruned rows' raw
+    # bytes from disk, so fusion stays a device-backend path
+    fused = scan_mode if part.backend == "device" else None
+
+    # -- seed the pool from the leaves around each query's z-order slot ----
+    idx0 = part.seed_window(queries_j, radius_leaves=radius_leaves, io=io,
+                            q_paas=q_paas_j)
+    rows0 = part.series_rows(idx0.reshape(-1), io=io)
+    # canonical bits: seed distances use the eager kernel's reduction
+    # (sum over the contiguous last axis) so returned values never depend
+    # on partitioning — one gather + one batched op for the whole pool
+    rows0 = jnp.asarray(rows0).reshape(idx0.shape + (-1,))    # [Q, C, L]
+    diff0 = rows0 - queries_j[:, None, :]
+    d0 = np.asarray(jnp.sum(diff0 * diff0, axis=-1), np.float32)
+    if alive is not None:
+        d0 = np.where(alive[idx0], d0, np.inf)
+        offs0 = np.where(alive[idx0], offs_all[idx0], -1)
+    else:
+        offs0 = offs_all[idx0]
+    for qi in range(nq):
+        pool.update(qi, d0[qi], offs0[qi])
+
+    # -- leaf-granular pruning against the fence bounds --------------------
+    # (the seed probe above always runs — the external bsf and the fence
+    # bounds prune the SCAN, never the seeds, matching the historical
+    # run-chaining contract)
+    bound = pool.bound()
+    if np.all(entry.part_bound >= bound):      # whole-partition fast path
+        stats.partitions_pruned += 1
+        stats.leaves_pruned += part.n_leaves
+        return 0
+    lb = entry.leaf_bounds                                    # [Q, n_leaves]
+    surv = np.nonzero((lb < bound[:, None]).any(axis=0))[0]
+    stats.leaves_pruned += lb.shape[1] - len(surv)
+    stats.leaves_scanned += len(surv)
+    if len(surv) == 0:
+        stats.partitions_pruned += 1
+        return 0
+    # cheapest leaves first: the bound tightens fastest, pruning the rest
+    surv = surv[np.argsort(lb[:, surv].min(axis=0), kind="stable")]
+
+    # bound the [Q, B, L] verification intermediate: rows-per-chunk scales
+    # down with batch size (Q=64 x 4096 x L floats thrashes host memory)
+    eff_chunk = min(chunk, max(64, 32768 // nq))
+    leaves_per_grp = max(1, eff_chunk // leaf)
+    leaf_mark = np.zeros((nq, lb.shape[1]), bool)
+    union_mark = np.zeros(lb.shape[1], bool)
+    live_pairs = 0
+    for g in range(0, len(surv), leaves_per_grp):
+        grp = np.sort(surv[g:g + leaves_per_grp])    # sequential within grp
+        row_idx = (grp[:, None] * leaf
+                   + np.arange(leaf)[None, :]).reshape(-1)
+        row_idx = row_idx[row_idx < part.n]
+        codes_blk = part.codes_rows(row_idx, io=io)
+        if fused is not None:
+            live_pairs += _verify_fused(
+                entry, queries_j, q_paas_j, codes_blk, row_idx, k, pool,
+                stats, alive, offs_all, leaf_mark, union_mark, io,
+                fused)
+            continue
+        if part.backend != "device":
+            codes_blk = jnp.asarray(codes_blk)
+        md = np.asarray(mindist_fn(q_paas_j, codes_blk))      # [Q, B]
+        live = md < pool.bound()[:, None]
+        if alive is not None:
+            live &= alive[row_idx][None, :]
+        live_pairs += int(live.sum())
+        keep = live.any(axis=0)
+        if not keep.any():
+            continue
+        block = row_idx[keep]
+        mask = live[:, keep]
+        rows = part.series_rows(block, io=io)
+        if part.backend == "device" and io is not None:
+            io.seq_read(len(block))
+        dd = np.asarray(S.euclidean_sq_batch(queries_j,
+                                             jnp.asarray(rows)))   # [Q, B]
+        stats.candidates += len(block)
+        union_mark[block // leaf] = True
+        for qi in range(nq):
+            m = mask[qi]
+            if not m.any():
+                continue
+            stats.candidates_per_query[qi] += int(m.sum())
+            leaf_mark[qi, block[m] // leaf] = True
+            pool.update(qi, dd[qi][m], offs_all[block[m]])
+    stats.leaves_touched += int(union_mark.sum())
+    stats.leaves_per_query += leaf_mark.sum(axis=1)
+    return live_pairs
+
+
+def _verify_fused(entry: ScanEntry, queries_j, q_paas_j, codes_blk,
+                  row_idx: np.ndarray, k: int, pool: KnnPool,
+                  stats: SearchStats, alive, offs_all,
+                  leaf_mark, union_mark, io, scan_mode: str) -> int:
+    """Fused-kernel verification of one leaf group: bound + masked
+    Euclidean + on-device top-k in a single pass (TPU serving path).
+
+    ``candidates``/``candidates_per_query`` match the eager chain (the
+    kernel reports per-query and union live counts); leaf attribution is
+    top-k-grained — only the rows that survive into the pool mark their
+    leaves, since the full live mask never leaves the device."""
+    import jax.numpy as jnp
+    from ..kernels import ops
+    part = entry.partition
+    nq = queries_j.shape[0]
+    rows = part.series_rows(row_idx, io=io)
+    bound = pool.bound()
+    if alive is not None:
+        dead = ~alive[row_idx]
+    else:
+        dead = None
+    d, li, counts, union = ops.scan_verify(
+        queries_j, q_paas_j, jnp.asarray(codes_blk), jnp.asarray(rows),
+        jnp.asarray(bound), part.cfg, k=min(k, len(row_idx)),
+        mode=scan_mode,
+        dead=None if dead is None else jnp.asarray(dead))
+    d = np.asarray(d, np.float32)
+    li = np.asarray(li)
+    counts = np.asarray(counts)
+    live = 0
+    for qi in range(nq):
+        stats.candidates_per_query[qi] += int(counts[qi])
+        live += int(counts[qi])
+        fin = np.isfinite(d[qi])
+        if not fin.any():
+            continue
+        rows_qi = row_idx[li[qi][fin]]
+        leaf_mark[qi, rows_qi // part.leaf_size] = True
+        union_mark[rows_qi // part.leaf_size] = True
+        pool.update(qi, d[qi][fin], offs_all[rows_qi])
+    stats.candidates += int(union)
+    if io is not None:
+        io.seq_read(len(row_idx))
+    return live
+
+
+def execute(plan: ScanPlan, queries, *, k: int = 1,
+            bsf: Optional[np.ndarray] = None,
+            radius_leaves: int = 1, chunk: int = 4096,
+            io=None, mindist_fn=None,
+            scan_mode: Optional[str] = None
+            ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Run a :class:`ScanPlan` and return (dists ``[Q, k]``, ids
+    ``[Q, k]``, :class:`SearchStats`).
+
+    ``bsf``: optional ``[Q]`` per-query external bounds (LSM run / shard
+    chaining) — they prune the scan but are never returned as answers.
+    ``mindist_fn``: injectable lower-bound kernel with the batched
+    signature ``(q_paas [Q, w], codes [B, w]) -> [Q, B]`` (defaults to
+    :func:`repro.core.summarization.mindist_sq_batch`; the Pallas kernel
+    drops in via ``repro.kernels.ops.mindist_batch``).
+    ``scan_mode``: None (eager chain, the bit-canonical default) or a
+    kernel dispatch mode (``"pallas"`` / ``"interpret"`` / ``"jnp"``)
+    for the fused scan+verify kernel.
+    """
+    import jax.numpy as jnp
+    queries_np = np.atleast_2d(np.asarray(queries, np.float32))
+    nq = queries_np.shape[0]
+    queries_j = jnp.asarray(queries_np)
+    q_paas_j = jnp.asarray(plan.q_paas)
+    pool = KnnPool(nq, k, ext=bsf)
+    stats = SearchStats(exact=True, queries=nq)
+    stats.candidates_per_query = np.zeros(nq, np.int64)
+    stats.leaves_per_query = np.zeros(nq, np.int64)
+    live_pairs = 0
+    total_rows = 0
+    for entry in plan.entries:
+        part = entry.partition
+        if not part.is_sorted:
+            _scan_buffer(entry, queries_j, k, pool, stats, io)
+            continue
+        if mindist_fn is None:
+            cfg = part.cfg
+            part_mindist = lambda qp, c: S.mindist_sq_batch(qp, c, cfg)
+        else:
+            part_mindist = mindist_fn
+        total_rows += part.n
+        pruned_before = stats.partitions_pruned
+        live_pairs += _scan_sorted(
+            entry, queries_j, q_paas_j, k, pool, stats,
+            radius_leaves=radius_leaves, chunk=chunk, io=io,
+            mindist_fn=part_mindist, scan_mode=scan_mode)
+        if stats.partitions_pruned == pruned_before:
+            stats.partitions_touched += 1
+    stats.pruned_frac = 1.0 - live_pairs / max(nq * total_rows, 1)
+    best_d, best_off = pool.result()
+    return best_d, best_off, stats
+
+
+def exact_knn(partitions: Sequence[Partition], queries,
+              cfg: S.SummaryConfig, *, k: int = 1,
+              ts_min: Optional[int] = None, temporal_prune: bool = True,
+              bsf: Optional[np.ndarray] = None, radius_leaves: int = 1,
+              chunk: int = 4096, io=None, mindist_fn=None,
+              scan_mode: Optional[str] = None
+              ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Plan + execute in one call — the pipeline every exact-search entry
+    point (tree, snapshot, sharded shard, mmap segment) delegates to."""
+    import jax.numpy as jnp
+    queries_np = np.atleast_2d(np.asarray(queries, np.float32))
+    q_paas = np.asarray(S.paa(jnp.asarray(queries_np), cfg.segments))
+    plan = build_plan(partitions, q_paas, ts_min=ts_min,
+                      temporal_prune=temporal_prune, io=io)
+    return execute(plan, queries_np, k=k, bsf=bsf,
+                   radius_leaves=radius_leaves, chunk=chunk, io=io,
+                   mindist_fn=mindist_fn, scan_mode=scan_mode)

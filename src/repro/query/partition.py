@@ -1,0 +1,189 @@
+"""The uniform partition view every search source exposes to the planner.
+
+A :class:`Partition` is one searchable unit — a sorted Coconut run held
+on device (:class:`repro.core.tree.CoconutTree`), a sorted run on disk
+(:class:`repro.storage.segment.Segment`, read zero-copy through its
+mmap), or an unsorted frozen insert buffer
+(:class:`repro.ingest.snapshot.FrozenBuffer`) — normalized to the five
+things the pipeline needs: ``(keys, codes, leaf_fences, ts_range,
+backend)``.
+
+Sorted partitions additionally answer *leaf-granular* questions: the
+leaf-first z-order keys (fence pointers) from which the planner derives
+per-leaf mindist bounds, and row-subset accessors (``codes_rows`` /
+``series_rows``) that gather only the surviving leaves — on device for
+trees, as real ``bytes_read``-charged mmap reads for segments.  The
+unsorted buffer has no fences and is brute-force scanned by the
+executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core import summarization as S
+from ..core.metrics import IOStats
+
+__all__ = ["Partition"]
+
+
+@dataclasses.dataclass
+class Partition:
+    """One searchable unit behind the planner/executor pipeline."""
+    kind: str                 # "tree" | "segment" | "buffer"
+    backend: str              # "device" | "mmap" | "host"
+    cfg: S.SummaryConfig
+    n: int
+    leaf_size: int
+    source: object
+    ts_range: Optional[Tuple[int, int]] = None   # (t_min, t_max) or None
+
+    # ------------------------------------------------------------ constructors
+    @classmethod
+    def from_tree(cls, tree, *, ts_range: Optional[Tuple[int, int]] = None
+                  ) -> "Partition":
+        """Wrap an in-memory/device ``CoconutTree`` (or one LSM run's)."""
+        return cls(kind="tree", backend="device", cfg=tree.cfg,
+                   n=tree.n, leaf_size=tree.leaf_size, source=tree,
+                   ts_range=ts_range)
+
+    @classmethod
+    def from_run(cls, run) -> "Partition":
+        """Wrap one LSM :class:`~repro.core.lsm.Run` (tree + time range)."""
+        return cls.from_tree(run.tree, ts_range=(run.t_min, run.t_max))
+
+    @classmethod
+    def from_segment(cls, seg, *,
+                     ts_range: Optional[Tuple[int, int]] = None
+                     ) -> "Partition":
+        """Wrap an on-disk :class:`~repro.storage.segment.Segment`; all
+        row access goes through the mmap and is charged to ``io``.
+        ``ts_range`` is optional — computing it would read the whole
+        timestamp column, so callers that know it (the LSM manifest
+        records t_min/t_max per run) pass it in."""
+        return cls(kind="segment", backend="mmap", cfg=seg.cfg,
+                   n=seg.n, leaf_size=seg.leaf_size, source=seg,
+                   ts_range=ts_range)
+
+    @classmethod
+    def from_buffer(cls, buf, cfg: S.SummaryConfig, *,
+                    ts_range: Optional[Tuple[int, int]] = None
+                    ) -> "Partition":
+        """Wrap a frozen (unsorted) insert buffer — brute-force scanned."""
+        return cls(kind="buffer", backend="host", cfg=cfg,
+                   n=buf.n, leaf_size=max(1, buf.n), source=buf,
+                   ts_range=ts_range)
+
+    # -------------------------------------------------------------- properties
+    @property
+    def is_sorted(self) -> bool:
+        return self.kind != "buffer"
+
+    @property
+    def n_leaves(self) -> int:
+        return -(-self.n // self.leaf_size)
+
+    # ----------------------------------------------------------- sorted access
+    def leaf_fences(self, io: Optional[IOStats] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(leaf-first keys ``[n_leaves, n_words]`` uint32, last key
+        ``[n_words]``) — the implicit internal-node layer the planner
+        turns into per-leaf code envelopes."""
+        if self.kind == "tree":
+            fences = np.asarray(self.source.fences)
+            last = np.asarray(self.source.keys[-1:])[0]
+        else:
+            fences = np.asarray(self.source.fences)
+            last = np.asarray(self.source.keys[self.n - 1])
+            if io is not None:
+                io.read_bytes(fences.nbytes + last.nbytes)
+        return fences, last
+
+    def seed_window(self, queries, *, radius_leaves: int = 1,
+                    io: Optional[IOStats] = None,
+                    q_paas=None) -> np.ndarray:
+        """Row indices ``[Q, span]`` of the leaves around each query's
+        z-order insertion point (the Algorithm-4 probe that seeds the
+        exact scan's best-so-far pool).  ``q_paas``: optional
+        precomputed query PAA (the plan already holds it) — avoids a
+        second summarization on the segment path."""
+        import jax.numpy as jnp
+        if self.kind == "tree":
+            from ..core.tree import _approx_candidates_batch
+            _, idx = _approx_candidates_batch(
+                self.source, jnp.asarray(queries),
+                radius_leaves=radius_leaves)
+            idx = np.asarray(idx)
+        else:
+            from ..core import keys as K
+            seg = self.source
+            cfg = self.cfg
+            queries = np.atleast_2d(np.asarray(queries, np.float32))
+            nq = queries.shape[0]
+            if q_paas is None:
+                q_paas = S.paa(jnp.asarray(queries), cfg.segments)
+            q_codes = S.sax_encode(jnp.asarray(q_paas), cfg.bits)
+            q_keys = K.interleave_codes(q_codes, w=cfg.segments, b=cfg.bits)
+            # fence bytes were already charged when the planner read the
+            # fence column for the leaf envelopes; the probe rereads the
+            # same (now hot) pages, so it is not charged again
+            fences = np.asarray(seg.fences)
+            if len(fences):
+                leaf = np.asarray(K.searchsorted_keys(jnp.asarray(fences),
+                                                      q_keys))
+            else:
+                leaf = np.zeros(nq, np.int32)
+            span = 2 * radius_leaves * self.leaf_size
+            center = leaf.astype(np.int64) * self.leaf_size
+            start = np.clip(center - span // 2, 0, max(self.n - span, 0))
+            idx = start[:, None] + np.arange(span)[None, :]
+            idx = np.clip(idx, 0, self.n - 1)
+        if io is not None:
+            io.rand_read(2 * radius_leaves * len(idx))
+        return idx
+
+    def codes_rows(self, idx: np.ndarray,
+                   io: Optional[IOStats] = None):
+        """SAX code rows for sorted-order indices (device array for
+        trees, real charged mmap reads for segments)."""
+        if self.kind == "tree":
+            import jax.numpy as jnp
+            return self.source.codes[jnp.asarray(idx)]
+        blk = np.asarray(self.source.codes[idx])
+        if io is not None:
+            io.read_bytes(blk.nbytes)
+            io.seq_read(len(blk))
+        return blk
+
+    def series_rows(self, idx: np.ndarray,
+                    io: Optional[IOStats] = None):
+        """Raw rows for sorted-order indices (verification fetch)."""
+        if self.kind == "tree":
+            import jax.numpy as jnp
+            return self.source.series(jnp.asarray(idx))
+        if self.kind == "segment":
+            return self.source.series_rows(idx, io=io)
+        return self.source.raw[idx]
+
+    # ------------------------------------------------------------- row columns
+    def report_ids(self) -> np.ndarray:
+        """Column reported as the 'offset' of an answer: the global row
+        id when the partition carries ids (LSM runs), else the position
+        in the original raw file (standalone trees/segments keep their
+        historical contract)."""
+        src = self.source
+        if self.kind == "buffer":
+            return np.asarray(src.ids)
+        col = src.ids if src.ids is not None else src.offsets
+        return np.asarray(col)
+
+    def timestamps(self) -> Optional[np.ndarray]:
+        if self.kind == "buffer":
+            return np.asarray(self.source.ts)
+        ts = self.source.timestamps
+        return None if ts is None else np.asarray(ts)
+
+    def buffer_raw(self) -> np.ndarray:
+        return np.asarray(self.source.raw)

@@ -46,7 +46,6 @@ from typing import Iterator, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import keys as K
 from ..core import summarization as S
 from ..core.metrics import IOStats
 
@@ -498,99 +497,24 @@ def exact_search_mmap(seg: Segment, queries: np.ndarray, *,
                       ) -> Tuple[np.ndarray, np.ndarray, "object"]:
     """Exact k-NN straight off the segment file (SIMS, Algorithm 5).
 
-    The code column is streamed from the mmap in ``chunk``-row slices and
-    fed to the existing batched mindist kernel; only unpruned rows are
-    fetched from the raw block.  Every byte that actually crosses the
-    storage boundary is charged to ``io`` (``bytes_read``), so cold-vs-warm
-    benchmarks measure real page-cache behavior.
+    The segment is just another backend of the unified query pipeline
+    (:mod:`repro.query`): the on-disk fence column prices every leaf
+    with its z-order envelope mindist, the executor streams ONLY the
+    surviving leaves' code rows from the mmap (skip-sequential — pruned
+    leaves' pages are never touched), and unpruned rows are fetched from
+    the raw block for verification.  Every byte that actually crosses
+    the storage boundary is charged to ``io`` (``bytes_read``), so
+    cold-vs-warm benchmarks measure real page-cache behavior.
 
-    Returns ``(dists [Q, k], offsets [Q, k], SearchStats)`` matching
-    :func:`repro.core.tree.exact_search_batch` on the same data.
+    Returns ``(dists [Q, k], offsets [Q, k], SearchStats)`` — answers
+    bit-identical to :func:`repro.core.tree.exact_search_batch` on the
+    same data.
     """
-    from ..core.tree import SearchStats, _merge_topk
+    from ..query import Partition, exact_knn
     if seg.raw is None:
         raise SegmentFormatError(
             f"{seg.path}: exact search needs the raw block on disk")
     queries = np.atleast_2d(np.asarray(queries, np.float32))
-    nq = queries.shape[0]
-    cfg = seg.cfg
-    q_paas = S.paa(jnp.asarray(queries), cfg.segments)
-    if mindist_fn is None:
-        mindist_fn = lambda qp, codes: S.mindist_sq_batch(qp, codes, cfg)
-
-    # -- seed from the fence pointers (binary search over leaf-first keys) --
-    fences = np.asarray(seg.fences)
-    if io is not None:
-        io.read_bytes(fences.nbytes)
-    q_codes = S.sax_encode(q_paas, cfg.bits)
-    q_keys = K.interleave_codes(q_codes, w=cfg.segments, b=cfg.bits)
-    if len(fences):
-        leaf = np.asarray(K.searchsorted_keys(jnp.asarray(fences), q_keys))
-    else:
-        leaf = np.zeros(nq, np.int32)
-    span = 2 * radius_leaves * seg.leaf_size
-    best_d = np.full((nq, k), np.inf, np.float32)
-    best_off = np.full((nq, k), -1, np.int64)
-    # report global row ids when the segment carries them (LSM runs),
-    # matching repro.core.tree search on the same data
-    offs_mm = seg.ids if seg.ids is not None else seg.offsets
-    for qi in range(nq):
-        center = int(leaf[qi]) * seg.leaf_size
-        start = min(max(center - span // 2, 0), max(seg.n - span, 0))
-        idx = np.arange(start, min(start + span, seg.n))
-        if len(idx) == 0:
-            continue
-        rows = seg.series_rows(idx, io=io)
-        if io is not None:
-            io.rand_read(2 * radius_leaves)
-        d = np.asarray(S.euclidean_sq(jnp.asarray(queries[qi]),
-                                      jnp.asarray(rows)))
-        best_d[qi], best_off[qi] = _merge_topk(
-            d, np.asarray(offs_mm[idx]), k)
-    bound = best_d[:, -1].copy()
-
-    stats = SearchStats(candidates=0, exact=True, queries=nq)
-    stats.candidates_per_query = np.zeros(nq, np.int64)
-    stats.leaves_per_query = np.zeros(nq, np.int64)
-    unpruned = 0
-    leaves_union: set = set()
-
-    # -- chunk-wise streaming SIMS scan over the code column ----------------
-    # bound the [Q, B, L] verification intermediate like exact_search_batch:
-    # rows-per-chunk scales down with batch size to avoid host-memory thrash
-    eff_chunk = min(chunk, max(64, 32768 // nq))
-    for s in range(0, seg.n, eff_chunk):
-        e = min(s + eff_chunk, seg.n)
-        codes_blk = np.asarray(seg.codes[s:e])
-        if io is not None:
-            io.read_bytes(codes_blk.nbytes)
-            io.seq_read(e - s)
-        md = np.asarray(mindist_fn(q_paas, jnp.asarray(codes_blk)))
-        live = md < bound[:, None]                       # [Q, B]
-        keep = live.any(axis=0)
-        unpruned += int(live.sum())
-        if not keep.any():
-            continue
-        block = s + np.nonzero(keep)[0]
-        mask = live[:, keep]
-        for lf in np.unique(block // seg.leaf_size):
-            leaves_union.add(int(lf))
-        rows = seg.series_rows(block, io=io)
-        dd = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
-                                             jnp.asarray(rows)))
-        stats.candidates += len(block)
-        offs_blk = np.asarray(offs_mm[block])
-        for qi in range(nq):
-            m = mask[qi]
-            if not m.any():
-                continue
-            stats.candidates_per_query[qi] += int(m.sum())
-            stats.leaves_per_query[qi] += len(
-                np.unique(block[m] // seg.leaf_size))
-            best_d[qi], best_off[qi] = _merge_topk(
-                np.concatenate([best_d[qi], dd[qi][m]]),
-                np.concatenate([best_off[qi], offs_blk[m]]), k)
-            bound[qi] = best_d[qi, -1]
-    stats.pruned_frac = 1.0 - unpruned / max(nq * seg.n, 1)
-    stats.leaves_touched = len(leaves_union)
-    return best_d, best_off, stats
+    return exact_knn([Partition.from_segment(seg)], queries, seg.cfg,
+                     k=k, radius_leaves=radius_leaves, chunk=chunk,
+                     io=io, mindist_fn=mindist_fn)

@@ -32,7 +32,7 @@ def test_sharded_sort_and_exact_search():
         from repro.core import summarization as S, keys as K
         from repro.data.series import random_walk
         from repro.distributed.sharded_index import build_sharded, \\
-            distributed_exact_search, distributed_exact_search_pruned
+            distributed_exact_search, distributed_exact_search_batch
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
         raw = np.asarray(random_walk(jax.random.PRNGKey(0), 4096, 64))
@@ -47,10 +47,11 @@ def test_sharded_sort_and_exact_search():
         bf = np.sort(np.asarray(S.euclidean_sq(jnp.asarray(q),
                                                jnp.asarray(raw))))[:3]
         np.testing.assert_allclose(np.asarray(d), bf, rtol=1e-4, atol=1e-4)
-        d2, _, cert = distributed_exact_search_pruned(tree, q, k=3,
-                                                      budget=512)
-        np.testing.assert_allclose(np.asarray(d2), bf, rtol=1e-4, atol=1e-4)
-        print("DIST_OK", bool(cert))
+        d2, _, cert = distributed_exact_search_batch(
+            tree, jnp.asarray(q)[None, :], k=3, budget=512)
+        np.testing.assert_allclose(np.asarray(d2)[0], bf,
+                                   rtol=1e-4, atol=1e-4)
+        print("DIST_OK", bool(np.asarray(cert)[0]))
     """)
     assert "DIST_OK" in out
 
@@ -61,13 +62,14 @@ def test_batch_fold_bit_parity_and_ts_window():
     the single-device mesh (per-row distances are computed by the same
     contiguous reduction on every shard, so sharding cannot change the
     bits), including ts_min window filtering and the budget+certified
-    variant; the deprecated pruned wrapper stays answer-identical."""
+    variant (the deprecated pruned wrapper is gone — budget= is the one
+    entry point)."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import summarization as S
         from repro.data.series import random_walk
         from repro.distributed.sharded_index import build_sharded, \\
-            distributed_exact_search_batch, distributed_exact_search_pruned
+            distributed_exact_search_batch
         cfg = S.SummaryConfig(series_len=32, segments=8, bits=4)
         raw = np.asarray(random_walk(jax.random.PRNGKey(2), 4096, 32))
         ts = np.arange(4096, dtype=np.int64)
@@ -97,11 +99,12 @@ def test_batch_fold_bit_parity_and_ts_window():
                                                       budget=1024)
         assert np.asarray(cert).shape == (4,)
         np.testing.assert_array_equal(np.asarray(db), np.asarray(d8))
-        # deprecated single-query wrapper keeps its contract
-        dp, rp, cp = distributed_exact_search_pruned(t8, np.asarray(qs)[0],
-                                                     k=3, budget=1024)
-        np.testing.assert_array_equal(np.asarray(dp), np.asarray(d8)[0])
-        print("FOLD_OK", bool(np.asarray(cert).all()), bool(cp))
+        # Q=1 budgeted slice stays answer-identical to the batch row
+        dp, rp, cp = distributed_exact_search_batch(
+            t8, jnp.asarray(np.asarray(qs)[0])[None, :], k=3, budget=1024)
+        np.testing.assert_array_equal(np.asarray(dp)[0], np.asarray(d8)[0])
+        print("FOLD_OK", bool(np.asarray(cert).all()),
+              bool(np.asarray(cp)[0]))
     """)
     assert "FOLD_OK" in out
 

@@ -121,7 +121,7 @@ def test_wal_crash_replay_recovers_acked_inserts(tmp_path, data):
     re.check_invariants()
     for q in queries:
         d, _, _ = re.search_exact(q)
-        assert abs(d - _bruteforce_min(q, raw[:700])) < 1e-3
+        assert abs(float(d[0]) - _bruteforce_min(q, raw[:700])) < 1e-3
     # the reopened index keeps ingesting and stays crash-safe
     re.insert(raw[700:750])
     del re                              # crash again, buffer only
@@ -179,10 +179,10 @@ def test_interleaved_insert_search_parity(mode, data):
             for q in queries[:2]:
                 d_s, _, _ = sync.search_exact(q)
                 d_c, _, _ = conc.search_exact(q)
-                assert d_s == d_c
+                np.testing.assert_array_equal(d_s, d_c)
                 d_sw, _, _ = sync.search_exact(q, window=300)
                 d_cw, _, _ = conc.search_exact(q, window=300)
-                assert d_sw == d_cw
+                np.testing.assert_array_equal(d_sw, d_cw)
             bd_s, _, _ = sync.search_exact_batch(queries, k=3)
             bd_c, _, _ = conc.search_exact_batch(queries, k=3)
             np.testing.assert_array_equal(bd_s, bd_c)
@@ -216,7 +216,8 @@ def test_search_during_sustained_ingest(data):
         try:
             for _ in range(20):
                 n_before = lsm.n
-                d, off, info = lsm.search_exact(queries[0])
+                dk, off, info = lsm.search_exact(queries[0])
+                d = float(dk[0])
                 n_after = lsm.n
                 # snapshot consistency: inserts land in whole 64-row
                 # batches, so the answer must be exact for SOME batch
@@ -233,7 +234,7 @@ def test_search_during_sustained_ingest(data):
             t.join()
         lsm.flush()
         d, _, _ = lsm.search_exact(queries[0])
-        assert abs(d - _bruteforce_min(queries[0], raw)) < 1e-4
+        assert abs(float(d[0]) - _bruteforce_min(queries[0], raw)) < 1e-4
 
 
 # ------------------------------------------------- backpressure + scheduling
@@ -319,10 +320,11 @@ def test_sync_engine_snapshot_excludes_buffer(data):
     lsm = CoconutLSM(CFG, buffer_capacity=4096, leaf_size=32)
     lsm.insert(raw[:500])
     d, off, _ = lsm.search_exact(queries[0])
-    assert not np.isfinite(d)           # nothing flushed yet
+    assert not np.isfinite(d[0])        # nothing flushed yet
     lsm.flush()
     d, off, _ = lsm.search_exact(queries[0])
-    assert abs(d - _bruteforce_min(queries[0], raw[:500])) < 1e-4
+    assert abs(float(d[0])
+               - _bruteforce_min(queries[0], raw[:500])) < 1e-4
 
 
 # ------------------------------------------------------ thread-safe counters

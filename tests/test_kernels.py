@@ -15,6 +15,7 @@ from repro.kernels.batch_euclid import batch_euclid_pallas
 from repro.kernels.mindist_batch import mindist_batch_pallas
 from repro.kernels.mindist_scan import mindist_pallas
 from repro.kernels.sax_summarize import sax_summarize_pallas
+from repro.kernels.scan_verify import scan_verify_pallas
 from repro.kernels.zorder import zorder_pallas
 
 SWEEP = [
@@ -169,3 +170,82 @@ def test_fused_build_kernel(n, L, w, b):
                                rtol=1e-6, atol=1e-6)
     assert np.array_equal(np.asarray(codes_k), np.asarray(codes_r))
     assert np.array_equal(np.asarray(keys_k), np.asarray(keys_r))
+
+
+# ------------------------------------------------- fused scan+verify kernel
+
+@pytest.mark.parametrize("n,L,w,b", [(17, 32, 4, 2), (256, 64, 8, 4),
+                                     (300, 128, 16, 8), (513, 64, 8, 8)])
+@pytest.mark.parametrize("nq,k", [(1, 1), (5, 3)])
+def test_scan_verify_kernel(n, L, w, b, nq, k):
+    """Fused bound+verify+top-k (interpret mode) vs the jnp oracle:
+    identical counts, matching top-k distances, and every returned index
+    really has the returned distance."""
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    paa, codes = S.summarize(x, cfg)
+    queries = _data(nq, L, seed=3)
+    q_paas = S.paa(queries, w)
+    lower = jnp.nan_to_num(S.region_bounds(b)[0], neginf=-1e30)
+    upper = jnp.nan_to_num(S.region_bounds(b)[1], posinf=1e30)
+    scale = L / w
+    # a mid-range bound so some rows are pruned and some verified
+    ed = np.asarray(ref.batch_euclid_multi_ref(queries, x))
+    bound = jnp.asarray(np.median(ed, axis=1).astype(np.float32))
+    dead = jnp.zeros(n, jnp.int32).at[: n // 5].set(1)
+    d_k, i_k, c_k, u_k = scan_verify_pallas(
+        queries, q_paas, codes.astype(jnp.int32), x, lower, upper,
+        bound, dead, scale=scale, k=k, block_n=128, interpret=True)
+    d_r, i_r, c_r, u_r = ref.scan_verify_ref(
+        queries, q_paas, codes, x, lower, upper, bound, dead,
+        scale=scale, k=k)
+    assert np.array_equal(np.asarray(c_k), np.asarray(c_r))
+    assert int(u_k) == int(u_r)
+    assert int(u_k) <= int(np.asarray(c_k).sum())
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-5, atol=1e-5)
+    ed_np = np.asarray(ed)
+    for qi in range(nq):
+        for j in range(k):
+            idx = int(np.asarray(i_k)[qi, j])
+            dv = float(np.asarray(d_k)[qi, j])
+            if np.isfinite(dv):
+                assert idx >= 0
+                np.testing.assert_allclose(ed_np[qi, idx], dv,
+                                           rtol=1e-5, atol=1e-5)
+            else:
+                assert idx == -1
+
+
+def test_scan_verify_dispatch_modes_agree():
+    cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+    x = _data(200, 64)
+    paa, codes = S.summarize(x, cfg)
+    queries = _data(4, 64, seed=7)
+    q_paas = S.paa(queries, 8)
+    bound = jnp.full(4, 1e9, jnp.float32)
+    base = None
+    for mode in ("jnp", "interpret"):
+        d, i, c, u = ops.scan_verify(queries, q_paas, codes, x, bound,
+                                     cfg, k=3, mode=mode)
+        if base is None:
+            base = (d, c, u)
+        else:
+            np.testing.assert_allclose(np.asarray(base[0]), np.asarray(d),
+                                       rtol=1e-5, atol=1e-5)
+            assert np.array_equal(np.asarray(base[1]), np.asarray(c))
+            assert int(base[2]) == int(u)
+
+
+def test_batch_euclid_default_resolves_by_backend(monkeypatch):
+    """Satellite: batch_euclid_pallas no longer hard-codes
+    interpret=True — the default resolves through the backend policy
+    (interpret off-TPU), and ops.batch_euclid stays the dispatch home."""
+    import inspect
+    sig = inspect.signature(batch_euclid_pallas)
+    assert sig.parameters["interpret"].default is None
+    x = _data(64, 32)
+    got = batch_euclid_pallas(x[0], x, block_n=32)    # CPU -> interpret
+    want = ref.batch_euclid_ref(x[0], x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,223 @@
+"""Unified query pipeline: partition/planner/executor/merger contracts.
+
+The acceptance bar (ISSUE 5): every search entry point delegates to ONE
+plan -> prune -> scan -> verify pipeline, answers (distance bits AND
+ids) are identical across backends on the same data, the leaf-fence
+bounds actually skip leaves (``leaves_pruned > 0``) without increasing
+verified candidates, and the mmap backend charges real ``bytes_read``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import summarization as S, tree as T
+from repro.core.lsm import CoconutLSM
+from repro.core.metrics import IOStats
+from repro.data.series import query_workload, random_walk
+from repro.query import Partition, build_plan, exact_knn, execute
+from repro.query.planner import envelope_mindist_sq, leaf_envelopes
+from repro.storage import Segment, exact_search_mmap
+
+CFG = S.SummaryConfig(series_len=64, segments=16, bits=8)
+N = 4000
+NQ = 6
+
+
+@pytest.fixture(scope="module")
+def data():
+    raw = random_walk(jax.random.PRNGKey(0), N, 64)
+    queries = query_workload(jax.random.PRNGKey(1), raw, NQ)
+    return raw, queries
+
+
+@pytest.fixture(scope="module")
+def tree(data):
+    raw, _ = data
+    return T.build(raw, CFG, leaf_size=64,
+                   timestamps=jnp.arange(N, dtype=jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def segment(tree, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("seg") / "t.coco")
+    T.save(tree, path)
+    seg = Segment.open(path)
+    yield seg
+    seg.close()
+
+
+# --------------------------------------------------- mmap/in-memory parity
+
+def test_mmap_bit_parity_with_inmemory_executor(data, tree, segment):
+    """Satellite: the mmap backend is just another Partition — same
+    partition contents, bit-identical distances AND ids."""
+    raw, queries = data
+    for k in (1, 5):
+        d_mem, off_mem, st_mem = T.exact_search_batch(
+            tree, queries, k=k)
+        d_mm, off_mm, st_mm = exact_search_mmap(
+            segment, np.asarray(queries), k=k)
+        np.testing.assert_array_equal(d_mm, d_mem)   # BIT identical
+        np.testing.assert_array_equal(off_mm, off_mem)
+
+
+def test_mmap_leaf_accounting_and_bytes_read(data, segment):
+    """Satellite: SearchStats leaf accounting is consistent and every
+    scanned byte is charged to IOStats."""
+    raw, queries = data
+    io = IOStats(64)
+    d, off, st = exact_search_mmap(segment, np.asarray(queries), k=1,
+                                   io=io)
+    n_leaves = -(-segment.n // segment.leaf_size)
+    assert st.leaves_scanned + st.leaves_pruned == n_leaves
+    assert st.leaves_touched <= st.leaves_scanned
+    # single-query scans (no cross-query union) actually skip leaves
+    _, _, st1 = exact_search_mmap(segment, np.asarray(queries[:1]), k=1)
+    assert st1.leaves_pruned > 0           # fence bounds actually skip
+    assert st1.leaves_scanned + st1.leaves_pruned == n_leaves
+    assert st.candidates <= int(st.candidates_per_query.sum())
+    # bytes_read covers at least: the fence column (planner + seed), the
+    # code rows of every scanned leaf, and the verified raw rows
+    w, L = segment.cfg.segments, segment.cfg.series_len
+    scanned_code_bytes = (st.leaves_scanned - 1) * segment.leaf_size * w
+    verified_raw_bytes = st.candidates * L * 4
+    assert io.bytes_read >= (segment.fences.nbytes
+                             + scanned_code_bytes + verified_raw_bytes)
+
+
+def test_leaf_pruning_does_not_increase_candidates(data, tree):
+    """The leaf-skip scan must verify no more rows than a plan that
+    scans every leaf (row-level pruning subsumes the fence bound)."""
+    raw, data_queries = data
+    queries = np.asarray(data_queries[:1])   # no cross-query leaf union
+    part = Partition.from_tree(tree)
+    q_paas = np.asarray(S.paa(jnp.asarray(queries), CFG.segments))
+    plan = build_plan([part], q_paas)
+    d0, off0, st = execute(plan, np.asarray(queries), k=1)
+    assert st.leaves_pruned > 0
+    # force a no-skip plan: zero leaf/partition bounds keep every leaf
+    plan_all = build_plan([part], q_paas)
+    for e in plan_all.entries:
+        e.leaf_bounds = np.zeros_like(e.leaf_bounds)
+        e.part_bound = np.zeros_like(e.part_bound)
+    d1, off1, st_all = execute(plan_all, np.asarray(queries), k=1)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(off0, off1)
+    assert st.candidates <= st_all.candidates
+    assert np.all(st.candidates_per_query <= st_all.candidates_per_query)
+
+
+# ------------------------------------------------------------ planner math
+
+def test_leaf_envelopes_match_bigint_oracle(tree):
+    """The vectorized per-leaf envelope equals the router's bigint
+    common-prefix computation, leaf by leaf."""
+    from repro.core import keys as K
+    from repro.distributed.router import key_range_code_bounds
+    fences = np.asarray(tree.fences)
+    last = np.asarray(tree.keys[-1:])[0]
+    lo_env, hi_env = leaf_envelopes(fences, last, CFG)
+    his = np.concatenate([fences[1:], last[None]], axis=0)
+    lo_big = K.keys_to_bigint(fences)
+    hi_big = K.keys_to_bigint(his)
+    for i in range(len(fences)):
+        clo, chi = key_range_code_bounds(lo_big[i], hi_big[i], CFG)
+        np.testing.assert_array_equal(lo_env[i], clo)
+        np.testing.assert_array_equal(hi_env[i], chi)
+
+
+def test_envelope_bound_is_sound(data, tree):
+    """Every leaf's envelope mindist lower-bounds the true ED^2 of every
+    row in that leaf (the pruning-safety invariant)."""
+    raw, queries = data
+    fences = np.asarray(tree.fences)
+    last = np.asarray(tree.keys[-1:])[0]
+    lo_env, hi_env = leaf_envelopes(fences, last, CFG)
+    q_paas = np.asarray(S.paa(jnp.asarray(queries), CFG.segments))
+    bounds = envelope_mindist_sq(q_paas, lo_env, hi_env, CFG)  # [Q, nl]
+    rows = np.asarray(tree.raw)
+    ed = np.asarray(S.euclidean_sq_batch(jnp.asarray(queries),
+                                         jnp.asarray(rows)))   # [Q, N]
+    for lf in range(len(fences)):
+        s, e = lf * tree.leaf_size, min((lf + 1) * tree.leaf_size, tree.n)
+        assert np.all(bounds[:, lf][:, None] <= ed[:, s:e] + 1e-3)
+
+
+# ------------------------------------------------------- buffer partitions
+
+def test_buffer_partition_matches_flushed_engine(data):
+    """A frozen-buffer partition returns the same distances as the same
+    rows after a flush (the concurrent-visibility invariant, now owned
+    by the executor)."""
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    with CoconutLSM(CFG, buffer_capacity=256, leaf_size=64,
+                    concurrent=True, max_debt=64) as conc:
+        conc.insert(raw_np[:1000])
+        d_buf, off_buf, _ = conc.search_exact_batch(np.asarray(queries),
+                                                    k=3)
+        conc.flush()
+        d_run, off_run, _ = conc.search_exact_batch(np.asarray(queries),
+                                                    k=3)
+    np.testing.assert_array_equal(d_buf, d_run)
+    np.testing.assert_array_equal(off_buf, off_run)
+
+
+# -------------------------------------------------------- fused-kernel path
+
+def test_fused_scan_mode_matches_eager_chain(data, tree):
+    """scan_mode routes verification through the fused scan_verify
+    kernel (jnp oracle / interpret-mode Pallas); answers must match the
+    eager chain to float tolerance with identical ids."""
+    raw, queries = data
+    d_ref, off_ref, _ = T.exact_search_batch(tree, queries, k=3)
+    for mode in ("jnp", "interpret"):
+        d_f, off_f, st = exact_knn(
+            [Partition.from_tree(tree)], np.asarray(queries), CFG,
+            k=3, scan_mode=mode)
+        np.testing.assert_allclose(d_f, d_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(off_f, off_ref)
+        # fused accounting matches the eager chain's semantics:
+        # candidates is the union of live rows, bounded by the sum
+        assert 0 < st.candidates <= int(st.candidates_per_query.sum())
+
+
+# ------------------------------------------------------- scalar deprecation
+
+def test_scalar_shim_is_gone():
+    """Satellite: the as_scalar_result shim is deleted; single-query
+    entry points return length-k arrays."""
+    assert not hasattr(T, "as_scalar_result")
+    assert "as_scalar_result" not in T.__all__
+
+
+def test_single_query_returns_arrays(data, tree):
+    raw, queries = data
+    d, off, _ = T.exact_search(tree, queries[0])
+    assert d.shape == (1,) and off.shape == (1,)
+    d3, off3, _ = T.exact_search(tree, queries[0], k=3)
+    assert d3.shape == (3,) and off3.shape == (3,)
+
+
+# ----------------------------------------------------------- window pruning
+
+def test_planner_window_filtering_matches_brute_force(data):
+    """ts_min filtering through the planner: straddling runs are
+    post-filtered row-wise, old runs dropped, answers equal brute force
+    over the window — for every mode."""
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    W = 1100
+    for mode in ("pp", "tp", "btp"):
+        lsm = CoconutLSM(CFG, buffer_capacity=512, leaf_size=64,
+                         mode=mode)
+        for s in range(0, N, 500):
+            lsm.insert(raw_np[s: s + 500])
+        lsm.flush()
+        d, _, info = lsm.search_exact_batch(np.asarray(queries), k=1,
+                                            window=W)
+        bf = np.asarray(S.euclidean_sq_batch(
+            jnp.asarray(queries), jnp.asarray(raw_np[-W:]))).min(axis=1)
+        np.testing.assert_allclose(d[:, 0], bf, rtol=1e-5, atol=1e-4)
+        assert "leaves_pruned" in info and "partitions_pruned" in info

@@ -88,8 +88,8 @@ def test_exact_parity_across_shard_counts(data, engines):
 
 
 def test_exact_parity_single_query_and_k_kwarg(data, engines):
-    """Satellite: the single-query paths take k= and return length-k
-    arrays matching the batch row; k=None keeps the scalar shim."""
+    """The single-query paths take k= (default 1) and return length-k
+    arrays matching the batch row — the scalar shim is gone."""
     raw, queries = data
     single, sharded = engines
     eng = sharded[2]
@@ -98,8 +98,10 @@ def test_exact_parity_single_query_and_k_kwarg(data, engines):
         d_k, off_k, _ = eng.search_exact(queries[qi], k=3)
         np.testing.assert_array_equal(d_k, d_b[qi])
         np.testing.assert_array_equal(off_k, off_b[qi])
-        d_s, off_s, _ = eng.search_exact(queries[qi])     # deprecated path
-        assert (d_s, off_s) == (float(d_b[qi, 0]), int(off_b[qi, 0]))
+        d_s, off_s, _ = eng.search_exact(queries[qi])     # k defaults to 1
+        assert d_s.shape == (1,) and off_s.shape == (1,)
+        assert (float(d_s[0]), int(off_s[0])) \
+            == (float(d_b[qi, 0]), int(off_b[qi, 0]))
         # same contract on the unsharded engine and the bare tree
         d_u, off_u, _ = single.search_exact(queries[qi], k=3)
         np.testing.assert_array_equal(d_u, d_b[qi])
@@ -282,7 +284,8 @@ def test_search_during_sharded_ingest(data):
         done = False
         try:
             for _ in range(10):
-                d, off, _ = eng.search_exact(queries[0])
+                dk, offk, _ = eng.search_exact(queries[0])
+                d, off = float(dk[0]), int(offk[0])
                 if np.isfinite(d):
                     # the id is a global stream position; its row's true
                     # distance must equal the reported distance
@@ -299,7 +302,8 @@ def test_search_during_sharded_ingest(data):
         d, off, _ = eng.search_exact(queries[0])
         bf = np.asarray(S.euclidean_sq(jnp.asarray(queries[0]),
                                        jnp.asarray(raw)))
-        assert abs(d - bf.min()) < 1e-4 and off == bf.argmin()
+        assert abs(float(d[0]) - bf.min()) < 1e-4
+        assert int(off[0]) == bf.argmin()
 
 
 def test_snapshot_set_atomic_under_stuck_epoch(data, engines):

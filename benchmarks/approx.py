@@ -1,0 +1,102 @@
+"""Recall-vs-latency curves for budgeted approximate-first search.
+
+Beyond the paper's Fig. 13c/d radius sweep: the ISSUE-6 budget dial.
+One 64k-series tree, 16 queries issued one per call (the serving
+shape — a budget prices ONE search), and a sweep of ``max_leaves``
+budgets expressed as fractions of the leaf count: from the pure
+Algorithm-4 seed probe (frac 0) to a full drain (frac 1, which must
+recover the exact answer).  Each point reports mean per-query wall
+time, recall@10 against the exact answer, and the certified gap; the
+gap-soundness inequality (``exact_kth >= approx_kth - gap``) is
+asserted at EVERY point, so a broken certificate fails the benchmark
+instead of mis-plotting it.
+
+Results land in ``BENCH_approx.json`` at the repo root (CI uploads it
+as an artifact).  ``--smoke`` sweeps a reduced fraction set and gates
+on the acceptance bar: recall@10 >= 0.9 at a 10%-of-leaves budget.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import tree as T
+
+from .common import cfg_for, dataset, emit
+
+K_AT = 10
+N = 65536
+FRACS = (0.0, 0.01, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0)
+SMOKE_FRACS = (0.0, 0.05, 0.1, 1.0)
+
+
+def bench_approx(n: int, fracs, *, smoke: bool = False) -> dict:
+    cfg = cfg_for()
+    leaf = 64
+    raw = dataset(n)
+    tree = T.build(raw, cfg, leaf_size=leaf)
+    queries = np.asarray(dataset(16, seed=9))
+    nq = queries.shape[0]
+
+    d_ex, off_ex, _ = T.exact_search_batch(tree, queries, k=K_AT)
+    ex_kth = np.asarray(d_ex)[:, -1]
+    ex_ids = [set(map(int, row)) for row in np.asarray(off_ex)]
+
+    curves = []
+    for frac in fracs:
+        b = int(round(frac * tree.n_leaves))
+        kw = dict(k=K_AT, budget=b, mode="approx")
+        T.exact_search_batch(tree, queries[:1], **kw)       # warmup jit
+        hits, gaps, scanned = [], [], []
+        t0 = time.perf_counter()
+        for i in range(nq):
+            d, off, st = T.exact_search_batch(tree, queries[i:i + 1],
+                                              **kw)
+            d = np.asarray(d)
+            # the certificate must be sound at every rung of the dial
+            assert st.gap is not None and np.isfinite(st.gap[0]), st
+            assert ex_kth[i] >= d[0, -1] - st.gap[0] - 1e-3, (frac, i)
+            hits.append(len(set(map(int, np.asarray(off)[0]))
+                            & ex_ids[i]) / K_AT)
+            gaps.append(float(st.gap[0]))
+            scanned.append(int(st.leaves_scanned))
+            if frac == 1.0:            # full drain recovers exactness
+                assert st.exact and st.gap[0] == 0.0, st
+        us = (time.perf_counter() - t0) / nq * 1e6
+        rec = float(np.mean(hits))
+        if frac == 1.0:
+            assert rec == 1.0, rec
+        curves.append({
+            "frac": frac, "budget_leaves": b, "us_per_query": us,
+            "recall_at_10": rec,
+            "gap_mean": float(np.mean(gaps)),
+            "gap_max": float(np.max(gaps)),
+            "leaves_scanned_mean": float(np.mean(scanned)),
+        })
+        emit(f"approx/budget_frac{frac}/n{n}", us,
+             f"leaves={b};recall@10={rec:.3f};"
+             f"gap_mean={np.mean(gaps):.4f}")
+        if frac == 0.1:
+            # acceptance gate (ISSUE 6): a 10%-of-leaves budget must
+            # keep recall@10 >= 0.9 on the 64k benchmark — a frontier
+            # or seed regression fails here instead of silently
+            # degrading quality
+            assert rec >= 0.9, rec
+
+    return {"n": n, "n_leaves": tree.n_leaves, "leaf_size": leaf,
+            "k": K_AT, "n_queries": nq, "smoke": smoke, "curves": curves}
+
+
+def main(smoke: bool = False) -> None:
+    result = bench_approx(N, SMOKE_FRACS if smoke else FRACS,
+                          smoke=smoke)
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_approx.json"
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    emit("approx/report", 0.0, f"wrote={out.name}")
+
+
+if __name__ == "__main__":
+    main()

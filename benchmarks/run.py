@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                                   ingest, inline vs background compaction
   sharded_streaming  Sec. 7       ingest + probe scaling vs shard count,
                                   shard-prune rate, verified/query
+  approx         Fig. 13c/d+      recall@10 vs latency across leaf-budget
+                                  fractions (-> BENCH_approx.json)
   roofline       (assignment)     arch x shape terms from the dry-run
 """
 import inspect
@@ -23,7 +25,7 @@ import sys
 
 
 def main() -> None:
-    from . import (construction, distributed_bench, insertions,
+    from . import (approx, construction, distributed_bench, insertions,
                    kernels_bench, query, roofline, segments,
                    sharded_streaming, space, storage, streaming, windows,
                    workload)
@@ -33,7 +35,8 @@ def main() -> None:
         "windows": windows, "workload": workload,
         "kernels": kernels_bench, "distributed": distributed_bench,
         "storage": storage, "streaming": streaming,
-        "sharded_streaming": sharded_streaming, "roofline": roofline,
+        "sharded_streaming": sharded_streaming, "approx": approx,
+        "roofline": roofline,
     }
     args = sys.argv[1:]
     # --smoke: tiny CI-sized runs with built-in regression asserts

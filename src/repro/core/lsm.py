@@ -738,51 +738,62 @@ class CoconutLSM:
     def search_approx(self, query: np.ndarray, *,
                       k: int = 1,
                       window: Optional[int] = None,
-                      radius_leaves: int = 1
+                      radius_leaves: int = 1,
+                      budget=None
                       ) -> Tuple[np.ndarray, np.ndarray, dict]:
-        """Approximate k-NN over a consistent snapshot (Algorithm 4 per
-        run).  Returns (dists ``[k]``, ids ``[k]``, info)."""
+        """Approximate k-NN over a consistent snapshot (Algorithm-4 seed
+        probes; ``budget`` buys extra frontier leaves and tightens the
+        reported gap).  Returns (dists ``[k]``, ids ``[k]``, info)."""
         return self.snapshot().search_approx(
-            query, k=k, window=window, radius_leaves=radius_leaves)
+            query, k=k, window=window, radius_leaves=radius_leaves,
+            budget=budget)
 
     def search_exact(self, query: np.ndarray, *,
                      k: int = 1,
                      window: Optional[int] = None,
                      radius_leaves: int = 1,
-                     bsf: Optional[float] = None
+                     bsf: Optional[float] = None,
+                     budget=None,
+                     mode: str = "exact"
                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Exact k-NN over a consistent snapshot through the unified
         pipeline (plan -> prune -> scan -> verify), with timestamp
         post-filtering in ``pp`` mode.  ``bsf`` seeds the chain with an
-        external bound (the sharded router).  Returns (dists ``[k]``,
-        ids ``[k]``, info)."""
+        external bound (the sharded router).  ``budget``/``mode="approx"``
+        switch to the budgeted frontier drain with a certified gap
+        report.  Returns (dists ``[k]``, ids ``[k]``, info)."""
         return self.snapshot().search_exact(
             query, k=k, window=window, radius_leaves=radius_leaves,
-            bsf=bsf)
+            bsf=bsf, budget=budget, mode=mode)
 
     def search_approx_batch(self, queries: np.ndarray, *,
                             k: int = 1,
                             window: Optional[int] = None,
-                            radius_leaves: int = 1
+                            radius_leaves: int = 1,
+                            budget=None
                             ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched approximate k-NN: one probe per run serves all Q
         queries.  With k=1, row qi equals ``search_approx(queries[qi])``."""
         return self.snapshot().search_approx_batch(
-            queries, k=k, window=window, radius_leaves=radius_leaves)
+            queries, k=k, window=window, radius_leaves=radius_leaves,
+            budget=budget)
 
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
                            window: Optional[int] = None,
                            radius_leaves: int = 1,
-                           bsf: Optional[np.ndarray] = None
+                           bsf: Optional[np.ndarray] = None,
+                           budget=None,
+                           mode: str = "exact"
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN: ONE amortized SIMS scan per qualifying run
         for the whole batch, per-query bounds carried run to run, cross-run
         top-k merge.  With k=1, row qi equals ``search_exact(queries[qi])``.
-        ``bsf``: optional ``[Q]`` external per-query bounds (shard chain)."""
+        ``bsf``: optional ``[Q]`` external per-query bounds (shard chain).
+        ``budget``/``mode="approx"``: budgeted frontier drain + gap report."""
         return self.snapshot().search_exact_batch(
             queries, k=k, window=window, radius_leaves=radius_leaves,
-            bsf=bsf)
+            bsf=bsf, budget=budget, mode=mode)
 
     # ------------------------------------------------------- sharding hooks
     def advance_clock(self, t: int) -> None:

@@ -214,6 +214,8 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
                  mindist_fn=None,
                  ts_min: Optional[int] = None,
                  bsf: Optional[float] = None,
+                 budget=None,
+                 mode: str = "exact",
                  ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
     """Exact k-NN via the skip-sequential SIMS scan.
 
@@ -229,12 +231,15 @@ def exact_search(tree: CoconutTree, query: jax.Array, *,
     components keeps its own best and compares.
     ``mindist_fn``: injectable kernel with the BATCHED signature
     ``(q_paas [Q, w], codes [N, w]) -> [Q, N]``.
+    ``budget`` / ``mode``: the recall/latency dial — see
+    :func:`exact_search_batch`.
     """
     q = jnp.asarray(query, jnp.float32)[None, :]
     ext = None if bsf is None else np.asarray([bsf], np.float32)
     d, off, stats = exact_search_batch(
         tree, q, k=k, radius_leaves=radius_leaves,
-        chunk=chunk, io=io, mindist_fn=mindist_fn, ts_min=ts_min, bsf=ext)
+        chunk=chunk, io=io, mindist_fn=mindist_fn, ts_min=ts_min, bsf=ext,
+        budget=budget, mode=mode)
     return d[0], off[0], stats
 
 
@@ -337,6 +342,8 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
                        mindist_fn=None,
                        ts_min: Optional[int] = None,
                        bsf: Optional[np.ndarray] = None,
+                       budget=None,
+                       mode: str = "exact",
                        ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
     """Batched exact k-NN via ONE amortized SIMS scan (the tentpole path).
 
@@ -352,11 +359,24 @@ def exact_search_batch(tree: CoconutTree, queries: jax.Array, *,
     ``(q_paas [Q, w], codes [B, w]) -> [Q, B]`` (defaults to
     :func:`repro.core.summarization.mindist_sq_batch`; the Pallas kernel
     drops in via ``repro.kernels.ops.mindist_batch``).
+    ``budget`` / ``mode="approx"``: the recall/latency dial — drain the
+    best-first leaf frontier under a :class:`repro.query.Budget` (an int
+    is ``max_leaves`` shorthand) and report the certified lower-bound
+    gap in ``stats.gap``; passing ``budget`` implies approx mode, and
+    ``mode="approx"`` with no budget is bit-identical to exact with
+    ``gap == 0``.
     Returns (dists ``[Q, k]``, offsets ``[Q, k]``, batch stats); with k=1
     row qi matches ``exact_search(tree, queries[qi])``.
     """
-    from ..query import Partition, exact_knn
+    from ..query import Partition, approx_knn, exact_knn
     queries = np.atleast_2d(np.asarray(queries, np.float32))
+    if mode not in ("exact", "approx"):
+        raise ValueError(f"mode must be 'exact' or 'approx', got {mode!r}")
+    if budget is not None or mode == "approx":
+        return approx_knn([Partition.from_tree(tree)], queries, tree.cfg,
+                          k=k, budget=budget, ts_min=ts_min, bsf=bsf,
+                          radius_leaves=radius_leaves, chunk=chunk,
+                          io=io, mindist_fn=mindist_fn)
     return exact_knn([Partition.from_tree(tree)], queries, tree.cfg,
                      k=k, ts_min=ts_min, bsf=bsf,
                      radius_leaves=radius_leaves, chunk=chunk, io=io,

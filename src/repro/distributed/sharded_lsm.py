@@ -612,7 +612,9 @@ class ShardedCoconutLSM:
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
                            window: Optional[int] = None,
-                           radius_leaves: int = 1
+                           radius_leaves: int = 1,
+                           budget=None,
+                           mode: str = "exact"
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN across shards, cheapest-shard-first.
 
@@ -621,7 +623,29 @@ class ShardedCoconutLSM:
         best seeds every later shard's scan (``bsf=``), and shards whose
         bound cannot beat it are pruned whole.  Answers (distance bits
         AND global ids) are identical for any shard count.
+
+        ``budget`` / ``mode="approx"``: the global
+        :class:`repro.query.Budget` is *split* across shards — each
+        shard visited gets a slice of the remaining leaf/byte allowance
+        proportional to its share of the not-yet-visited leaves (with
+        carryover: what a shard leaves unspent returns to the pool), and
+        ``deadline_ms`` becomes one global wall-clock cutoff.  The
+        per-shard ``lb_unvisited`` reports are combined min-wise and the
+        gap recomputed against the globally merged k-th distance, so the
+        certificate ``exact_kth >= kth - gap`` holds across the whole
+        engine; shards pruned by the fence chain contribute nothing
+        (every row there is bounded below by the chained bsf, which is
+        never below the final merged k-th).  The info dict gains ``gap``
+        / ``lb_unvisited`` / ``budget_exhausted``.
         """
+        from ..query import Budget, as_budget
+        if mode not in ("exact", "approx"):
+            raise ValueError(
+                f"mode must be 'exact' or 'approx', got {mode!r}")
+        budget = as_budget(budget)
+        approx = budget is not None or mode == "approx"
+        if approx and budget is None:
+            budget = Budget()
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
         snaps, router = self._snapshots()
@@ -643,14 +667,56 @@ class ShardedCoconutLSM:
                 "buffer_rows": 0}
         scanned = set()
 
+        # --- budget split state (approx only) ---------------------------
+        shard_leaves = np.array(
+            [sum(r.tree.n_leaves for r in sn.runs) for sn in snaps],
+            np.int64)
+        unvisited_leaves = int(shard_leaves.sum())
+        rem = {"leaves": budget.max_leaves if approx else None,
+               "bytes": budget.max_bytes if approx else None,
+               "unvisited": unvisited_leaves}
+        t_end = None
+        if approx and budget.deadline_ms is not None:
+            t_end = time.perf_counter() + budget.deadline_ms / 1e3
+        lb_un_g = np.full(nq, np.inf, np.float32)
+
+        def shard_budget(si: int) -> Budget:
+            """Proportional slice of the remaining allowance: this
+            shard's leaves over all not-yet-visited leaves."""
+            share = (shard_leaves[si] / max(rem["unvisited"], 1)
+                     if rem["unvisited"] else 1.0)
+            lv = (None if rem["leaves"] is None
+                  else int(np.ceil(rem["leaves"] * share)))
+            by = (None if rem["bytes"] is None
+                  else int(np.ceil(rem["bytes"] * share)))
+            dl = None
+            if t_end is not None:
+                dl = max(0.0, (t_end - time.perf_counter()) * 1e3)
+            return Budget(max_leaves=lv, max_bytes=by, deadline_ms=dl)
+
         def scan(si: int, qsel: np.ndarray) -> None:
             """Run one shard's pipeline over a query subset and fold its
             pools into the global chain."""
             sn = snaps[si]
             idx = np.nonzero(qsel)[0]
+            kw = {}
+            if approx:
+                kw = dict(budget=shard_budget(si), mode="approx")
             d, off, sub = sn.search_exact_batch(
                 queries[idx], k=k, window=window,
-                radius_leaves=radius_leaves, bsf=bound_vec[idx].copy())
+                radius_leaves=radius_leaves, bsf=bound_vec[idx].copy(),
+                **kw)
+            if approx:
+                # carryover: return the unspent slice to the pool
+                if rem["leaves"] is not None:
+                    rem["leaves"] = max(
+                        0, rem["leaves"] - sub["stats"].leaves_scanned)
+                if rem["bytes"] is not None:
+                    rem["bytes"] = max(
+                        0, rem["bytes"] - sub["stats"].scan_bytes)
+                rem["unvisited"] -= int(shard_leaves[si])
+                lb_un_g[idx] = np.minimum(lb_un_g[idx],
+                                          sub["lb_unvisited"])
             stats.merge(sub["stats"])
             stats.candidates += sub["stats"].buffer_rows  # historical:
             # info-level "candidates" includes brute-forced buffer rows
@@ -693,6 +759,17 @@ class ShardedCoconutLSM:
             scan(si, qsel)
             scanned.add(si)
         stats.shards_touched = len(scanned)
+        if approx:
+            # global certificate: min-combined unvisited bound vs the
+            # merged k-th; inf means every leaf everywhere was visited
+            from ..query import certified_gap
+            gap = certified_gap(best_d[:, -1], lb_un_g)
+            stats.gap = gap
+            stats.lb_unvisited = lb_un_g
+            stats.exact = bool(np.all(gap == 0.0))
+            info["gap"] = gap
+            info["lb_unvisited"] = lb_un_g
+            info["budget_exhausted"] = stats.budget_exhausted
         info.update(candidates=stats.candidates,
                     candidates_per_query=stats.candidates_per_query,
                     leaves_per_query=stats.leaves_per_query,
@@ -706,51 +783,74 @@ class ShardedCoconutLSM:
     def search_approx_batch(self, queries: np.ndarray, *,
                             k: int = 1,
                             window: Optional[int] = None,
-                            radius_leaves: int = 1
+                            radius_leaves: int = 1,
+                            budget=None
                             ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched approximate k-NN: every non-empty shard probes the
-        leaves around the query's insertion point; pools merge."""
+        leaves around the query's insertion point; pools merge.
+
+        ``budget`` is passed through *per shard* (each shard may spend
+        up to the whole allowance — the historical probe-per-run shape,
+        not the split-budget drain of ``search_exact_batch``); the
+        per-shard ``lb_unvisited`` reports combine min-wise and the gap
+        is recomputed against the merged k-th distance.
+        """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
         snaps, _ = self._snapshots()
         best_d = np.full((nq, k), np.inf, np.float32)
         best_off = np.full((nq, k), -1, np.int64)
         cands_pq = np.zeros(nq, np.int64)
+        lb_un_g = np.full(nq, np.inf, np.float32)
+        exhausted = False
         info = {"partitions_touched": 0, "buffer_rows": 0,
                 "shards_touched": 0, "shards_pruned": 0}
         for sn in snaps:
             if sn.n == 0:        # nothing there — not a prune
                 continue
             d, off, sub = sn.search_approx_batch(
-                queries, k=k, window=window, radius_leaves=radius_leaves)
+                queries, k=k, window=window, radius_leaves=radius_leaves,
+                budget=budget)
             info["shards_touched"] += 1
             info["partitions_touched"] += sub["partitions_touched"]
             info["buffer_rows"] += sub["buffer_rows"]
             cands_pq += sub["candidates_per_query"]
+            lb_un_g = np.minimum(lb_un_g, sub["lb_unvisited"])
+            exhausted = exhausted or sub["budget_exhausted"]
             best_d, best_off = merge_pools(best_d, best_off, d, off, k)
+        from ..query import certified_gap
+        gap = certified_gap(best_d[:, -1], lb_un_g)
         info["candidates_per_query"] = cands_pq
+        info["gap"] = gap
+        info["lb_unvisited"] = lb_un_g
+        info["budget_exhausted"] = exhausted
         return best_d, best_off, info
 
     def search_exact(self, query: np.ndarray, *,
                      k: int = 1,
                      window: Optional[int] = None,
-                     radius_leaves: int = 1
+                     radius_leaves: int = 1,
+                     budget=None,
+                     mode: str = "exact"
                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Exact k-NN for one query (Q=1 wrapper over the batched
         pipeline; returns length-k arrays)."""
         q = np.asarray(query, np.float32)[None, :]
         d, off, info = self.search_exact_batch(
-            q, k=k, window=window, radius_leaves=radius_leaves)
+            q, k=k, window=window, radius_leaves=radius_leaves,
+            budget=budget, mode=mode)
         return d[0], off[0], info
 
     def search_approx(self, query: np.ndarray, *,
                       k: int = 1,
                       window: Optional[int] = None,
-                      radius_leaves: int = 1
+                      radius_leaves: int = 1,
+                      budget=None
                       ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Approximate k-NN for one query (Q=1 wrapper; returns
         length-k arrays)."""
         q = np.asarray(query, np.float32)[None, :]
         d, off, info = self.search_approx_batch(
-            q, k=k, window=window, radius_leaves=radius_leaves)
+            q, k=k, window=window, radius_leaves=radius_leaves,
+            budget=budget)
         return d[0], off[0], info

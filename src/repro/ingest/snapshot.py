@@ -46,7 +46,7 @@ import numpy as np
 
 from ..core import summarization as S
 from ..core.metrics import IOStats
-from ..query import Partition, exact_knn, merge_pools
+from ..query import Partition, exact_knn
 from ..query.merger import SearchStats
 
 __all__ = ["Snapshot", "FrozenBuffer"]
@@ -112,91 +112,70 @@ class Snapshot:
     def search_approx(self, query: np.ndarray, *,
                       k: int = 1,
                       window: Optional[int] = None,
-                      radius_leaves: int = 1
+                      radius_leaves: int = 1,
+                      budget=None
                       ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Approximate k-NN over the qualifying runs (Algorithm 4 per run)
         plus the frozen buffer; Q=1 wrapper over the batched path
         returning length-k arrays."""
         q = np.asarray(query, np.float32)[None, :]
         d, off, info = self.search_approx_batch(
-            q, k=k, window=window, radius_leaves=radius_leaves)
+            q, k=k, window=window, radius_leaves=radius_leaves,
+            budget=budget)
         return d[0], off[0], info
 
     def search_exact(self, query: np.ndarray, *,
                      k: int = 1,
                      window: Optional[int] = None,
                      radius_leaves: int = 1,
-                     bsf: Optional[float] = None
+                     bsf: Optional[float] = None,
+                     budget=None,
+                     mode: str = "exact"
                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Exact k-NN over the snapshot; Q=1 wrapper over the batched
         path returning length-k arrays.  ``bsf`` seeds the chain with an
         external bound (shard chaining) — it prunes but is never
-        returned."""
+        returned.  ``budget``/``mode`` select the budgeted drain (see
+        :meth:`search_exact_batch`)."""
         q = np.asarray(query, np.float32)[None, :]
         ext = None if bsf is None else np.asarray([bsf], np.float32)
         d, off, info = self.search_exact_batch(
-            q, k=k, window=window, radius_leaves=radius_leaves, bsf=ext)
+            q, k=k, window=window, radius_leaves=radius_leaves, bsf=ext,
+            budget=budget, mode=mode)
         return d[0], off[0], info
 
     # -------------------------------------------------------- batched queries
     def search_approx_batch(self, queries: np.ndarray, *,
                             k: int = 1,
                             window: Optional[int] = None,
-                            radius_leaves: int = 1
+                            radius_leaves: int = 1,
+                            budget=None
                             ) -> Tuple[np.ndarray, np.ndarray, dict]:
-        """Batched approximate k-NN: one probe per run serves all Q queries.
+        """Batched approximate k-NN through the shared budgeted executor
+        (:mod:`repro.query.approx`): the frozen buffer is brute-force
+        scanned and every qualifying run contributes its Algorithm-4
+        seed probe; with the default zero-leaf budget nothing else is
+        scanned — the historical "probe each run" behavior, now with a
+        certified ``gap`` report in the info dict.  Pass a
+        :class:`repro.query.Budget` (or int = max scanned leaves) to
+        spend more and tighten the gap.
 
         Returns (dists ``[Q, k]``, ids ``[Q, k]``, info).
         """
-        import jax.numpy as jnp
-
-        from ..core import tree as T
-        queries = np.atleast_2d(np.asarray(queries, np.float32))
-        nq = queries.shape[0]
-        runs = self._qualifying_runs(window)
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_off = np.full((nq, k), -1, np.int64)
-        cands_pq = np.zeros(nq, np.int64)
-        buf_rows = 0
-        if self.buffer is not None:
-            best_d, best_off, buf_rows = self._buffer_topk(
-                queries, k, self._ts_min(window))
-            cands_pq += buf_rows
-        for r in runs:
-            d, off, st = T.approx_search_batch(
-                r.tree, jnp.asarray(queries), k=k,
-                radius_leaves=radius_leaves, io=self.io)
-            cands_pq += st.candidates_per_query
-            best_d, best_off = merge_pools(best_d, best_off, d, off, k)
-        return best_d, best_off, {"partitions_touched": len(runs),
-                                  "candidates_per_query": cands_pq,
-                                  "buffer_rows": buf_rows}
-
-    def _buffer_topk(self, queries: np.ndarray, k: int,
-                     ts_min: Optional[int]
-                     ) -> Tuple[np.ndarray, np.ndarray, int]:
-        """Per-query ``[Q, k]`` pools over the frozen buffer — the
-        approximate path's buffer scan, sharing the executor's one
-        brute-force contract (:func:`repro.query.executor.buffer_topk`)
-        so the tie-breaking/padding rule lives in one place."""
-        import jax.numpy as jnp
-
-        from ..query.executor import buffer_topk
-        buf = self.buffer
-        if ts_min is None:
-            rows, offs = buf.raw, buf.ids
-        else:
-            keep = np.nonzero(buf.ts >= ts_min)[0]
-            rows, offs = buf.raw[keep], buf.ids[keep]
-        best_d, best_off = buffer_topk(jnp.asarray(queries), rows,
-                                       np.asarray(offs), k, io=self.io)
-        return best_d, best_off, len(rows)
+        from ..query import Budget, as_budget
+        if budget is None:
+            budget = Budget(max_leaves=0)
+        return self.search_exact_batch(
+            queries, k=k, window=window, radius_leaves=radius_leaves,
+            budget=as_budget(budget), mode="approx")
 
     def search_exact_batch(self, queries: np.ndarray, *,
                            k: int = 1,
                            window: Optional[int] = None,
                            radius_leaves: int = 1,
-                           bsf: Optional[np.ndarray] = None
+                           bsf: Optional[np.ndarray] = None,
+                           budget=None,
+                           mode: str = "exact"
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN through the unified pipeline: the planner
         window-qualifies the runs and prices every leaf with its z-order
@@ -209,13 +188,28 @@ class Snapshot:
         router's cross-shard chain) — combined with the internal
         k-th-best bound for pruning on every scan, never returned as an
         answer.
+        ``budget`` / ``mode="approx"``: drain the best-first leaf
+        frontier under a :class:`repro.query.Budget` instead of scanning
+        every surviving leaf; the info dict gains ``gap`` /
+        ``lb_unvisited`` / ``budget_exhausted`` (gap contract in
+        :mod:`repro.query.approx`).  Unlimited budget returns the exact
+        bits with ``gap == 0``.
         """
+        from ..query import approx_knn
         queries = np.atleast_2d(np.asarray(queries, np.float32))
-        best_d, best_off, stats = exact_knn(
-            self._partitions(), queries, self._cfg(), k=k,
-            ts_min=self._ts_min(window),
-            temporal_prune=(self.mode != "pp"),
-            bsf=bsf, radius_leaves=radius_leaves, io=self.io)
+        if mode not in ("exact", "approx"):
+            raise ValueError(
+                f"mode must be 'exact' or 'approx', got {mode!r}")
+        kw = dict(k=k, ts_min=self._ts_min(window),
+                  temporal_prune=(self.mode != "pp"),
+                  bsf=bsf, radius_leaves=radius_leaves, io=self.io)
+        if budget is not None or mode == "approx":
+            best_d, best_off, stats = approx_knn(
+                self._partitions(), queries, self._cfg(),
+                budget=budget, **kw)
+        else:
+            best_d, best_off, stats = exact_knn(
+                self._partitions(), queries, self._cfg(), **kw)
         info = self._info(stats)
         return best_d, best_off, info
 
@@ -223,8 +217,9 @@ class Snapshot:
     def _info(stats: SearchStats) -> dict:
         """The dict contract the engines/tests read, derived from the
         pipeline's SearchStats (``candidates`` includes the brute-forced
-        buffer rows, matching the historical accounting)."""
-        return {"partitions_touched": stats.partitions_touched,
+        buffer rows, matching the historical accounting).  Budgeted
+        searches add the gap-report keys."""
+        info = {"partitions_touched": stats.partitions_touched,
                 "partitions_pruned": stats.partitions_pruned,
                 "candidates": stats.candidates + stats.buffer_rows,
                 "candidates_per_query": stats.candidates_per_query,
@@ -233,3 +228,8 @@ class Snapshot:
                 "leaves_scanned": stats.leaves_scanned,
                 "buffer_rows": stats.buffer_rows,
                 "stats": stats}
+        if stats.gap is not None:
+            info["gap"] = stats.gap
+            info["lb_unvisited"] = stats.lb_unvisited
+            info["budget_exhausted"] = stats.budget_exhausted
+        return info

@@ -35,6 +35,12 @@ reports aggregated ingest metrics plus shards touched/pruned per probe
 batch.  ``--data-dir`` then names a ShardDirectory (per-shard stores +
 one atomic top-level manifest).
 
+With ``--budget-leaves N`` and/or ``--deadline-ms M`` the probes run the
+*approximate* frontier drain (``mode="approx"``): each micro-batch scans
+at most N leaf blocks / M milliseconds best-first and the report carries
+the certified gap (``exact_kth >= returned_kth - gap``) so the
+recall/latency trade is observable per run.
+
 Usage: PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
            --steps 32 --batch 4 --probe-batch 8 --concurrent \
            --data-dir /tmp/coconut-serve --checkpoint-every 16
@@ -72,6 +78,15 @@ def main(argv=None) -> None:
                     help="micro-batch size for kNN probes (answered "
                          "together via search_exact_batch)")
     ap.add_argument("--knn-k", type=int, default=1)
+    ap.add_argument("--budget-leaves", type=int, default=None,
+                    help="approximate probes: cap each micro-batch's "
+                         "scan at this many leaf blocks (best-first "
+                         "frontier drain with a certified gap report; "
+                         "default: exact search)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="approximate probes: wall-clock cutoff per "
+                         "probe micro-batch in milliseconds (composes "
+                         "with --budget-leaves; default: none)")
     ap.add_argument("--concurrent", action="store_true",
                     help="background compaction: inserts never flush "
                          "inline, probes run against snapshots that "
@@ -183,15 +198,24 @@ def main(argv=None) -> None:
     base = T + (cfg.frontend_tokens
                 if cfg.frontend != "none" and not cfg.is_encdec else 0)
 
+    budget = None
+    if args.budget_leaves is not None or args.deadline_ms is not None:
+        from ..query import Budget
+        budget = Budget(max_leaves=args.budget_leaves,
+                        deadline_ms=args.deadline_ms)
+
     def answer_probes(batch):
         """Answer one probe micro-batch.  Synchronous engines flush first
         (their searches only see runs); concurrent snapshots already cover
-        the buffer, so the probe never waits on compaction."""
+        the buffer, so the probe never waits on compaction.  With a
+        budget the probes run the approximate frontier drain and the
+        info dict carries the per-query certified gap."""
         if not args.concurrent:
             index.flush()
         t0 = time.perf_counter()
+        kw = {} if budget is None else {"budget": budget, "mode": "approx"}
         d, off, st = index.search_exact_batch(
-            np.stack(batch), k=args.knn_k, window=args.knn_window)
+            np.stack(batch), k=args.knn_k, window=args.knn_window, **kw)
         return d, st, time.perf_counter() - t0
 
     pending = []            # accumulated kNN probes (micro-batching)
@@ -245,13 +269,22 @@ def main(argv=None) -> None:
     leaf_note = (f" leaves scanned={st.get('leaves_scanned', 0)}/"
                  f"pruned={st.get('leaves_pruned', 0)}"
                  if isinstance(st, dict) and "leaves_scanned" in st else "")
+    # budgeted probes: the last micro-batch's certified gap — how far
+    # (at most) the returned k-th distances sit above the exact ones
+    gap_note = ""
+    if isinstance(st, dict) and st.get("gap") is not None:
+        g = np.asarray(st["gap"], np.float32)
+        gap_note = (f" gap max={float(g.max()):.4f}/"
+                    f"mean={float(g.mean()):.4f}"
+                    f"{' budget-exhausted' if st.get('budget_exhausted') else ''}")
     print(f"arch={args.arch} [{mode}]: {args.steps} steps x {B} seqs in "
           f"{dt*1e3:.0f} ms ({args.steps*B/dt:.1f} tok/s); "
           f"index={index.n} entries/{len(index.runs)} runs; "
           f"kNN(window={args.knn_window},k={args.knn_k}) "
           f"{probes_answered} probes in {len(probe_lat)} micro-batches "
           f"of {args.probe_batch} ({qps:.1f} probes/s) last_d={last_d:.4f} "
-          f"partitions={st['partitions_touched']}{shard_note}{leaf_note}")
+          f"partitions={st['partitions_touched']}"
+          f"{shard_note}{leaf_note}{gap_note}")
     lat = (f"p50={_pctl(probe_lat, 50)*1e3:.1f} ms "
            f"p99={_pctl(probe_lat, 99)*1e3:.1f} ms "
            f"max={max(probe_lat)*1e3:.1f} ms" if probe_lat else "n/a")

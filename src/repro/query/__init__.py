@@ -18,11 +18,20 @@ LSM, mmap segment, serving loop) funnels through the three pieces here:
 * :mod:`repro.query.merger`    — owns cross-partition best-so-far
   chaining, k-NN pool merging, and the per-query :class:`SearchStats`
   accounting (``leaves_pruned`` / ``leaves_scanned``).
+* :mod:`repro.query.approx`    — the budgeted policy over the same
+  plan: a best-first leaf-frontier drain under a per-query
+  :class:`Budget` (``max_leaves`` / ``max_bytes`` / ``deadline_ms``)
+  with a certified lower-bound gap report and progressive refinement
+  (:func:`progressive_knn`).
 """
+from .approx import (Budget, approx_knn, as_budget, certified_gap,
+                     progressive_knn)
 from .executor import execute, exact_knn
 from .merger import KnnPool, SearchStats, merge_pools, merge_topk
 from .partition import Partition
 from .planner import ScanPlan, build_plan
 
 __all__ = ["Partition", "ScanPlan", "build_plan", "execute", "exact_knn",
+           "Budget", "as_budget", "approx_knn", "certified_gap",
+           "progressive_knn",
            "KnnPool", "SearchStats", "merge_pools", "merge_topk"]

@@ -73,28 +73,22 @@ def _scan_buffer(entry: ScanEntry, queries_j, k: int,
     stats.candidates_per_query += len(rows)
 
 
-def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
-                 pool: KnnPool, stats: SearchStats, *,
-                 radius_leaves: int, chunk: int, io, mindist_fn,
-                 scan_mode: Optional[str]) -> int:
-    """Seed + leaf-skip scan + verify one sorted partition.  Returns the
-    number of live (query, row) pairs the lower bound could not prune."""
+def _seed_sorted(entry: ScanEntry, queries_j, q_paas_j,
+                 pool: KnnPool, *, radius_leaves: int, io
+                 ) -> Tuple[Optional[np.ndarray], np.ndarray, np.ndarray]:
+    """Seed the pool from the leaves around each query's z-order slot
+    (the Algorithm-4 probe).  Returns ``(alive, offs_all, idx0)`` for
+    the scan that follows.  Shared by the exact path and the budgeted
+    drain so seed distance bits are identical by construction."""
     import jax.numpy as jnp
     part = entry.partition
     nq = queries_j.shape[0]
-    leaf = part.leaf_size
     alive = None
     if entry.ts_min is not None:
         ts = part.timestamps()
         if ts is not None:
             alive = ts >= entry.ts_min
     offs_all = part.report_ids()
-    # the fused kernel streams the whole leaf group's raw rows (that is
-    # the fusion); on mmap partitions that would fetch pruned rows' raw
-    # bytes from disk, so fusion stays a device-backend path
-    fused = scan_mode if part.backend == "device" else None
-
-    # -- seed the pool from the leaves around each query's z-order slot ----
     idx0 = part.seed_window(queries_j, radius_leaves=radius_leaves, io=io,
                             q_paas=q_paas_j)
     rows0 = part.series_rows(idx0.reshape(-1), io=io)
@@ -111,6 +105,90 @@ def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
         offs0 = offs_all[idx0]
     for qi in range(nq):
         pool.update(qi, d0[qi], offs0[qi])
+    return alive, offs_all, idx0
+
+
+def _leaves_per_group(chunk: int, nq: int, leaf: int) -> int:
+    """Leaves per verification group: bound the [Q, B, L] intermediate
+    (rows-per-chunk scales down with batch size — Q=64 x 4096 x L floats
+    thrashes host memory)."""
+    eff_chunk = min(chunk, max(64, 32768 // nq))
+    return max(1, eff_chunk // leaf)
+
+
+def _scan_leaf_group(entry: ScanEntry, queries_j, q_paas_j,
+                     grp: np.ndarray, k: int, pool: KnnPool,
+                     stats: SearchStats, alive, offs_all,
+                     leaf_mark, union_mark, io, mindist_fn,
+                     fused: Optional[str]) -> Tuple[int, int]:
+    """Bound + verify one sorted group of leaf indices against the pool.
+
+    Returns ``(live_pairs, nbytes)`` where ``nbytes`` counts the code
+    rows streamed plus the raw rows fetched for verification — computed
+    from shapes so the charge is identical across backends (the currency
+    of the ``max_bytes`` budget)."""
+    import jax.numpy as jnp
+    part = entry.partition
+    nq = queries_j.shape[0]
+    leaf = part.leaf_size
+    row_idx = (grp[:, None] * leaf
+               + np.arange(leaf)[None, :]).reshape(-1)
+    row_idx = row_idx[row_idx < part.n]
+    codes_blk = part.codes_rows(row_idx, io=io)
+    nbytes = len(row_idx) * part.cfg.segments
+    if fused is not None:
+        live_pairs = _verify_fused(
+            entry, queries_j, q_paas_j, codes_blk, row_idx, k, pool,
+            stats, alive, offs_all, leaf_mark, union_mark, io, fused)
+        # the fused kernel streams the whole group's raw rows (that IS
+        # the fusion), so the group charges every row's raw bytes
+        return live_pairs, nbytes + len(row_idx) * part.cfg.series_len * 4
+    if part.backend != "device":
+        codes_blk = jnp.asarray(codes_blk)
+    md = np.asarray(mindist_fn(q_paas_j, codes_blk))      # [Q, B]
+    live = md < pool.bound()[:, None]
+    if alive is not None:
+        live &= alive[row_idx][None, :]
+    live_pairs = int(live.sum())
+    keep = live.any(axis=0)
+    if not keep.any():
+        return live_pairs, nbytes
+    block = row_idx[keep]
+    mask = live[:, keep]
+    rows = part.series_rows(block, io=io)
+    if part.backend == "device" and io is not None:
+        io.seq_read(len(block))
+    dd = np.asarray(S.euclidean_sq_batch(queries_j,
+                                         jnp.asarray(rows)))   # [Q, B]
+    nbytes += len(block) * part.cfg.series_len * 4
+    stats.candidates += len(block)
+    union_mark[block // leaf] = True
+    for qi in range(nq):
+        m = mask[qi]
+        if not m.any():
+            continue
+        stats.candidates_per_query[qi] += int(m.sum())
+        leaf_mark[qi, block[m] // leaf] = True
+        pool.update(qi, dd[qi][m], offs_all[block[m]])
+    return live_pairs, nbytes
+
+
+def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
+                 pool: KnnPool, stats: SearchStats, *,
+                 radius_leaves: int, chunk: int, io, mindist_fn,
+                 scan_mode: Optional[str]) -> int:
+    """Seed + leaf-skip scan + verify one sorted partition.  Returns the
+    number of live (query, row) pairs the lower bound could not prune."""
+    part = entry.partition
+    nq = queries_j.shape[0]
+    leaf = part.leaf_size
+    # the fused kernel streams the whole leaf group's raw rows (that is
+    # the fusion); on mmap partitions that would fetch pruned rows' raw
+    # bytes from disk, so fusion stays a device-backend path
+    fused = scan_mode if part.backend == "device" else None
+
+    alive, offs_all, _ = _seed_sorted(entry, queries_j, q_paas_j, pool,
+                                      radius_leaves=radius_leaves, io=io)
 
     # -- leaf-granular pruning against the fence bounds --------------------
     # (the seed probe above always runs — the external bsf and the fence
@@ -131,51 +209,17 @@ def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
     # cheapest leaves first: the bound tightens fastest, pruning the rest
     surv = surv[np.argsort(lb[:, surv].min(axis=0), kind="stable")]
 
-    # bound the [Q, B, L] verification intermediate: rows-per-chunk scales
-    # down with batch size (Q=64 x 4096 x L floats thrashes host memory)
-    eff_chunk = min(chunk, max(64, 32768 // nq))
-    leaves_per_grp = max(1, eff_chunk // leaf)
+    leaves_per_grp = _leaves_per_group(chunk, nq, leaf)
     leaf_mark = np.zeros((nq, lb.shape[1]), bool)
     union_mark = np.zeros(lb.shape[1], bool)
     live_pairs = 0
     for g in range(0, len(surv), leaves_per_grp):
         grp = np.sort(surv[g:g + leaves_per_grp])    # sequential within grp
-        row_idx = (grp[:, None] * leaf
-                   + np.arange(leaf)[None, :]).reshape(-1)
-        row_idx = row_idx[row_idx < part.n]
-        codes_blk = part.codes_rows(row_idx, io=io)
-        if fused is not None:
-            live_pairs += _verify_fused(
-                entry, queries_j, q_paas_j, codes_blk, row_idx, k, pool,
-                stats, alive, offs_all, leaf_mark, union_mark, io,
-                fused)
-            continue
-        if part.backend != "device":
-            codes_blk = jnp.asarray(codes_blk)
-        md = np.asarray(mindist_fn(q_paas_j, codes_blk))      # [Q, B]
-        live = md < pool.bound()[:, None]
-        if alive is not None:
-            live &= alive[row_idx][None, :]
-        live_pairs += int(live.sum())
-        keep = live.any(axis=0)
-        if not keep.any():
-            continue
-        block = row_idx[keep]
-        mask = live[:, keep]
-        rows = part.series_rows(block, io=io)
-        if part.backend == "device" and io is not None:
-            io.seq_read(len(block))
-        dd = np.asarray(S.euclidean_sq_batch(queries_j,
-                                             jnp.asarray(rows)))   # [Q, B]
-        stats.candidates += len(block)
-        union_mark[block // leaf] = True
-        for qi in range(nq):
-            m = mask[qi]
-            if not m.any():
-                continue
-            stats.candidates_per_query[qi] += int(m.sum())
-            leaf_mark[qi, block[m] // leaf] = True
-            pool.update(qi, dd[qi][m], offs_all[block[m]])
+        live, nbytes = _scan_leaf_group(
+            entry, queries_j, q_paas_j, grp, k, pool, stats, alive,
+            offs_all, leaf_mark, union_mark, io, mindist_fn, fused)
+        live_pairs += live
+        stats.scan_bytes += nbytes
     stats.leaves_touched += int(union_mark.sum())
     stats.leaves_per_query += leaf_mark.sum(axis=1)
     return live_pairs

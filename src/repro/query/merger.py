@@ -44,6 +44,17 @@ class SearchStats:
     leaves skipped whole by their z-order fence mindist bound (including
     all leaves of whole-pruned partitions) — the skip-sequential scan's
     observability.
+
+    Budgeted (approximate) scans additionally report the gap contract:
+    ``gap`` is a ``[Q]`` array such that the true exact k-th distance is
+    >= the returned k-th distance minus ``gap[q]`` (0 certifies the
+    answer exact for that query); ``lb_unvisited`` is the ``[Q]``
+    smallest mindist over leaves the budget left unvisited (inf when
+    every leaf was either scanned or provably pruned);
+    ``budget_exhausted`` records whether the drain stopped on the budget
+    rather than on the bounds; ``scan_bytes`` counts the code + raw
+    bytes the leaf scan streamed (the currency of ``max_bytes``,
+    identical across backends — seeds and buffer scans are uncharged).
     """
     candidates: int = 0          # raw series whose true ED was computed
     pruned_frac: float = 0.0     # fraction of (query, row) pairs pruned
@@ -59,6 +70,10 @@ class SearchStats:
     partitions_touched: int = 0  # sorted partitions actually scanned
     partitions_pruned: int = 0   # sorted partitions skipped whole by fence
     buffer_rows: int = 0         # unsorted buffer rows brute-force scanned
+    scan_bytes: int = 0          # code+raw bytes streamed by the leaf scan
+    budget_exhausted: bool = False   # drain stopped on the budget
+    gap: Optional[np.ndarray] = None          # [Q] certified epsilon bound
+    lb_unvisited: Optional[np.ndarray] = None  # [Q] min unvisited-leaf lb
 
     def merge(self, other: "SearchStats") -> None:
         """Fold another pipeline invocation's accounting into this one
@@ -70,6 +85,9 @@ class SearchStats:
         self.partitions_touched += other.partitions_touched
         self.partitions_pruned += other.partitions_pruned
         self.buffer_rows += other.buffer_rows
+        self.scan_bytes += other.scan_bytes
+        self.budget_exhausted = (self.budget_exhausted
+                                 or other.budget_exhausted)
 
 
 def merge_topk(dists: np.ndarray, offsets: np.ndarray, k: int

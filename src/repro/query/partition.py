@@ -104,11 +104,17 @@ class Partition:
     def seed_window(self, queries, *, radius_leaves: int = 1,
                     io: Optional[IOStats] = None,
                     q_paas=None) -> np.ndarray:
-        """Row indices ``[Q, span]`` of the leaves around each query's
+        """Row indices ``[Q, span]`` of the rows around each query's
         z-order insertion point (the Algorithm-4 probe that seeds the
-        exact scan's best-so-far pool).  ``q_paas``: optional
-        precomputed query PAA (the plan already holds it) — avoids a
-        second summarization on the segment path."""
+        exact scan's best-so-far pool).
+
+        Both backends resolve the *row-granular* insertion point — the
+        tree by binary search over its device key column, the segment by
+        a fence search refined inside ONE leaf of the mmap'd key column
+        — so the probe windows (and hence budgeted answers) are
+        identical across backends.  ``q_paas``: optional precomputed
+        query PAA (the plan already holds it) — avoids a second
+        summarization on the segment path."""
         import jax.numpy as jnp
         if self.kind == "tree":
             from ..core.tree import _approx_candidates_batch
@@ -125,19 +131,41 @@ class Partition:
             if q_paas is None:
                 q_paas = S.paa(jnp.asarray(queries), cfg.segments)
             q_codes = S.sax_encode(jnp.asarray(q_paas), cfg.bits)
-            q_keys = K.interleave_codes(q_codes, w=cfg.segments, b=cfg.bits)
+            q_keys = np.asarray(K.interleave_codes(
+                q_codes, w=cfg.segments, b=cfg.bits))
             # fence bytes were already charged when the planner read the
             # fence column for the leaf envelopes; the probe rereads the
             # same (now hot) pages, so it is not charged again
             fences = np.asarray(seg.fences)
             if len(fences):
-                leaf = np.asarray(K.searchsorted_keys(jnp.asarray(fences),
-                                                      q_keys))
+                fl = np.asarray(K.searchsorted_keys(jnp.asarray(fences),
+                                                    jnp.asarray(q_keys)))
             else:
-                leaf = np.zeros(nq, np.int32)
+                fl = np.zeros(nq, np.int32)
+            # refine to the global row insertion point: it lies in the
+            # leaf just before the first fence >= q_key (everything
+            # earlier is strictly below the query key), so one leaf of
+            # the key column per query resolves it exactly
+            pos = np.zeros(nq, np.int64)
+            for qi in range(nq):
+                if int(fl[qi]) == 0:
+                    continue                   # keys[0] >= q_key: pos 0
+                l = int(fl[qi]) - 1
+                s = l * self.leaf_size
+                e = min(s + self.leaf_size, self.n)
+                blk = np.asarray(seg.keys[s:e])
+                if io is not None:
+                    io.read_bytes(blk.nbytes)
+                lt = np.zeros(len(blk), bool)
+                und = np.ones(len(blk), bool)
+                for w in range(blk.shape[1]):  # lexicographic <
+                    bw = blk[:, w]
+                    qw = q_keys[qi, w]
+                    lt |= und & (bw < qw)
+                    und &= bw == qw
+                pos[qi] = s + int(np.count_nonzero(lt))
             span = 2 * radius_leaves * self.leaf_size
-            center = leaf.astype(np.int64) * self.leaf_size
-            start = np.clip(center - span // 2, 0, max(self.n - span, 0))
+            start = np.clip(pos - span // 2, 0, max(self.n - span, 0))
             idx = start[:, None] + np.arange(span)[None, :]
             idx = np.clip(idx, 0, self.n - 1)
         if io is not None:

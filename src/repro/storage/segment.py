@@ -494,6 +494,8 @@ def exact_search_mmap(seg: Segment, queries: np.ndarray, *,
                       radius_leaves: int = 1,
                       io: Optional[IOStats] = None,
                       mindist_fn=None,
+                      budget=None,
+                      mode: str = "exact",
                       ) -> Tuple[np.ndarray, np.ndarray, "object"]:
     """Exact k-NN straight off the segment file (SIMS, Algorithm 5).
 
@@ -506,15 +508,27 @@ def exact_search_mmap(seg: Segment, queries: np.ndarray, *,
     the storage boundary is charged to ``io`` (``bytes_read``), so
     cold-vs-warm benchmarks measure real page-cache behavior.
 
+    ``budget`` / ``mode="approx"``: budgeted best-first drain with the
+    certified gap report (see :mod:`repro.query.approx`) — leaves the
+    budget leaves unvisited are never streamed off disk, so ``max_bytes``
+    bounds real I/O within one leaf's granularity.
+
     Returns ``(dists [Q, k], offsets [Q, k], SearchStats)`` — answers
     bit-identical to :func:`repro.core.tree.exact_search_batch` on the
     same data.
     """
-    from ..query import Partition, exact_knn
+    from ..query import Partition, approx_knn, exact_knn
     if seg.raw is None:
         raise SegmentFormatError(
             f"{seg.path}: exact search needs the raw block on disk")
     queries = np.atleast_2d(np.asarray(queries, np.float32))
+    if mode not in ("exact", "approx"):
+        raise ValueError(f"mode must be 'exact' or 'approx', got {mode!r}")
+    if budget is not None or mode == "approx":
+        return approx_knn([Partition.from_segment(seg)], queries, seg.cfg,
+                          k=k, budget=budget,
+                          radius_leaves=radius_leaves, chunk=chunk,
+                          io=io, mindist_fn=mindist_fn)
     return exact_knn([Partition.from_segment(seg)], queries, seg.cfg,
                      k=k, radius_leaves=radius_leaves, chunk=chunk,
                      io=io, mindist_fn=mindist_fn)

@@ -1,0 +1,226 @@
+"""Budget enforcement + soundness battery for approximate-first search.
+
+The acceptance bar (ISSUE 6): budgets are enforced within one-leaf
+granularity (``max_leaves`` exactly, ``max_bytes`` via a conservative
+whole-leaf projection so the actual spend never exceeds the cap), a zero
+budget still returns seed+buffer answers with a finite k-th distance,
+``deadline_ms`` terminates, answers are monotone in the budget (the
+scanned leaf set under a smaller budget is a prefix of a larger one's),
+the certified gap is sound against the exact answer, and the
+progressive generator's final snapshot equals the one-shot call bit for
+bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import summarization as S, tree as T
+from repro.core.lsm import CoconutLSM
+from repro.core.metrics import IOStats
+from repro.data.series import query_workload, random_walk
+from repro.query import (Budget, Partition, approx_knn, as_budget,
+                         progressive_knn)
+from repro.storage import Segment, exact_search_mmap
+
+CFG = S.SummaryConfig(series_len=64, segments=16, bits=8)
+N = 4000
+NQ = 6
+
+
+@pytest.fixture(scope="module")
+def data():
+    raw = random_walk(jax.random.PRNGKey(0), N, 64)
+    queries = query_workload(jax.random.PRNGKey(1), raw, NQ)
+    return raw, queries
+
+
+@pytest.fixture(scope="module")
+def tree(data):
+    raw, _ = data
+    return T.build(raw, CFG, leaf_size=64)
+
+
+@pytest.fixture(scope="module")
+def segment(tree, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("seg") / "t.coco")
+    T.save(tree, path)
+    seg = Segment.open(path)
+    yield seg
+    seg.close()
+
+
+# ----------------------------------------------------------- budget kinds
+
+def test_max_leaves_is_enforced_exactly(data, tree):
+    """Leaf admission is checked leaf by leaf: the drain never streams
+    more than ``max_leaves`` blocks, and when it stops early it says so
+    (otherwise the answer is certified exact)."""
+    raw, queries = data
+    for b in (0, 1, 3, 8, 20):
+        d, off, st = T.exact_search_batch(tree, queries, k=5, budget=b)
+        assert st.leaves_scanned <= b
+        assert st.budget_exhausted or st.exact
+        assert np.all(np.isfinite(d))          # seeds always answer
+
+
+def test_max_bytes_bounds_real_io_on_mmap(data, segment):
+    """The byte budget caps the backend-independent ``scan_bytes``
+    charge AND the mmap backend's real ``bytes_read`` shrinks with it —
+    pruned pages are never touched."""
+    raw, queries = data
+    q = np.asarray(queries)
+    io_full = IOStats(64)
+    _, _, st_full = exact_search_mmap(segment, q, k=5, io=io_full)
+    caps = [0, 60_000, None]
+    reads, scans = [], []
+    for cap in caps:
+        io = IOStats(64)
+        d, off, st = exact_search_mmap(
+            segment, q, k=5, io=io, budget=Budget(max_bytes=cap))
+        if cap is not None:
+            assert st.scan_bytes <= cap
+            assert st.budget_exhausted or st.exact
+        assert np.all(np.isfinite(d))
+        reads.append(io.bytes_read)
+        scans.append(st.scan_bytes)
+    assert scans[0] == 0                       # zero budget: seeds only
+    assert scans[0] < scans[1] < scans[2]
+    assert reads[0] < reads[1] < reads[2]      # fewer real pages touched
+    assert scans[2] == st_full.scan_bytes      # unlimited == exact spend
+
+
+def test_zero_budget_returns_seed_answers_with_finite_gap(data, tree):
+    """A zero budget degrades to the Algorithm-4 probe: same candidate
+    window as ``approx_search_batch``, finite k-th distance, finite
+    sound gap, and zero leaves charged."""
+    raw, queries = data
+    d0, off0, st0 = T.exact_search_batch(tree, queries, k=3, budget=0)
+    assert st0.leaves_scanned == 0 and st0.scan_bytes == 0
+    assert np.all(np.isfinite(d0))
+    assert np.all(np.isfinite(st0.gap)) and np.all(st0.gap >= 0)
+    da, offa, sa = T.approx_search_batch(tree, jnp.asarray(queries), k=3)
+    np.testing.assert_allclose(d0, np.asarray(da), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(off0, np.asarray(offa))
+    # the gap certificate holds against the true exact answer
+    d_ex, _, _ = T.exact_search_batch(tree, queries, k=3)
+    assert np.all(d_ex[:, -1] >= d0[:, -1] - st0.gap - 1e-3)
+
+
+def test_deadline_terminates_and_reports_exhaustion(data, tree):
+    """An already-expired deadline stops the drain before any leaf is
+    charged; the seeds still answer."""
+    raw, queries = data
+    d, off, st = T.exact_search_batch(
+        tree, queries, k=3, budget=Budget(deadline_ms=0.0))
+    assert st.budget_exhausted
+    assert st.leaves_scanned == 0
+    assert np.all(np.isfinite(d))
+    # a generous deadline completes exactly
+    d2, off2, st2 = T.exact_search_batch(
+        tree, queries, k=3, budget=Budget(deadline_ms=60_000.0))
+    d_ex, off_ex, _ = T.exact_search_batch(tree, queries, k=3)
+    np.testing.assert_array_equal(d2, d_ex)
+    np.testing.assert_array_equal(off2, off_ex)
+
+
+# ------------------------------------------------------------ monotonicity
+
+def test_answers_never_get_worse_as_budget_grows(data, tree):
+    """Prefix property: the leaves scanned under budget b are a prefix
+    of those under b' > b, so every per-query k-th distance is
+    non-increasing in the budget — and the unlimited end of the dial is
+    bit-identical to exact."""
+    raw, queries = data
+    d_ex, off_ex, _ = T.exact_search_batch(tree, queries, k=5)
+    prev_kth = None
+    for b in (0, 1, 2, 4, 8, 16, 32, None):
+        d, off, st = T.exact_search_batch(
+            tree, queries, k=5, budget=b, mode="approx")
+        kth = d[:, -1]
+        if prev_kth is not None:
+            assert np.all(kth <= prev_kth + 1e-6)
+        # sound at every rung of the dial
+        assert np.all(d_ex[:, -1] >= kth - st.gap - 1e-3)
+        prev_kth = kth
+    np.testing.assert_array_equal(d, d_ex)     # unlimited == exact bits
+    np.testing.assert_array_equal(off, off_ex)
+    assert np.all(st.gap == 0) and st.exact
+
+
+def test_same_budget_is_deterministic(data, tree):
+    """max_leaves/max_bytes drains are deterministic: two identical
+    calls return identical bits and identical accounting."""
+    raw, queries = data
+    b = Budget(max_leaves=7)
+    d1, off1, st1 = T.exact_search_batch(tree, queries, k=5, budget=b)
+    d2, off2, st2 = T.exact_search_batch(tree, queries, k=5, budget=b)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(off1, off2)
+    assert st1.leaves_scanned == st2.leaves_scanned
+    assert st1.scan_bytes == st2.scan_bytes
+
+
+# ------------------------------------------------------------- progressive
+
+def test_progressive_refinement_streams_improving_answers(data, tree):
+    """The generator yields monotonically improving snapshots (k-th
+    distance non-increasing, gap non-increasing) and its final snapshot
+    equals the one-shot ``approx_knn`` bit for bit."""
+    raw, queries = data
+    part = [Partition.from_tree(tree)]
+    b = Budget(max_leaves=16)
+    snaps = list(progressive_knn(part, np.asarray(queries), CFG,
+                                 k=5, budget=b))
+    assert len(snaps) >= 2                     # seeds + at least one group
+    for (d0, _, s0), (d1, _, s1) in zip(snaps, snaps[1:]):
+        assert np.all(d1[:, -1] <= d0[:, -1] + 1e-6)
+        assert np.all(s1.gap <= s0.gap + 1e-6)
+    d_one, off_one, st_one = approx_knn(part, np.asarray(queries), CFG,
+                                        k=5, budget=b)
+    d_f, off_f, st_f = snaps[-1]
+    np.testing.assert_array_equal(d_f, d_one)
+    np.testing.assert_array_equal(off_f, off_one)
+    np.testing.assert_array_equal(st_f.gap, st_one.gap)
+
+
+# --------------------------------------------------------- snapshot engine
+
+def test_lsm_approx_default_is_seed_only_with_gap(data):
+    """The streaming engine's approximate path now runs the shared
+    executor: the default budget scans zero leaves (the historical
+    probe-per-run behavior) and the info dict certifies the answer."""
+    raw, queries = data
+    q = np.asarray(queries)
+    with CoconutLSM(CFG, buffer_capacity=512, leaf_size=64) as lsm:
+        lsm.insert(np.asarray(raw))
+        lsm.flush()
+        d, off, info = lsm.search_approx_batch(q, k=3)
+        assert info["stats"].leaves_scanned == 0
+        assert "gap" in info and np.all(info["gap"] >= 0)
+        assert np.all(np.isfinite(d))
+        # budget buys leaves and tightens (or keeps) the certificate
+        d8, off8, info8 = lsm.search_approx_batch(q, k=3, budget=8)
+        assert info8["stats"].leaves_scanned <= 8
+        assert np.all(d8[:, -1] <= d[:, -1] + 1e-6)
+        d_ex, _, _ = lsm.search_exact_batch(q, k=3)
+        assert np.all(d_ex[:, -1] >= d8[:, -1] - info8["gap"] - 1e-3)
+
+
+def test_budget_kwarg_normalization(data, tree):
+    """Every entry point accepts None / int / dict / Budget, and an
+    unknown mode is rejected."""
+    raw, queries = data
+    assert as_budget(None) is None
+    assert as_budget(5) == Budget(max_leaves=5)
+    assert as_budget({"max_bytes": 100}) == Budget(max_bytes=100)
+    b = Budget(deadline_ms=1.5)
+    assert as_budget(b) is b
+    assert Budget().unlimited and not Budget(max_leaves=0).unlimited
+    d_i, off_i, _ = T.exact_search_batch(tree, queries, k=2, budget=3)
+    d_d, off_d, _ = T.exact_search_batch(tree, queries, k=2,
+                                         budget={"max_leaves": 3})
+    np.testing.assert_array_equal(d_i, d_d)
+    np.testing.assert_array_equal(off_i, off_d)
+    with pytest.raises(ValueError):
+        T.exact_search_batch(tree, queries, k=2, mode="fuzzy")

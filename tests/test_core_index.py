@@ -78,6 +78,28 @@ def test_approx_search_quality(data, tree):
     assert np.mean(ratios) < 2.0
 
 
+def test_k_exceeding_partition_rows_pads(data):
+    """Satellite (ISSUE 6): asking for more neighbors than a partition
+    holds pads with (inf, -1) instead of raising — exact AND approx."""
+    raw, queries = data
+    small = T.build(raw[:40], CFG, leaf_size=64)      # one 40-row leaf
+    q = np.asarray(queries[:3])
+    for mode in ("exact", "approx"):
+        d, off, st = T.exact_search_batch(small, q, k=50, mode=mode)
+        assert d.shape == (3, 50) and off.shape == (3, 50)
+        assert np.all(np.isfinite(d[:, :40])) and np.all(off[:, :40] >= 0)
+        assert np.all(np.isinf(d[:, 40:])) and np.all(off[:, 40:] == -1)
+        # every row is an answer: the 40 finite ids are all 40 rows
+        assert [set(row[:40]) == set(range(40)) for row in off]
+    # with everything visited the approx answer is certified exact even
+    # though fewer than k rows exist (kth == inf, gap == 0)
+    d, off, st = T.exact_search_batch(small, q, k=50, mode="approx")
+    assert st.exact and np.all(st.gap == 0)
+    # under a zero budget rows remain unseen: the gap is honestly inf
+    d0, off0, st0 = T.exact_search_batch(small, q, k=50, budget=0)
+    assert np.all(np.isinf(st0.gap))
+
+
 def test_merge_trees_preserves_exactness(data):
     raw, queries = data
     a = T.build(raw[: N // 2], CFG, leaf_size=64)

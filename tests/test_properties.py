@@ -122,6 +122,54 @@ def test_zorder_locality_beats_lexicographic(seed):
     assert neighbor_dist(zorder) <= neighbor_dist(lexorder) * 1.05
 
 
+_approx_cfg = S.SummaryConfig(series_len=32, segments=8, bits=4)
+
+
+def _approx_tree(seed, n):
+    from repro.core import tree as T
+    rng = np.random.RandomState(seed)
+    x = S.znormalize(jnp.asarray(rng.randn(n, 32), jnp.float32))
+    q = np.asarray(S.znormalize(
+        jnp.asarray(rng.randn(3, 32), jnp.float32)))
+    return T.build(x, _approx_cfg, leaf_size=16), q
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.sampled_from([48, 200]),
+       k=st.sampled_from([1, 3, 5]), budget=st.integers(0, 12))
+@settings(max_examples=15, deadline=None)
+def test_budgeted_gap_certificate_is_sound(seed, n, k, budget):
+    """ISSUE 6 invariant: for ANY budget, the true exact k-th distance
+    is never below the approximate k-th minus the reported gap
+    (``exact_kth >= approx_kth - gap``) — and approximate answers never
+    beat exact (they are drawn from a subset of the rows)."""
+    from repro.core import tree as T
+    tree, q = _approx_tree(seed, n)
+    d_ex, _, _ = T.exact_search_batch(tree, q, k=k)
+    d_a, _, st = T.exact_search_batch(tree, q, k=k, budget=budget)
+    assert st.gap is not None and np.all(st.gap >= 0)
+    m = np.isfinite(d_a[:, -1]) & np.isfinite(st.gap)
+    assert np.all(d_ex[:, -1][m] >= d_a[:, -1][m] - st.gap[m] - 1e-3)
+    mf = np.isfinite(d_a[:, -1])
+    assert np.all(d_a[:, -1][mf] >= d_ex[:, -1][mf] - 1e-3)
+    assert st.leaves_scanned <= budget
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.sampled_from([48, 200]),
+       k=st.sampled_from([1, 3, 5]))
+@settings(max_examples=15, deadline=None)
+def test_unlimited_budget_is_bit_identical_to_exact(seed, n, k):
+    """ISSUE 6 invariant: an unlimited budget drains every surviving
+    leaf — same distance bits, same ids as the exact pipeline, gap 0,
+    certified exact."""
+    from repro.core import tree as T
+    tree, q = _approx_tree(seed, n)
+    d_ex, off_ex, _ = T.exact_search_batch(tree, q, k=k)
+    d_a, off_a, st = T.exact_search_batch(tree, q, k=k, mode="approx")
+    np.testing.assert_array_equal(d_a, d_ex)
+    np.testing.assert_array_equal(off_a, off_ex)
+    assert np.all(st.gap == 0.0) and st.exact
+
+
 @given(batch_sizes=st.lists(st.integers(1, 700), min_size=1, max_size=8))
 @settings(max_examples=10, deadline=None)
 def test_lsm_invariants_hold_under_any_batching(batch_sizes):

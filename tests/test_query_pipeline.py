@@ -200,6 +200,45 @@ def test_single_query_returns_arrays(data, tree):
     assert d3.shape == (3,) and off3.shape == (3,)
 
 
+# ------------------------------------------------- budgeted-answer parity
+
+def test_budgeted_answers_identical_across_backends(data, tree, segment):
+    """Satellite (ISSUE 6): under the same budget and frontier, every
+    backend — device tree, mmap segment, LSM snapshot, sharded engine —
+    returns identical approximate answers: same ids, same distance
+    bits, same certified gap.  Holds because the frontier order is a
+    deterministic function of the plan and all four hold the rows in
+    the same physical order (single insert batch, single run)."""
+    from repro.distributed.sharded_lsm import ShardedCoconutLSM
+    raw, queries = data
+    q = np.asarray(queries)
+    raw_np = np.asarray(raw)
+    with CoconutLSM(CFG, buffer_capacity=N, leaf_size=64) as lsm, \
+            ShardedCoconutLSM(CFG, shards=1, buffer_capacity=N,
+                              leaf_size=64) as sh:
+        lsm.insert(raw_np)
+        lsm.flush()
+        sh.insert(raw_np)
+        sh.flush()
+        for budget in (0, 3, 10, None):
+            kw = dict(k=5, budget=budget, mode="approx")
+            d_t, o_t, st_t = T.exact_search_batch(tree, queries, **kw)
+            d_m, o_m, st_m = exact_search_mmap(segment, q, **kw)
+            d_l, o_l, il = lsm.search_exact_batch(q, **kw)
+            d_s, o_s, isd = sh.search_exact_batch(q, **kw)
+            for d_b, o_b, g_b in ((d_m, o_m, st_m.gap),
+                                  (d_l, o_l, il["gap"]),
+                                  (d_s, o_s, isd["gap"])):
+                np.testing.assert_array_equal(d_b, d_t)  # BIT identical
+                np.testing.assert_array_equal(o_b, o_t)
+                np.testing.assert_array_equal(g_b, st_t.gap)
+        # the unlimited end of the dial is the exact pipeline's bits
+        d_ex, o_ex, _ = T.exact_search_batch(tree, queries, k=5)
+        np.testing.assert_array_equal(d_t, d_ex)
+        np.testing.assert_array_equal(o_t, o_ex)
+        assert np.all(st_t.gap == 0) and st_t.exact
+
+
 # ----------------------------------------------------------- window pruning
 
 def test_planner_window_filtering_matches_brute_force(data):

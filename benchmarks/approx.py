@@ -17,15 +17,13 @@ on the acceptance bar: recall@10 >= 0.9 at a 10%-of-leaves budget.
 """
 from __future__ import annotations
 
-import json
-import pathlib
 import time
 
 import numpy as np
 
 from repro.core import tree as T
 
-from .common import cfg_for, dataset, emit
+from .common import cfg_for, dataset, emit, write_bench
 
 K_AT = 10
 N = 65536
@@ -93,8 +91,7 @@ def bench_approx(n: int, fracs, *, smoke: bool = False) -> dict:
 def main(smoke: bool = False) -> None:
     result = bench_approx(N, SMOKE_FRACS if smoke else FRACS,
                           smoke=smoke)
-    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_approx.json"
-    out.write_text(json.dumps(result, indent=2) + "\n")
+    out = write_bench("approx", payload=result)
     emit("approx/report", 0.0, f"wrote={out.name}")
 
 

@@ -1,8 +1,10 @@
 """Shared benchmark utilities: timing, CSV emission, dataset builders."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
-from typing import Callable, Iterable
+from typing import Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,12 +14,33 @@ from repro.core import summarization as S
 from repro.data.series import random_walk, sliding_windows, synthetic_signal
 
 ROWS = []
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+WRITTEN = {}        # bench name -> BENCH_<name>.json path
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """One CSV row: name,us_per_call,derived."""
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench(name: str, payload: Optional[dict] = None,
+                rows: Optional[list] = None) -> pathlib.Path:
+    """Write ``BENCH_<name>.json`` at the repo root — the one artifact
+    contract every registered benchmark meets (CI uploads them).  The
+    doc always carries the emitted CSV rows; modules with richer
+    results (approx curves, scaling tables) add them via ``payload``.
+    Records the path in ``WRITTEN`` so the driver can assert coverage.
+    """
+    doc = {"bench": name}
+    if payload:
+        doc.update(payload)
+    doc["rows"] = [{"name": n, "us_per_call": u, "derived": d}
+                   for n, u, d in (ROWS if rows is None else rows)]
+    out = ROOT / f"BENCH_{name}.json"
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    WRITTEN[name] = out
+    return out
 
 
 def timeit(fn: Callable, *, repeat: int = 3, number: int = 1) -> float:

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.core import keys as K, summarization as S, tree as T
 from repro.kernels import ops
 
-from .common import block, cfg_for, dataset, emit, timeit
+from .common import ROWS, block, cfg_for, dataset, emit, timeit, \
+    write_bench
 
 
 def _exact_bruteforce(raw, q):
@@ -159,13 +160,16 @@ def bench_batched_query(n: int = 16000,
 
 
 def main(smoke: bool = False) -> None:
+    before = len(ROWS)
     if smoke:
         # tiny planner-regression smoke for CI: one size, batch parity
         bench_query(sizes=(4000,), smoke=True)
         bench_batched_query(n=4000, batch_sizes=(1, 8))
-        return
-    bench_query()
-    bench_batched_query()
+    else:
+        bench_query()
+        bench_batched_query()
+    write_bench("query", payload={"smoke": smoke},
+                rows=ROWS[before:])
 
 
 if __name__ == "__main__":

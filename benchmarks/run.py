@@ -38,6 +38,7 @@ def main() -> None:
         "sharded_streaming": sharded_streaming, "approx": approx,
         "roofline": roofline,
     }
+    from . import common
     args = sys.argv[1:]
     # --smoke: tiny CI-sized runs with built-in regression asserts
     # (planner leaf pruning, candidates/query) for the modules that
@@ -47,10 +48,20 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in only:
         fn = mods[name].main
+        before = len(common.ROWS)
         if smoke and "smoke" in inspect.signature(fn).parameters:
             fn(smoke=True)
         else:
             fn()
+        # every benchmark leaves a BENCH_<name>.json artifact: modules
+        # with richer payloads write their own (write_bench marks
+        # WRITTEN); everyone else gets their emitted rows dumped here
+        if name not in common.WRITTEN:
+            common.write_bench(name, rows=common.ROWS[before:])
+        if smoke:
+            out = common.WRITTEN.get(name)
+            assert out is not None and out.exists(), \
+                f"BENCH_{name}.json not written"
 
 
 if __name__ == "__main__":

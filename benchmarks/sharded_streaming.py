@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.distributed.sharded_lsm import ShardedCoconutLSM
 
-from .common import cfg_for, dataset, emit
+from .common import ROWS, cfg_for, dataset, emit, write_bench
 
 
 def bench_sharded(n: int = 24000, batch: int = 256,
@@ -83,12 +83,15 @@ def bench_sharded(n: int = 24000, batch: int = 256,
 
 
 def main(smoke: bool = False) -> None:
+    before = len(ROWS)
     if smoke:
         bench_sharded(n=4096, batch=256, buffer_capacity=1024,
                       probe_every=4, nq=4, shard_counts=(1, 2),
                       smoke=True)
-        return
-    bench_sharded()
+    else:
+        bench_sharded()
+    write_bench("sharded_streaming", payload={"smoke": smoke},
+                rows=ROWS[before:])
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -54,6 +55,7 @@ import numpy as np
 from . import keys as K
 from . import summarization as S
 from . import tree as T
+from ..obs import get_registry, span as _span
 from .metrics import IngestMetrics, IOStats
 
 __all__ = ["CoconutLSM", "Run"]
@@ -314,23 +316,27 @@ class CoconutLSM:
             runs = list(self.runs)
         if self.store is None:
             return
-        from ..storage.store import SegmentStore
-        for r in runs:
-            if r.segment is None:
-                r.segment = self.store.write_tree(r.tree)
-        manifest = SegmentStore.manifest_for(
-            self.cfg,
-            [{"file": r.segment, "level": r.level,
-              "t_min": r.t_min, "t_max": r.t_max} for r in runs],
-            clock=self.clock, mode=self.mode,
-            buffer_capacity=self.buffer_capacity,
-            leaf_size=self.leaf_size, size_ratio=self.size_ratio,
-            materialized=self.materialized, merges=self.merges,
-            wal_start=sum(r.n for r in runs))
-        self.store.commit_manifest(manifest)
-        self.store.gc()
-        self.ingest.add("commits")
-        self._rotate_wal()
+        t0 = time.perf_counter()
+        with _span("compact.commit", runs=len(runs)):
+            from ..storage.store import SegmentStore
+            for r in runs:
+                if r.segment is None:
+                    r.segment = self.store.write_tree(r.tree)
+            manifest = SegmentStore.manifest_for(
+                self.cfg,
+                [{"file": r.segment, "level": r.level,
+                  "t_min": r.t_min, "t_max": r.t_max} for r in runs],
+                clock=self.clock, mode=self.mode,
+                buffer_capacity=self.buffer_capacity,
+                leaf_size=self.leaf_size, size_ratio=self.size_ratio,
+                materialized=self.materialized, merges=self.merges,
+                wal_start=sum(r.n for r in runs))
+            self.store.commit_manifest(manifest)
+            self.store.gc()
+            self.ingest.add("commits")
+            self._rotate_wal()
+        get_registry().histogram("compact.commit_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
 
     # ------------------------------------------------------------------ write
     def _check_open(self) -> None:
@@ -514,21 +520,39 @@ class CoconutLSM:
             return entry
 
     def _build_run(self, entry: _PendingFlush) -> Run:
-        head_raw = np.concatenate(entry.raw_parts)
-        head_ts = np.concatenate(entry.ts_parts)
-        head_ids = np.concatenate(entry.id_parts)
-        paas = codes = None
-        if entry.sum_parts and all(s is not None for s in entry.sum_parts):
-            paas = np.concatenate([s[0] for s in entry.sum_parts])
-            codes = np.concatenate([s[1] for s in entry.sum_parts])
-        tree = T.build(jnp.asarray(head_raw), self.cfg,
-                       leaf_size=self.leaf_size,
-                       materialized=self.materialized,
-                       timestamps=jnp.asarray(head_ts),
-                       ids=head_ids,
-                       io=self.io, paas=paas, codes=codes)
+        t0 = time.perf_counter()
+        with _span("compact.flush", rows=entry.n):
+            head_raw = np.concatenate(entry.raw_parts)
+            head_ts = np.concatenate(entry.ts_parts)
+            head_ids = np.concatenate(entry.id_parts)
+            paas = codes = None
+            if entry.sum_parts and all(s is not None
+                                       for s in entry.sum_parts):
+                paas = np.concatenate([s[0] for s in entry.sum_parts])
+                codes = np.concatenate([s[1] for s in entry.sum_parts])
+            tree = T.build(jnp.asarray(head_raw), self.cfg,
+                           leaf_size=self.leaf_size,
+                           materialized=self.materialized,
+                           timestamps=jnp.asarray(head_ts),
+                           ids=head_ids,
+                           io=self.io, paas=paas, codes=codes)
+        reg = get_registry()
+        reg.histogram("compact.flush_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        reg.histogram("compact.flush_rows").observe(entry.n)
         return Run(tree=tree, level=0,
                    t_min=int(head_ts.min()), t_max=int(head_ts.max()))
+
+    def _merge_trees(self, a: Run, b: Run) -> T.CoconutTree:
+        """Timed wrapper over ``tree.merge_trees`` shared by the inline
+        (``_flush``) and background (``_bg_step``) merge sites."""
+        t0 = time.perf_counter()
+        with _span("compact.merge", rows=a.n + b.n,
+                   level_a=a.level, level_b=b.level):
+            merged = T.merge_trees(a.tree, b.tree, io=self.io)
+        get_registry().histogram("compact.merge_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        return merged
 
     def _publish_run(self, entry, run: Run) -> None:
         """Atomically swap the flushed head out of the buffer view and the
@@ -584,8 +608,7 @@ class CoconutLSM:
         if self.mode != "tp":
             while (plan := self._merge_plan()) is not None:
                 a, b = plan
-                self._apply_merge(a, b,
-                                  T.merge_trees(a.tree, b.tree, io=self.io))
+                self._apply_merge(a, b, self._merge_trees(a, b))
         self._commit()      # one atomic manifest commit per flush
 
     # ------------------------------------------------ background-worker hooks
@@ -615,8 +638,7 @@ class CoconutLSM:
             plan = self._merge_plan()
             if plan is not None:
                 a, b = plan
-                self._apply_merge(a, b,
-                                  T.merge_trees(a.tree, b.tree, io=self.io))
+                self._apply_merge(a, b, self._merge_trees(a, b))
                 self.ingest.add("bg_merges")
                 self._update_gauges()
                 return True

@@ -14,6 +14,8 @@ import threading
 from collections import defaultdict
 from typing import Dict
 
+from ..obs.registry import get_registry
+
 
 @dataclasses.dataclass
 class IOStats:
@@ -22,16 +24,26 @@ class IOStats:
     Counter updates are serialized by a lock: with background compaction the
     flush/merge path and the query path charge the same ``IOStats`` from
     different threads, and ``dict[k] += v`` is not atomic in CPython.
+
+    Every increment is also mirrored into the global metrics registry under
+    ``io.<key>`` — per-instance counters stay authoritative for each engine /
+    query, the registry aggregates the same traffic process-wide.
     """
     block_series: int = 2000
     counters: Dict[str, int] = dataclasses.field(
         default_factory=lambda: defaultdict(int))
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
+    _mirror: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def _add(self, key: str, v: int) -> None:
         with self._lock:
             self.counters[key] += v
+            c = self._mirror.get(key)
+            if c is None:
+                c = self._mirror[key] = get_registry().counter(f"io.{key}")
+        c.inc(v)
 
     def seq_read(self, n_entries: int) -> None:
         self._add("seq_read_blocks", self._blocks(n_entries))
@@ -65,23 +77,36 @@ class IOStats:
 
     @property
     def bytes_read(self) -> int:
-        return self.counters["bytes_read"]
+        with self._lock:
+            return self.counters["bytes_read"]
 
     @property
     def bytes_written(self) -> int:
-        return self.counters["bytes_written"]
+        with self._lock:
+            return self.counters["bytes_written"]
 
     @property
     def random_blocks(self) -> int:
-        return (self.counters["rand_read_blocks"]
-                + self.counters["rand_write_blocks"])
+        with self._lock:
+            return (self.counters["rand_read_blocks"]
+                    + self.counters["rand_write_blocks"])
 
     @property
     def sequential_blocks(self) -> int:
-        return (self.counters["seq_read_blocks"]
-                + self.counters["seq_write_blocks"])
+        with self._lock:
+            return (self.counters["seq_read_blocks"]
+                    + self.counters["seq_write_blocks"])
 
     def merged(self, other: "IOStats") -> "IOStats":
+        """Sum of two accountings in a fresh ``IOStats``.
+
+        ``self.block_series`` wins: the result reports blocks in the
+        *receiver's* block size even if ``other`` was configured with a
+        different one (block counts are summed as charged, never
+        rescaled).  The merged counters are written directly, not via
+        ``_add``, so they are NOT re-mirrored into the registry — the
+        two inputs already were.
+        """
         out = IOStats(self.block_series)
         with self._lock:
             for k, v in self.counters.items():
@@ -107,20 +132,31 @@ class IngestMetrics:
     buffered rows, outstanding compaction debt, live WAL bytes).  One
     instance is shared by the insert path, the WAL, and the compactor
     thread, so every update is serialized.
+
+    Updates are mirrored into the global metrics registry under
+    ``ingest.<name>`` (counters as counters, gauges as gauges); the
+    per-instance dicts stay authoritative for each engine.
     """
 
     def __init__(self):
         self._lock = threading.Lock()
         self.counters: Dict[str, int] = defaultdict(int)
         self.gauges: Dict[str, float] = {}
+        self._mirror: Dict[str, object] = {}
 
     def add(self, name: str, v: int = 1) -> None:
         with self._lock:
             self.counters[name] += int(v)
+            c = self._mirror.get(name)
+            if c is None:
+                c = self._mirror[name] = get_registry().counter(
+                    f"ingest.{name}")
+        c.inc(int(v))
 
     def set_gauge(self, name: str, v: float) -> None:
         with self._lock:
             self.gauges[name] = v
+        get_registry().gauge(f"ingest.{name}").set(v)
 
     def get(self, name: str) -> int:
         with self._lock:

@@ -56,6 +56,7 @@ from ..core import summarization as S
 from ..core import tree as T
 from ..core.lsm import CoconutLSM
 from ..core.metrics import IngestMetrics, IOStats
+from ..obs import probe, span as _span
 from ..query.merger import merge_pools
 from .router import (KeyRangeRouter, batch_summaries, fence_mindist_sq,
                      key_fence_of, key_range_code_bounds)
@@ -648,6 +649,22 @@ class ShardedCoconutLSM:
             budget = Budget()
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
+        with probe("sharded." + ("approx" if approx else "exact"),
+                   queries=nq, k=k, window=window,
+                   budget=budget if approx else None,
+                   shards=self.n_shards) as rec:
+            return self._fanout(queries, rec, k=k, window=window,
+                                radius_leaves=radius_leaves,
+                                budget=budget, approx=approx)
+
+    def _fanout(self, queries: np.ndarray, rec: dict, *, k: int,
+                window: Optional[int], radius_leaves: int,
+                budget, approx: bool) -> Tuple[np.ndarray, np.ndarray,
+                                               dict]:
+        """The fan-out body of :meth:`search_exact_batch`, inside the
+        probe scope (``rec`` is the probe's query-log record)."""
+        from ..query import Budget
+        nq = queries.shape[0]
         snaps, router = self._snapshots()
         q_paas = np.asarray(S.paa(jnp.asarray(queries), self.cfg.segments))
         bounds = self._fence_bounds(snaps, q_paas)      # [S, Q]
@@ -702,33 +719,50 @@ class ShardedCoconutLSM:
             kw = {}
             if approx:
                 kw = dict(budget=shard_budget(si), mode="approx")
-            d, off, sub = sn.search_exact_batch(
-                queries[idx], k=k, window=window,
-                radius_leaves=radius_leaves, bsf=bound_vec[idx].copy(),
-                **kw)
-            if approx:
-                # carryover: return the unspent slice to the pool
-                if rem["leaves"] is not None:
-                    rem["leaves"] = max(
-                        0, rem["leaves"] - sub["stats"].leaves_scanned)
-                if rem["bytes"] is not None:
-                    rem["bytes"] = max(
-                        0, rem["bytes"] - sub["stats"].scan_bytes)
-                rem["unvisited"] -= int(shard_leaves[si])
-                lb_un_g[idx] = np.minimum(lb_un_g[idx],
-                                          sub["lb_unvisited"])
-            stats.merge(sub["stats"])
-            stats.candidates += sub["stats"].buffer_rows  # historical:
-            # info-level "candidates" includes brute-forced buffer rows
-            stats.candidates_per_query[idx] += sub["candidates_per_query"]
-            stats.leaves_per_query[idx] += sub["leaves_per_query"]
-            info["partitions_touched"] += sub["partitions_touched"]
-            info["partitions_pruned"] += sub["partitions_pruned"]
-            info["buffer_rows"] += sub["buffer_rows"]
-            md, mo = merge_pools(best_d[idx], best_off[idx],
-                                 d, off, k)
-            best_d[idx], best_off[idx] = md, mo
-            bound_vec[idx] = md[:, -1]
+            with _span("shard", shard=si, queries=len(idx)) as ssp:
+                d, off, sub = sn.search_exact_batch(
+                    queries[idx], k=k, window=window,
+                    radius_leaves=radius_leaves, bsf=bound_vec[idx].copy(),
+                    **kw)
+                sst = sub["stats"]
+                ssp.set(leaves_scanned=sst.leaves_scanned,
+                        leaves_pruned=sst.leaves_pruned,
+                        scan_bytes=sst.scan_bytes,
+                        candidates=sst.candidates,
+                        buffer_rows=sst.buffer_rows)
+                if approx:
+                    # carryover: return the unspent slice to the pool
+                    if rem["leaves"] is not None:
+                        rem["leaves"] = max(
+                            0, rem["leaves"] - sst.leaves_scanned)
+                    if rem["bytes"] is not None:
+                        rem["bytes"] = max(
+                            0, rem["bytes"] - sst.scan_bytes)
+                    rem["unvisited"] -= int(shard_leaves[si])
+                    lb_un_g[idx] = np.minimum(lb_un_g[idx],
+                                              sub["lb_unvisited"])
+                    ssp.set(budget_leaves_left=rem["leaves"],
+                            budget_bytes_left=rem["bytes"],
+                            gap_max=(float(sub["gap"].max())
+                                     if len(sub["gap"]) else 0.0))
+                # shard-tag the touched-leaf report before the merge so
+                # hot-leaf analysis can attribute leaves to their shard
+                sst.leaf_touches = {f"s{si}/{p}": v
+                                    for p, v in sst.leaf_touches.items()}
+                stats.merge(sst)
+                stats.candidates += sst.buffer_rows  # historical:
+                # info-level "candidates" includes brute-forced buffer rows
+                stats.candidates_per_query[idx] += \
+                    sub["candidates_per_query"]
+                stats.leaves_per_query[idx] += sub["leaves_per_query"]
+                info["partitions_touched"] += sub["partitions_touched"]
+                info["partitions_pruned"] += sub["partitions_pruned"]
+                info["buffer_rows"] += sub["buffer_rows"]
+                with _span("merge", shard=si, queries=len(idx)):
+                    md, mo = merge_pools(best_d[idx], best_off[idx],
+                                         d, off, k)
+                    best_d[idx], best_off[idx] = md, mo
+                    bound_vec[idx] = md[:, -1]
 
         # phase 1 — cheapest shard first, per query: every query scans
         # its home shard (disjoint sub-batches), seeding a near-optimal
@@ -778,6 +812,7 @@ class ShardedCoconutLSM:
                     shards_touched=stats.shards_touched,
                     shards_pruned=stats.shards_pruned,
                     stats=stats)
+        rec["stats"] = stats
         return best_d, best_off, info
 
     def search_approx_batch(self, queries: np.ndarray, *,
@@ -795,35 +830,42 @@ class ShardedCoconutLSM:
         per-shard ``lb_unvisited`` reports combine min-wise and the gap
         is recomputed against the merged k-th distance.
         """
+        from ..query import as_budget
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         nq = queries.shape[0]
-        snaps, _ = self._snapshots()
-        best_d = np.full((nq, k), np.inf, np.float32)
-        best_off = np.full((nq, k), -1, np.int64)
-        cands_pq = np.zeros(nq, np.int64)
-        lb_un_g = np.full(nq, np.inf, np.float32)
-        exhausted = False
-        info = {"partitions_touched": 0, "buffer_rows": 0,
-                "shards_touched": 0, "shards_pruned": 0}
-        for sn in snaps:
-            if sn.n == 0:        # nothing there — not a prune
-                continue
-            d, off, sub = sn.search_approx_batch(
-                queries, k=k, window=window, radius_leaves=radius_leaves,
-                budget=budget)
-            info["shards_touched"] += 1
-            info["partitions_touched"] += sub["partitions_touched"]
-            info["buffer_rows"] += sub["buffer_rows"]
-            cands_pq += sub["candidates_per_query"]
-            lb_un_g = np.minimum(lb_un_g, sub["lb_unvisited"])
-            exhausted = exhausted or sub["budget_exhausted"]
-            best_d, best_off = merge_pools(best_d, best_off, d, off, k)
-        from ..query import certified_gap
-        gap = certified_gap(best_d[:, -1], lb_un_g)
-        info["candidates_per_query"] = cands_pq
-        info["gap"] = gap
-        info["lb_unvisited"] = lb_un_g
-        info["budget_exhausted"] = exhausted
+        with probe("sharded.probe", queries=nq, k=k, window=window,
+                   budget=as_budget(budget),
+                   shards=self.n_shards):
+            snaps, _ = self._snapshots()
+            best_d = np.full((nq, k), np.inf, np.float32)
+            best_off = np.full((nq, k), -1, np.int64)
+            cands_pq = np.zeros(nq, np.int64)
+            lb_un_g = np.full(nq, np.inf, np.float32)
+            exhausted = False
+            info = {"partitions_touched": 0, "buffer_rows": 0,
+                    "shards_touched": 0, "shards_pruned": 0}
+            for si, sn in enumerate(snaps):
+                if sn.n == 0:    # nothing there — not a prune
+                    continue
+                with _span("shard", shard=si, queries=nq):
+                    d, off, sub = sn.search_approx_batch(
+                        queries, k=k, window=window,
+                        radius_leaves=radius_leaves, budget=budget)
+                info["shards_touched"] += 1
+                info["partitions_touched"] += sub["partitions_touched"]
+                info["buffer_rows"] += sub["buffer_rows"]
+                cands_pq += sub["candidates_per_query"]
+                lb_un_g = np.minimum(lb_un_g, sub["lb_unvisited"])
+                exhausted = exhausted or sub["budget_exhausted"]
+                with _span("merge", shard=si, queries=nq):
+                    best_d, best_off = merge_pools(best_d, best_off,
+                                                   d, off, k)
+            from ..query import certified_gap
+            gap = certified_gap(best_d[:, -1], lb_un_g)
+            info["candidates_per_query"] = cands_pq
+            info["gap"] = gap
+            info["lb_unvisited"] = lb_un_g
+            info["budget_exhausted"] = exhausted
         return best_d, best_off, info
 
     def search_exact(self, query: np.ndarray, *,

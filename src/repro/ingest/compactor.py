@@ -32,7 +32,10 @@ hangs on join.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Optional
+
+from ..obs import get_registry, span as _span
 
 __all__ = ["Compactor"]
 
@@ -118,7 +121,15 @@ class Compactor:
                             self._cv.notify_all()
                             continue   # re-check: a stop may follow
                         self._cv.wait()
-                eng._bg_step(force=force)
+                # one retired unit = one span on the compactor's own
+                # trace track (worker threads get their own tid), with
+                # the debt level it left behind
+                t0 = time.perf_counter()
+                with _span("compact.bg_step", force=force) as sp:
+                    eng._bg_step(force=force)
+                    sp.set(debt_after=eng.compaction_debt())
+                get_registry().histogram("compact.bg_step_ms").observe(
+                    (time.perf_counter() - t0) * 1e3)
                 with self._cv:
                     self._cv.notify_all()    # backpressured inserters, drains
                 self._notify_external()      # sharded router's shared budget

@@ -195,7 +195,8 @@ class Snapshot:
         :mod:`repro.query.approx`).  Unlimited budget returns the exact
         bits with ``gap == 0``.
         """
-        from ..query import approx_knn
+        from ..obs import probe
+        from ..query import approx_knn, as_budget
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         if mode not in ("exact", "approx"):
             raise ValueError(
@@ -203,13 +204,18 @@ class Snapshot:
         kw = dict(k=k, ts_min=self._ts_min(window),
                   temporal_prune=(self.mode != "pp"),
                   bsf=bsf, radius_leaves=radius_leaves, io=self.io)
-        if budget is not None or mode == "approx":
-            best_d, best_off, stats = approx_knn(
-                self._partitions(), queries, self._cfg(),
-                budget=budget, **kw)
-        else:
-            best_d, best_off, stats = exact_knn(
-                self._partitions(), queries, self._cfg(), **kw)
+        budgeted = budget is not None or mode == "approx"
+        with probe("snapshot." + ("approx" if budgeted else "exact"),
+                   queries=queries.shape[0], k=k, window=window,
+                   budget=as_budget(budget) if budgeted else None) as rec:
+            if budgeted:
+                best_d, best_off, stats = approx_knn(
+                    self._partitions(), queries, self._cfg(),
+                    budget=budget, **kw)
+            else:
+                best_d, best_off, stats = exact_knn(
+                    self._partitions(), queries, self._cfg(), **kw)
+            rec["stats"] = stats
         info = self._info(stats)
         return best_d, best_off, info
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import summarization as S
+from ..obs import profile as _prof
 from . import ref
 
 # jit-compiled oracle paths: eager dispatch dominated the scan cost
@@ -83,11 +84,13 @@ def mindist_batch(q_paas: jax.Array, codes: jax.Array, cfg: S.SummaryConfig,
     mode = _resolve(mode)
     scale = cfg.series_len / cfg.segments
     lower, upper = _finite_bounds(cfg.bits)
-    if mode == "jnp":
-        return _mindist_batch_jit(q_paas, codes, lower, upper, scale=scale)
-    return mindist_batch_pallas(q_paas, codes.astype(jnp.int32), lower,
-                                upper, scale=scale,
-                                interpret=(mode == "interpret"))
+    with _prof.profiled("mindist_batch") as done:
+        if mode == "jnp":
+            return done(_mindist_batch_jit(q_paas, codes, lower, upper,
+                                           scale=scale))
+        return done(mindist_batch_pallas(q_paas, codes.astype(jnp.int32),
+                                         lower, upper, scale=scale,
+                                         interpret=(mode == "interpret")))
 
 
 def sax_summarize(x: jax.Array, cfg: S.SummaryConfig, mode: str = "auto"):
@@ -154,13 +157,16 @@ def scan_verify(queries: jax.Array, q_paas: jax.Array, codes: jax.Array,
     lower, upper = _finite_bounds(cfg.bits)
     if dead is None:
         dead = jnp.zeros(codes.shape[0], jnp.int32)
-    if mode == "jnp":
-        return _scan_verify_jit(queries, q_paas, codes, raw, lower, upper,
-                                bound, dead, scale=scale, k=k)
-    return scan_verify_pallas(queries, q_paas, codes.astype(jnp.int32),
-                              raw, lower, upper, bound, dead,
-                              scale=scale, k=k,
-                              interpret=(mode == "interpret"))
+    with _prof.profiled("scan_verify") as done:
+        if mode == "jnp":
+            return done(_scan_verify_jit(queries, q_paas, codes, raw,
+                                         lower, upper, bound, dead,
+                                         scale=scale, k=k))
+        return done(scan_verify_pallas(queries, q_paas,
+                                       codes.astype(jnp.int32),
+                                       raw, lower, upper, bound, dead,
+                                       scale=scale, k=k,
+                                       interpret=(mode == "interpret")))
 
 
 def summarize_and_key(x: jax.Array, cfg: S.SummaryConfig,

@@ -48,6 +48,8 @@ Usage: PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -61,6 +63,8 @@ from ..core.summarization import znormalize
 from ..ingest.wal import FSYNC_POLICIES
 from ..models.steps import make_prefill_step, make_serve_step, pad_cache
 from ..models.transformer import make_model
+from ..obs import (QueryLog, describe_metrics, enable_tracing, get_tracer,
+                   install_query_log)
 
 
 def _pctl(xs, p):
@@ -114,7 +118,24 @@ def main(argv=None) -> None:
                          "steps; the WAL already covers acked inserts "
                          "between commits, so this only bounds replay "
                          "length (0 = no extra checkpoints)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable per-query tracing: write a "
+                         "Chrome/Perfetto trace (trace.json) plus a "
+                         "rotated structured query log "
+                         "(query_log.jsonl) into this directory")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="dump the unified metrics registry "
+                         "(describe_metrics) as one JSON line every N "
+                         "seconds during the decode loop, and once at "
+                         "exit (0 = off)")
     args = ap.parse_args(argv)
+
+    qlog = None
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
+        enable_tracing()
+        qlog = QueryLog(args.trace_dir)
+        install_query_log(qlog)
 
     cfg = get(args.arch, smoke=True)
     model = make_model(cfg)
@@ -138,8 +159,6 @@ def main(argv=None) -> None:
     if args.data_dir:
         # refuse to shadow one persisted layout with the other: a
         # sharded dir holds SHARDS.json, an unsharded store MANIFEST.json
-        import os
-
         from ..storage.store import MANIFEST_NAME, SHARDS_NAME
         has_single = os.path.exists(
             os.path.join(args.data_dir, MANIFEST_NAME))
@@ -218,6 +237,11 @@ def main(argv=None) -> None:
             np.stack(batch), k=args.knn_k, window=args.knn_window, **kw)
         return d, st, time.perf_counter() - t0
 
+    def dump_metrics(tag: str) -> None:
+        snap = {k: (round(v, 4) if isinstance(v, float) else v)
+                for k, v in sorted(describe_metrics().items())}
+        print(f"metrics[{tag}]: {json.dumps(snap)}")
+
     pending = []            # accumulated kNN probes (micro-batching)
     probe_lat = []          # seconds per micro-batch
     probes_answered = 0
@@ -225,6 +249,8 @@ def main(argv=None) -> None:
     st = {"partitions_touched": 0}
     rows_ingested = 0
     t0 = time.perf_counter()
+    next_dump = (t0 + args.metrics_interval
+                 if args.metrics_interval > 0 else None)
     for s in range(args.steps):
         logits, cache = serve(params, cache, tokens, jnp.int32(base + s))
         tokens = jnp.argmax(logits[:, -1], -1)[:, None]
@@ -245,6 +271,9 @@ def main(argv=None) -> None:
             probes_answered += len(pending)
             last_d = float(d[-1, 0])
             pending = []
+        if next_dump is not None and time.perf_counter() >= next_dump:
+            dump_metrics(f"step={s + 1}")
+            next_dump = time.perf_counter() + args.metrics_interval
     dt = time.perf_counter() - t0
     if pending:                       # leftover partial micro-batch
         d, st, dt_p = answer_probes(pending)
@@ -285,15 +314,37 @@ def main(argv=None) -> None:
           f"of {args.probe_batch} ({qps:.1f} probes/s) last_d={last_d:.4f} "
           f"partitions={st['partitions_touched']}"
           f"{shard_note}{leaf_note}{gap_note}")
-    lat = (f"p50={_pctl(probe_lat, 50)*1e3:.1f} ms "
-           f"p99={_pctl(probe_lat, 99)*1e3:.1f} ms "
-           f"max={max(probe_lat)*1e3:.1f} ms" if probe_lat else "n/a")
-    print(f"ingest: {rows_ingested} series at "
-          f"{rows_ingested/dt:.1f} series/s, lag={lag_at_end} rows at "
-          f"loop end, bg_flushes={im.get('bg_flushes', 0)} "
-          f"bg_merges={im.get('bg_merges', 0)} "
-          f"backpressure_waits={im.get('backpressure_waits', 0)} "
-          f"wal_bytes={im.get('wal_bytes', 0)}; probe latency {lat}")
+    # unified report: every key follows the registry's
+    # ``subsystem.metric_unit`` convention (no more p99_ms / probe_p99 /
+    # bare lag mix), so log scrapers see one namespace everywhere
+    report = {
+        "decode.steps_total": args.steps,
+        "decode.throughput_tok_s": round(args.steps * B / dt, 1),
+        "probe.count_total": probes_answered,
+        "probe.micro_batches_total": len(probe_lat),
+        "probe.throughput_qps": round(qps, 1),
+        "probe.latency_p50_ms": round(_pctl(probe_lat, 50) * 1e3, 2),
+        "probe.latency_p99_ms": round(_pctl(probe_lat, 99) * 1e3, 2),
+        "probe.latency_max_ms": (round(max(probe_lat) * 1e3, 2)
+                                 if probe_lat else float("nan")),
+        "ingest.rows_total": rows_ingested,
+        "ingest.throughput_rows_s": round(rows_ingested / dt, 1),
+        "ingest.lag_rows": lag_at_end,
+        "ingest.bg_flushes_total": im.get("bg_flushes", 0),
+        "ingest.bg_merges_total": im.get("bg_merges", 0),
+        "ingest.backpressure_waits_total": im.get("backpressure_waits", 0),
+        "ingest.wal_bytes_total": im.get("wal_bytes", 0),
+    }
+    print("report: " + " ".join(f"{k}={v}" for k, v in report.items()))
+    if args.metrics_interval > 0 or args.trace_dir:
+        dump_metrics("exit")
+    if args.trace_dir:
+        trace_path = os.path.join(args.trace_dir, "trace.json")
+        get_tracer().save(trace_path)
+        qlog.close()
+        print(f"trace: {trace_path} ({len(get_tracer().spans())} spans); "
+              f"query log: {qlog.records_written} records in "
+              f"{args.trace_dir}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+"""Profiling hooks: optional ``jax.profiler`` capture around kernel
+launches, with a wall-clock fallback that works everywhere.
+
+Off by default — the kernel dispatchers (``kernels/ops.py``) wrap their
+launches in :func:`profiled`, which is a no-op until profiling is
+enabled by flag (:func:`enable_profiling`) or environment::
+
+    COCONUT_PROFILE=wall   # wall-clock: block on the result, record a
+                           # kernel.<name>_ms histogram + trace span
+    COCONUT_PROFILE=jax    # same, plus jax.profiler.TraceAnnotation so
+                           # the launch shows up named in an xplane
+                           # capture (MaxText's profiler=xplane wiring)
+    COCONUT_PROFILE_DIR=/x # where serve.py writes the xplane capture
+                           # (jax.profiler.start_trace/stop_trace)
+
+Wall-clock mode deliberately calls ``jax.block_until_ready`` on the
+kernel output: JAX dispatch is async, so an unblocked timer measures
+enqueue cost, not kernel cost.  That makes profiling *observationally
+intrusive* (it serializes the pipeline) — which is why it is gated and
+never on in production serving.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+from typing import Optional
+
+from .registry import get_registry
+from .trace import get_tracer
+
+__all__ = ["profiled", "enable_profiling", "disable_profiling",
+           "profiling_mode", "capture"]
+
+_MODES = ("", "wall", "jax")
+_mode = ""
+
+
+def _env_mode() -> str:
+    v = os.environ.get("COCONUT_PROFILE", "").strip().lower()
+    if v in ("1", "true", "wall"):
+        return "wall"
+    if v in ("jax", "xplane"):
+        return "jax"
+    return ""
+
+
+_mode = _env_mode()
+
+
+def enable_profiling(mode: str = "wall") -> None:
+    if mode not in _MODES[1:]:
+        raise ValueError(f"profiling mode must be one of {_MODES[1:]}, "
+                         f"got {mode!r}")
+    global _mode
+    _mode = mode
+
+
+def disable_profiling() -> None:
+    global _mode
+    _mode = ""
+
+
+def profiling_mode() -> str:
+    """Current mode: '' (off), 'wall', or 'jax'."""
+    return _mode
+
+
+def _identity(x):
+    return x
+
+
+@contextlib.contextmanager
+def profiled(name: str):
+    """Instrument one kernel launch.  Yields a finisher the call site
+    passes its output through (``return done(result)``): a no-op
+    passthrough when profiling is off; with profiling on it blocks on
+    the result so the recorded wall time covers the device work, then
+    observes ``kernel.<name>_ms`` and emits a trace span."""
+    if not _mode:
+        yield _identity
+        return
+    import jax
+    ann = None
+    if _mode == "jax":
+        try:
+            ann = jax.profiler.TraceAnnotation(f"coconut.{name}")
+            ann.__enter__()
+        except Exception:                     # pragma: no cover
+            ann = None
+    sp = get_tracer().span(f"kernel.{name}")
+    sp.__enter__()
+    t0 = time.perf_counter()
+    try:
+        yield jax.block_until_ready
+    finally:
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        sp.set(wall_ms=dt_ms)
+        sp.__exit__(None, None, None)
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        get_registry().histogram(f"kernel.{name}_ms").observe(dt_ms)
+
+
+@contextlib.contextmanager
+def capture(logdir: Optional[str] = None):
+    """Whole-region ``jax.profiler`` capture (xplane) when a directory
+    is given (or ``COCONUT_PROFILE_DIR`` is set); otherwise a plain
+    wall-clock region recorded as ``profile.capture_ms``.  Never raises
+    on profiler unavailability — observability must not take down
+    serving."""
+    logdir = logdir or os.environ.get("COCONUT_PROFILE_DIR")
+    started = False
+    if logdir:
+        try:
+            import jax
+            jax.profiler.start_trace(logdir)
+            started = True
+        except Exception:                     # pragma: no cover
+            started = False
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        get_registry().histogram("profile.capture_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        if started:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception:                 # pragma: no cover
+                pass

@@ -1,0 +1,238 @@
+"""Unified metrics registry: counters, gauges, log-bucketed histograms.
+
+Coconut's central claims are *cost* claims — bulk-load, query, and
+update complexity in the disk-access model — so the repo is full of
+counters (`IOStats` block/byte accounting, `IngestMetrics` WAL and
+compaction traffic, per-query `SearchStats`).  Before this module they
+were fragmented per-subsystem objects with ad-hoc snapshot methods;
+the registry gives them ONE namespace, ONE thread-safety contract, and
+ONE readout (:func:`describe_metrics`) the serving loop, benchmarks,
+and dashboards all scrape.
+
+Naming convention: ``subsystem.metric_unit`` — ``io.bytes_read``,
+``ingest.lag_rows``, ``query.leaves_scanned_total``,
+``probe.latency_ms``.  Counters are monotone totals, gauges hold the
+latest observation, histograms are log2-bucketed (one ``frexp`` + one
+locked list increment per observation — cheap enough for the hot path)
+with p50/p95/p99 readout.
+
+The existing telemetry objects stay as *views*: every
+``IOStats``/``IngestMetrics`` update is mirrored into the registry
+under its subsystem prefix (``io.*`` / ``ingest.*``), and the query
+pipeline folds each ``SearchStats`` into ``query.*`` totals — existing
+call sites keep working, the registry aggregates across engines,
+shards, and threads.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Optional
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "get_registry", "describe_metrics"]
+
+
+class Counter:
+    """Monotone total.  ``inc`` is serialized by a per-metric lock
+    (``int += int`` is not atomic in CPython once threads preempt
+    mid-bytecode), so concurrent increments never lose updates."""
+
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, v: int = 1) -> None:
+        with self._lock:
+            self._value += v
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+
+class Gauge:
+    """Latest observation (ingest lag, compaction debt, shard sizes)."""
+
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+# log2 bucket layout: bucket i covers [2^(i+_EXP_LO-1), 2^(i+_EXP_LO));
+# 2^-20 (~1e-6) .. 2^30 (~1e9) spans sub-microsecond latencies to
+# multi-gigabyte sizes in 50 buckets — 2x resolution is plenty for
+# p50/p95/p99 on latency/size distributions.
+_EXP_LO = -20
+_EXP_HI = 30
+_NBUCKETS = _EXP_HI - _EXP_LO + 2        # + underflow + overflow
+
+
+class Histogram:
+    """Log2-bucketed distribution with percentile readout.
+
+    ``observe`` costs one ``math.frexp`` and one locked list increment —
+    deliberately cheap so per-probe latencies and per-scan byte counts
+    can be recorded on the serving hot path.  Percentiles interpolate
+    within the winning bucket (geometric midpoint), which is exact to
+    within the 2x bucket width — the honest resolution of a log-bucketed
+    histogram.
+    """
+
+    __slots__ = ("name", "_lock", "_counts", "_count", "_sum",
+                 "_min", "_max")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._counts = [0] * _NBUCKETS
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    @staticmethod
+    def _bucket(v: float) -> int:
+        if v <= 0.0:
+            return 0
+        # frexp: v = m * 2^e with m in [0.5, 1) -> bucket by exponent
+        e = math.frexp(v)[1]
+        return min(max(e - _EXP_LO, 0), _NBUCKETS - 1)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        b = self._bucket(v)
+        with self._lock:
+            self._counts[b] += 1
+            self._count += 1
+            self._sum += v
+            if v < self._min:
+                self._min = v
+            if v > self._max:
+                self._max = v
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100].  NaN when empty."""
+        with self._lock:
+            if self._count == 0:
+                return math.nan
+            target = p / 100.0 * self._count
+            seen = 0
+            for i, c in enumerate(self._counts):
+                seen += c
+                if seen >= target and c:
+                    if i == 0:
+                        return max(0.0, self._min)
+                    lo = 2.0 ** (i + _EXP_LO - 1)
+                    hi = 2.0 ** (i + _EXP_LO)
+                    # geometric midpoint, clamped to the observed range
+                    mid = math.sqrt(lo * hi)
+                    return min(max(mid, self._min), self._max)
+            return self._max
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            count, total = self._count, self._sum
+        return {"count": count, "sum": total,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99)}
+
+
+class MetricsRegistry:
+    """Named metric store.  ``counter``/``gauge``/``histogram`` create
+    on first use and return the shared instance afterwards; creation is
+    serialized by the registry lock, updates by each metric's own lock
+    (no global hot-path contention point)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self._counters.setdefault(name, Counter(name))
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            with self._lock:
+                g = self._gauges.setdefault(name, Gauge(name))
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            with self._lock:
+                h = self._histograms.setdefault(name, Histogram(name))
+        return h
+
+    def reset(self) -> None:
+        """Drop every metric (test isolation for the global registry)."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flat point-in-time view: counters and gauges by name,
+        histograms expanded as ``name.count/.sum/.p50/.p95/.p99``."""
+        with self._lock:
+            counters = list(self._counters.values())
+            gauges = list(self._gauges.values())
+            hists = list(self._histograms.values())
+        out: Dict[str, float] = {}
+        for c in counters:
+            out[c.name] = c.value
+        for g in gauges:
+            out[g.name] = g.value
+        for h in hists:
+            for k, v in h.summary().items():
+                out[f"{h.name}.{k}"] = v
+        return out
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-global registry every subsystem mirrors into."""
+    return _REGISTRY
+
+
+def describe_metrics(registry: Optional[MetricsRegistry] = None
+                     ) -> Dict[str, float]:
+    """Scrape-ready snapshot of the (global) registry — the dict the
+    serving loop dumps on ``--metrics-interval`` ticks and prints at
+    exit, keyed by the ``subsystem.metric_unit`` convention."""
+    return (registry if registry is not None else _REGISTRY).snapshot()

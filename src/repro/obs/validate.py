@@ -1,0 +1,119 @@
+"""Validate a Chrome/Perfetto ``trace_event`` JSON file.
+
+CI's trace-smoke step runs this against the ``trace.json`` that
+``serve.py --trace-dir`` writes::
+
+    python -m repro.obs.validate /tmp/trace/trace.json
+
+Checks the JSON object format contract (``traceEvents`` list; every
+event has ``name``/``ph``/``pid``/``tid``; timed events have numeric
+``ts`` and complete events a non-negative ``dur``), that span ids are
+unique and every ``parent_id`` resolves to a known span, that child
+spans nest inside their parent's time range, and that the span tree
+actually covers the serving pipeline: ``probe`` and ``plan`` must be
+present, and a ``scan`` span whenever any probe actually scanned
+leaves (a budget-starved run can legitimately answer from seeds and
+pruning alone, touching zero leaves — no scan span then).  Exits
+non-zero with a reason on any violation, so a broken exporter fails
+the build instead of producing an unloadable file.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_SPANS = ("probe", "plan")
+# Perfetto tolerates ~1 us of rounding on exported timestamps.
+_SLOP_US = 1.5
+
+
+def validate(doc: dict) -> list:
+    """Return a list of violation strings (empty == valid)."""
+    errs = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    if not events:
+        return ["traceEvents is empty"]
+    spans = {}
+    names = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errs.append(f"event[{i}] not an object")
+            continue
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in ev:
+                errs.append(f"event[{i}] missing {field!r}")
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        if not isinstance(ev.get("ts"), (int, float)):
+            errs.append(f"event[{i}] ({ev.get('name')}): non-numeric ts")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"event[{i}] ({ev.get('name')}): complete "
+                            f"event needs dur >= 0, got {dur!r}")
+                continue
+            names.add(ev["name"])
+            sid = ev.get("args", {}).get("span_id")
+            if sid is not None:
+                if sid in spans:
+                    errs.append(f"duplicate span_id {sid}")
+                spans[sid] = ev
+    for sid, ev in spans.items():
+        pid = ev.get("args", {}).get("parent_id")
+        if pid is None:
+            continue
+        parent = spans.get(pid)
+        if parent is None:
+            errs.append(f"span {sid} ({ev['name']}): parent_id {pid} "
+                        f"not in trace (dropped by the ring buffer?)")
+            continue
+        if ev["ts"] + _SLOP_US < parent["ts"] or \
+                ev["ts"] + ev["dur"] > parent["ts"] + parent["dur"] + _SLOP_US:
+            errs.append(f"span {sid} ({ev['name']}) not nested inside "
+                        f"parent {pid} ({parent['name']})")
+    for want in REQUIRED_SPANS:
+        if want not in names:
+            errs.append(f"no {want!r} span in trace — pipeline coverage "
+                        f"incomplete")
+    scanned = any(ev.get("args", {}).get("leaves_scanned", 0)
+                  for ev in events
+                  if isinstance(ev, dict) and ev.get("ph") == "X"
+                  and ev.get("name") == "probe")
+    if scanned and "scan" not in names:
+        errs.append("probes scanned leaves but no 'scan' span in trace "
+                    "— pipeline coverage incomplete")
+    return errs
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m repro.obs.validate <trace.json>",
+              file=sys.stderr)
+        return 2
+    path = argv[0]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}", file=sys.stderr)
+        return 1
+    errs = validate(doc)
+    nspans = sum(1 for ev in doc.get("traceEvents", [])
+                 if isinstance(ev, dict) and ev.get("ph") == "X")
+    if errs:
+        for e in errs[:50]:
+            print(f"{path}: {e}", file=sys.stderr)
+        print(f"{path}: INVALID ({len(errs)} violations, {nspans} spans)",
+              file=sys.stderr)
+        return 1
+    print(f"{path}: OK ({nspans} spans)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,7 @@ from typing import Iterator, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..core import summarization as S
+from ..obs import record_search, span as _span
 from .executor import (_leaves_per_group, _scan_buffer, _scan_leaf_group,
                        _seed_sorted)
 from .merger import KnnPool, SearchStats
@@ -117,7 +118,7 @@ def as_budget(budget: Union[None, int, dict, Budget]) -> Optional[Budget]:
 
 def _drain(plan: ScanPlan, queries_np: np.ndarray, *, k: int,
            budget: Optional[Budget], bsf, radius_leaves: int,
-           chunk: int, io, mindist_fn
+           chunk: int, io, mindist_fn, plan_ms: float = 0.0
            ) -> Iterator[Tuple[np.ndarray, np.ndarray, SearchStats]]:
     """The budgeted frontier drain (generator of improving snapshots)."""
     import jax.numpy as jnp
@@ -128,6 +129,8 @@ def _drain(plan: ScanPlan, queries_np: np.ndarray, *, k: int,
     stats = SearchStats(exact=False, queries=nq)
     stats.candidates_per_query = np.zeros(nq, np.int64)
     stats.leaves_per_query = np.zeros(nq, np.int64)
+    if plan_ms:
+        stats.add_timing("plan", plan_ms)
     budget = budget if budget is not None else Budget()
     t_end = None
     if budget.deadline_ms is not None:
@@ -150,9 +153,10 @@ def _drain(plan: ScanPlan, queries_np: np.ndarray, *, k: int,
     seeded = []
     total_rows = 0
     for entry in sorted_entries:
-        alive, offs_all, idx0 = _seed_sorted(
-            entry, queries_j, q_paas_j, pool,
-            radius_leaves=radius_leaves, io=io)
+        with _span("seed", radius_leaves=radius_leaves):
+            alive, offs_all, idx0 = _seed_sorted(
+                entry, queries_j, q_paas_j, pool,
+                radius_leaves=radius_leaves, io=io)
         stats.candidates += len(np.unique(idx0))
         stats.candidates_per_query += idx0.shape[1]
         stats.partitions_touched += 1
@@ -193,6 +197,8 @@ def _drain(plan: ScanPlan, queries_np: np.ndarray, *, k: int,
         gap = certified_gap(pool.best_d[:, -1], lb_un)
         st = dataclasses.replace(stats)
         st.candidates_per_query = stats.candidates_per_query.copy()
+        st.timings = dict(stats.timings)
+        st.leaf_touches = {p: list(v) for p, v in stats.leaf_touches.items()}
         st.leaves_touched = sum(int(u.sum()) for u in union_marks)
         lpq = np.zeros(nq, np.int64)
         for m_ in leaf_marks:
@@ -206,55 +212,85 @@ def _drain(plan: ScanPlan, queries_np: np.ndarray, *, k: int,
 
     yield snapshot()
 
-    pos, total = 0, len(order)
-    while pos < total:
-        bound = pool.bound()
-        if fkey[order[pos]] >= float(bound.max()):
-            # everything left is fence-pruned for every query: with no
-            # external bsf these leaves can never contribute to the gap
-            stats.leaves_pruned += total - pos
-            break
-        if t_end is not None and time.perf_counter() >= t_end:
-            stats.budget_exhausted = True
-            break
-        ei = int(fent[order[pos]])
-        entry = sorted_entries[ei]
-        part = entry.partition
-        cap = _leaves_per_group(chunk, nq, part.leaf_size)
-        # conservative whole-leaf byte projection (codes + all raw rows)
-        proj = part.leaf_size * (part.cfg.segments
-                                 + part.cfg.series_len * 4)
-        grp = []
-        stop = False
-        while (pos < total and int(fent[order[pos]]) == ei
-               and len(grp) < cap):
-            li = int(fleaf[order[pos]])
-            if not (entry.leaf_bounds[:, li] < bound).any():
-                stats.leaves_pruned += 1
-                pos += 1
-                continue
-            if stats.leaves_scanned + len(grp) + 1 > leaf_cap:
-                stop = True
+    t_scan = time.perf_counter()
+    try:
+        pos, total = 0, len(order)
+        while pos < total:
+            bound = pool.bound()
+            if fkey[order[pos]] >= float(bound.max()):
+                # everything left is fence-pruned for every query: with no
+                # external bsf these leaves can never contribute to the gap
+                with _span("prune", frontier=True) as psp:
+                    stats.leaves_pruned += total - pos
+                    psp.set(leaves_pruned=total - pos)
                 break
-            if stats.scan_bytes + proj * (len(grp) + 1) > byte_cap:
-                stop = True
+            if t_end is not None and time.perf_counter() >= t_end:
+                stats.budget_exhausted = True
                 break
-            grp.append(li)
-            pos += 1
-        if grp:
-            garr = np.sort(np.asarray(grp, np.int64))  # sequential in grp
-            live, nbytes = _scan_leaf_group(
-                entry, queries_j, q_paas_j, garr, k, pool, stats,
-                seeded[ei][0], seeded[ei][1], leaf_marks[ei],
-                union_marks[ei], io, per_fn[ei], None)
-            live_total += live
-            scanned_mask[ei][garr] = True
-            stats.leaves_scanned += len(garr)
-            stats.scan_bytes += nbytes
-            yield snapshot()
-        if stop:             # admitted leaves scanned; budget is spent
-            stats.budget_exhausted = True
-            break
+            ei = int(fent[order[pos]])
+            entry = sorted_entries[ei]
+            part = entry.partition
+            label = f"p{ei}:{part.kind}"
+            cap = _leaves_per_group(chunk, nq, part.leaf_size)
+            # conservative whole-leaf byte projection (codes + raw rows)
+            proj = part.leaf_size * (part.cfg.segments
+                                     + part.cfg.series_len * 4)
+            grp = []
+            stop = False
+            # span attrs are deltas of the SAME stats counters the group
+            # charges, so per-span numbers sum to the SearchStats totals
+            b_scanned, b_pruned = stats.leaves_scanned, stats.leaves_pruned
+            b_bytes, b_cand = stats.scan_bytes, stats.candidates
+            with _span("scan", part=label, rows=part.n) as sp:
+                while (pos < total and int(fent[order[pos]]) == ei
+                       and len(grp) < cap):
+                    li = int(fleaf[order[pos]])
+                    if not (entry.leaf_bounds[:, li] < bound).any():
+                        stats.leaves_pruned += 1
+                        pos += 1
+                        continue
+                    if stats.leaves_scanned + len(grp) + 1 > leaf_cap:
+                        stop = True
+                        break
+                    if stats.scan_bytes + proj * (len(grp) + 1) > byte_cap:
+                        stop = True
+                        break
+                    grp.append(li)
+                    pos += 1
+                if grp:
+                    garr = np.sort(np.asarray(grp, np.int64))  # sequential
+                    live, nbytes = _scan_leaf_group(
+                        entry, queries_j, q_paas_j, garr, k, pool, stats,
+                        seeded[ei][0], seeded[ei][1], leaf_marks[ei],
+                        union_marks[ei], io, per_fn[ei], None)
+                    live_total += live
+                    scanned_mask[ei][garr] = True
+                    stats.leaves_scanned += len(garr)
+                    stats.scan_bytes += nbytes
+                sp.set(leaves_scanned=stats.leaves_scanned - b_scanned,
+                       leaves_pruned=stats.leaves_pruned - b_pruned,
+                       scan_bytes=stats.scan_bytes - b_bytes,
+                       candidates=stats.candidates - b_cand,
+                       budget_leaves_left=(
+                           None if budget.max_leaves is None
+                           else int(leaf_cap - stats.leaves_scanned)),
+                       budget_bytes_left=(
+                           None if budget.max_bytes is None
+                           else int(byte_cap - stats.scan_bytes)))
+            if grp:
+                yield snapshot()
+            if stop:         # admitted leaves scanned; budget is spent
+                stats.budget_exhausted = True
+                break
+    finally:
+        # runs on normal drain AND on early consumer close(): the stats
+        # that exist at abandon time still reach the registry/query log
+        stats.add_timing("scan", (time.perf_counter() - t_scan) * 1e3)
+        for i, e in enumerate(sorted_entries):
+            hit = np.nonzero(union_marks[i])[0]
+            if len(hit):
+                stats.touch_leaves(f"p{i}:{e.partition.kind}", hit)
+        record_search(stats)
 
     yield snapshot()
 
@@ -276,13 +312,15 @@ def approx_knn(partitions: Sequence[Partition], queries,
     """
     import jax.numpy as jnp
     queries_np = np.atleast_2d(np.asarray(queries, np.float32))
+    t0 = time.perf_counter()
     q_paas = np.asarray(S.paa(jnp.asarray(queries_np), cfg.segments))
     plan = build_plan(partitions, q_paas, ts_min=ts_min,
                       temporal_prune=temporal_prune, io=io)
+    plan_ms = (time.perf_counter() - t0) * 1e3
     out = None
     for out in _drain(plan, queries_np, k=k, budget=as_budget(budget),
                       bsf=bsf, radius_leaves=radius_leaves, chunk=chunk,
-                      io=io, mindist_fn=mindist_fn):
+                      io=io, mindist_fn=mindist_fn, plan_ms=plan_ms):
         pass
     return out
 
@@ -309,9 +347,11 @@ def progressive_knn(partitions: Sequence[Partition], queries,
     """
     import jax.numpy as jnp
     queries_np = np.atleast_2d(np.asarray(queries, np.float32))
+    t0 = time.perf_counter()
     q_paas = np.asarray(S.paa(jnp.asarray(queries_np), cfg.segments))
     plan = build_plan(partitions, q_paas, ts_min=ts_min,
                       temporal_prune=temporal_prune, io=io)
+    plan_ms = (time.perf_counter() - t0) * 1e3
     yield from _drain(plan, queries_np, k=k, budget=as_budget(budget),
                       bsf=bsf, radius_leaves=radius_leaves, chunk=chunk,
-                      io=io, mindist_fn=mindist_fn)
+                      io=io, mindist_fn=mindist_fn, plan_ms=plan_ms)

@@ -20,11 +20,13 @@ path and is validated against the eager chain in the kernel tests.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import summarization as S
+from ..obs import record_search, span as _span
 from .merger import KnnPool, SearchStats
 from .partition import Partition
 from .planner import ScanEntry, ScanPlan, build_plan
@@ -137,9 +139,15 @@ def _scan_leaf_group(entry: ScanEntry, queries_j, q_paas_j,
     codes_blk = part.codes_rows(row_idx, io=io)
     nbytes = len(row_idx) * part.cfg.segments
     if fused is not None:
-        live_pairs = _verify_fused(
-            entry, queries_j, q_paas_j, codes_blk, row_idx, k, pool,
-            stats, alive, offs_all, leaf_mark, union_mark, io, fused)
+        t0 = time.perf_counter()
+        with _span("verify", rows=len(row_idx), fused=True) as vsp:
+            before = stats.candidates
+            live_pairs = _verify_fused(
+                entry, queries_j, q_paas_j, codes_blk, row_idx, k, pool,
+                stats, alive, offs_all, leaf_mark, union_mark, io, fused)
+            vsp.set(candidates=stats.candidates - before,
+                    raw_bytes=len(row_idx) * part.cfg.series_len * 4)
+        stats.add_timing("verify", (time.perf_counter() - t0) * 1e3)
         # the fused kernel streams the whole group's raw rows (that IS
         # the fusion), so the group charges every row's raw bytes
         return live_pairs, nbytes + len(row_idx) * part.cfg.series_len * 4
@@ -155,28 +163,34 @@ def _scan_leaf_group(entry: ScanEntry, queries_j, q_paas_j,
         return live_pairs, nbytes
     block = row_idx[keep]
     mask = live[:, keep]
-    rows = part.series_rows(block, io=io)
-    if part.backend == "device" and io is not None:
-        io.seq_read(len(block))
-    dd = np.asarray(S.euclidean_sq_batch(queries_j,
-                                         jnp.asarray(rows)))   # [Q, B]
-    nbytes += len(block) * part.cfg.series_len * 4
-    stats.candidates += len(block)
-    union_mark[block // leaf] = True
-    for qi in range(nq):
-        m = mask[qi]
-        if not m.any():
-            continue
-        stats.candidates_per_query[qi] += int(m.sum())
-        leaf_mark[qi, block[m] // leaf] = True
-        pool.update(qi, dd[qi][m], offs_all[block[m]])
+    t0 = time.perf_counter()
+    with _span("verify", rows=len(block)) as vsp:
+        rows = part.series_rows(block, io=io)
+        if part.backend == "device" and io is not None:
+            io.seq_read(len(block))
+        dd = np.asarray(S.euclidean_sq_batch(queries_j,
+                                             jnp.asarray(rows)))   # [Q, B]
+        nbytes += len(block) * part.cfg.series_len * 4
+        stats.candidates += len(block)
+        union_mark[block // leaf] = True
+        for qi in range(nq):
+            m = mask[qi]
+            if not m.any():
+                continue
+            stats.candidates_per_query[qi] += int(m.sum())
+            leaf_mark[qi, block[m] // leaf] = True
+            pool.update(qi, dd[qi][m], offs_all[block[m]])
+        vsp.set(candidates=len(block),
+                raw_bytes=len(block) * part.cfg.series_len * 4)
+    stats.add_timing("verify", (time.perf_counter() - t0) * 1e3)
     return live_pairs, nbytes
 
 
 def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
                  pool: KnnPool, stats: SearchStats, *,
                  radius_leaves: int, chunk: int, io, mindist_fn,
-                 scan_mode: Optional[str]) -> int:
+                 scan_mode: Optional[str],
+                 label: str = "") -> int:
     """Seed + leaf-skip scan + verify one sorted partition.  Returns the
     number of live (query, row) pairs the lower bound could not prune."""
     part = entry.partition
@@ -187,27 +201,34 @@ def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
     # bytes from disk, so fusion stays a device-backend path
     fused = scan_mode if part.backend == "device" else None
 
-    alive, offs_all, _ = _seed_sorted(entry, queries_j, q_paas_j, pool,
-                                      radius_leaves=radius_leaves, io=io)
+    with _span("seed", radius_leaves=radius_leaves):
+        alive, offs_all, _ = _seed_sorted(entry, queries_j, q_paas_j, pool,
+                                          radius_leaves=radius_leaves,
+                                          io=io)
 
     # -- leaf-granular pruning against the fence bounds --------------------
     # (the seed probe above always runs — the external bsf and the fence
     # bounds prune the SCAN, never the seeds, matching the historical
     # run-chaining contract)
-    bound = pool.bound()
-    if np.all(entry.part_bound >= bound):      # whole-partition fast path
-        stats.partitions_pruned += 1
-        stats.leaves_pruned += part.n_leaves
-        return 0
-    lb = entry.leaf_bounds                                    # [Q, n_leaves]
-    surv = np.nonzero((lb < bound[:, None]).any(axis=0))[0]
-    stats.leaves_pruned += lb.shape[1] - len(surv)
-    stats.leaves_scanned += len(surv)
-    if len(surv) == 0:
-        stats.partitions_pruned += 1
-        return 0
-    # cheapest leaves first: the bound tightens fastest, pruning the rest
-    surv = surv[np.argsort(lb[:, surv].min(axis=0), kind="stable")]
+    with _span("prune", leaves=part.n_leaves) as psp:
+        bound = pool.bound()
+        if np.all(entry.part_bound >= bound):  # whole-partition fast path
+            stats.partitions_pruned += 1
+            stats.leaves_pruned += part.n_leaves
+            psp.set(leaves_pruned=part.n_leaves, whole_partition=True)
+            return 0
+        lb = entry.leaf_bounds                                # [Q, n_leaves]
+        surv = np.nonzero((lb < bound[:, None]).any(axis=0))[0]
+        stats.leaves_pruned += lb.shape[1] - len(surv)
+        stats.leaves_scanned += len(surv)
+        psp.set(leaves_pruned=lb.shape[1] - len(surv),
+                leaves_surviving=len(surv))
+        if len(surv) == 0:
+            stats.partitions_pruned += 1
+            psp.set(whole_partition=True)
+            return 0
+        # cheapest leaves first: the bound tightens fastest, pruning the rest
+        surv = surv[np.argsort(lb[:, surv].min(axis=0), kind="stable")]
 
     leaves_per_grp = _leaves_per_group(chunk, nq, leaf)
     leaf_mark = np.zeros((nq, lb.shape[1]), bool)
@@ -222,6 +243,8 @@ def _scan_sorted(entry: ScanEntry, queries_j, q_paas_j, k: int,
         stats.scan_bytes += nbytes
     stats.leaves_touched += int(union_mark.sum())
     stats.leaves_per_query += leaf_mark.sum(axis=1)
+    if label:
+        stats.touch_leaves(label, np.nonzero(union_mark)[0])
     return live_pairs
 
 
@@ -301,10 +324,15 @@ def execute(plan: ScanPlan, queries, *, k: int = 1,
     stats.leaves_per_query = np.zeros(nq, np.int64)
     live_pairs = 0
     total_rows = 0
-    for entry in plan.entries:
+    t_scan = time.perf_counter()
+    for pi, entry in enumerate(plan.entries):
         part = entry.partition
+        label = f"p{pi}:{part.kind}"
         if not part.is_sorted:
-            _scan_buffer(entry, queries_j, k, pool, stats, io)
+            with _span("scan", part=label, rows=part.n) as sp:
+                before_rows = stats.buffer_rows
+                _scan_buffer(entry, queries_j, k, pool, stats, io)
+                sp.set(buffer_rows=stats.buffer_rows - before_rows)
             continue
         if mindist_fn is None:
             cfg = part.cfg
@@ -313,14 +341,27 @@ def execute(plan: ScanPlan, queries, *, k: int = 1,
             part_mindist = mindist_fn
         total_rows += part.n
         pruned_before = stats.partitions_pruned
-        live_pairs += _scan_sorted(
-            entry, queries_j, q_paas_j, k, pool, stats,
-            radius_leaves=radius_leaves, chunk=chunk, io=io,
-            mindist_fn=part_mindist, scan_mode=scan_mode)
+        # scan-span attrs are deltas of the SAME stats counters, so the
+        # per-span numbers sum to the SearchStats totals by construction
+        b_scanned, b_pruned = stats.leaves_scanned, stats.leaves_pruned
+        b_bytes, b_cand = stats.scan_bytes, stats.candidates
+        with _span("scan", part=label, rows=part.n,
+                   leaves=part.n_leaves) as sp:
+            live_pairs += _scan_sorted(
+                entry, queries_j, q_paas_j, k, pool, stats,
+                radius_leaves=radius_leaves, chunk=chunk, io=io,
+                mindist_fn=part_mindist, scan_mode=scan_mode,
+                label=label)
+            sp.set(leaves_scanned=stats.leaves_scanned - b_scanned,
+                   leaves_pruned=stats.leaves_pruned - b_pruned,
+                   scan_bytes=stats.scan_bytes - b_bytes,
+                   candidates=stats.candidates - b_cand)
         if stats.partitions_pruned == pruned_before:
             stats.partitions_touched += 1
+    stats.add_timing("scan", (time.perf_counter() - t_scan) * 1e3)
     stats.pruned_frac = 1.0 - live_pairs / max(nq * total_rows, 1)
     best_d, best_off = pool.result()
+    record_search(stats)
     return best_d, best_off, stats
 
 
@@ -335,9 +376,14 @@ def exact_knn(partitions: Sequence[Partition], queries,
     point (tree, snapshot, sharded shard, mmap segment) delegates to."""
     import jax.numpy as jnp
     queries_np = np.atleast_2d(np.asarray(queries, np.float32))
+    t0 = time.perf_counter()
     q_paas = np.asarray(S.paa(jnp.asarray(queries_np), cfg.segments))
     plan = build_plan(partitions, q_paas, ts_min=ts_min,
                       temporal_prune=temporal_prune, io=io)
-    return execute(plan, queries_np, k=k, bsf=bsf,
-                   radius_leaves=radius_leaves, chunk=chunk, io=io,
-                   mindist_fn=mindist_fn, scan_mode=scan_mode)
+    plan_ms = (time.perf_counter() - t0) * 1e3
+    d, off, stats = execute(plan, queries_np, k=k, bsf=bsf,
+                            radius_leaves=radius_leaves, chunk=chunk,
+                            io=io, mindist_fn=mindist_fn,
+                            scan_mode=scan_mode)
+    stats.add_timing("plan", plan_ms)
+    return d, off, stats

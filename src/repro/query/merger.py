@@ -17,7 +17,7 @@ size.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -74,6 +74,25 @@ class SearchStats:
     budget_exhausted: bool = False   # drain stopped on the budget
     gap: Optional[np.ndarray] = None          # [Q] certified epsilon bound
     lb_unvisited: Optional[np.ndarray] = None  # [Q] min unvisited-leaf lb
+    # Observability riders (never affect answers): per-stage wall times
+    # and the touched leaf ids per partition (capped), for the query log.
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)
+    leaf_touches: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict)
+
+    LEAF_TOUCH_CAP = 64   # max touched-leaf ids kept per partition
+
+    def add_timing(self, stage: str, ms: float) -> None:
+        self.timings[stage] = self.timings.get(stage, 0.0) + ms
+
+    def touch_leaves(self, part: str, leaf_ids) -> None:
+        """Record which leaves of ``part`` were actually streamed
+        (capped at ``LEAF_TOUCH_CAP`` per partition — the query log
+        drives hot-leaf analysis, not exact replay)."""
+        cur = self.leaf_touches.setdefault(part, [])
+        room = self.LEAF_TOUCH_CAP - len(cur)
+        if room > 0:
+            cur.extend(int(i) for i in list(leaf_ids)[:room])
 
     def merge(self, other: "SearchStats") -> None:
         """Fold another pipeline invocation's accounting into this one
@@ -88,6 +107,10 @@ class SearchStats:
         self.scan_bytes += other.scan_bytes
         self.budget_exhausted = (self.budget_exhausted
                                  or other.budget_exhausted)
+        for stage, ms in other.timings.items():
+            self.add_timing(stage, ms)
+        for part, ids in other.leaf_touches.items():
+            self.touch_leaves(part, ids)
 
 
 def merge_topk(dists: np.ndarray, offsets: np.ndarray, k: int

@@ -34,6 +34,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from ..core import summarization as S
+from ..obs import span as _span
 from .partition import Partition
 
 __all__ = ["ScanPlan", "ScanEntry", "build_plan", "leaf_envelopes",
@@ -152,29 +153,36 @@ def build_plan(partitions: Sequence[Partition], q_paas: np.ndarray, *,
     """
     q_paas = np.atleast_2d(np.asarray(q_paas, np.float32))
     nq = q_paas.shape[0]
-    buffers: List[ScanEntry] = []
-    sorted_entries: List[ScanEntry] = []
-    for part in partitions:
-        if part.n == 0:
-            continue
-        eff_ts = ts_min
-        if ts_min is not None and part.ts_range is not None:
-            t_lo, t_hi = part.ts_range
-            if temporal_prune and t_hi < ts_min:
-                continue               # wholly outside the window
-            if t_lo >= ts_min:
-                eff_ts = None          # wholly inside: no row filter
-        if not part.is_sorted:
-            buffers.append(ScanEntry(part, eff_ts,
-                                     np.zeros(nq, np.float32), None))
-            continue
-        env_lo, env_hi, part_env = _partition_envelopes(part, io=io)
-        leaf_bounds = envelope_mindist_sq(q_paas, env_lo, env_hi, part.cfg)
-        # the partition-level bound is the envelope of (first, last) key
-        part_bound = envelope_mindist_sq(q_paas, *part_env, part.cfg)[:, 0]
-        sorted_entries.append(ScanEntry(part, eff_ts, part_bound,
-                                        leaf_bounds))
-    order = np.argsort([e.part_bound.mean() for e in sorted_entries],
-                       kind="stable")
-    entries = buffers + [sorted_entries[i] for i in order]
+    with _span("plan", queries=nq) as sp:
+        buffers: List[ScanEntry] = []
+        sorted_entries: List[ScanEntry] = []
+        dropped = 0
+        for part in partitions:
+            if part.n == 0:
+                continue
+            eff_ts = ts_min
+            if ts_min is not None and part.ts_range is not None:
+                t_lo, t_hi = part.ts_range
+                if temporal_prune and t_hi < ts_min:
+                    dropped += 1
+                    continue           # wholly outside the window
+                if t_lo >= ts_min:
+                    eff_ts = None      # wholly inside: no row filter
+            if not part.is_sorted:
+                buffers.append(ScanEntry(part, eff_ts,
+                                         np.zeros(nq, np.float32), None))
+                continue
+            env_lo, env_hi, part_env = _partition_envelopes(part, io=io)
+            leaf_bounds = envelope_mindist_sq(q_paas, env_lo, env_hi,
+                                              part.cfg)
+            # the partition-level bound is the envelope of (first, last) key
+            part_bound = envelope_mindist_sq(q_paas, *part_env,
+                                             part.cfg)[:, 0]
+            sorted_entries.append(ScanEntry(part, eff_ts, part_bound,
+                                            leaf_bounds))
+        order = np.argsort([e.part_bound.mean() for e in sorted_entries],
+                           kind="stable")
+        entries = buffers + [sorted_entries[i] for i in order]
+        sp.set(partitions=len(entries), buffers=len(buffers),
+               window_dropped=dropped)
     return ScanPlan(entries=entries, q_paas=q_paas, nq=nq)

@@ -1,0 +1,382 @@
+"""Observability tests: registry exactness under concurrency, the
+per-query trace-span tree, the structured query log, and the trace
+validator.
+
+The two acceptance-critical cases:
+
+* ``test_registry_exact_totals_under_ingest_and_query`` hammers the
+  global registry from the compactor thread, the insert path, and two
+  query threads at once and asserts the ``query.*`` counter totals are
+  EXACT (lock-protected increments lose nothing).
+* ``test_trace_span_tree_budgeted_sharded`` runs a budgeted query on a
+  sharded engine with tracing on and asserts the span tree nests
+  plan/scan/verify under each shard's fan-out span, that per-span
+  ``leaves_scanned`` attributes sum bit-for-bit to the ``SearchStats``
+  totals, and that the answer bits match an untraced run.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import summarization as S
+from repro.core.lsm import CoconutLSM
+from repro.obs import (QueryLog, disable_tracing, enable_tracing,
+                       get_registry, get_tracer, install_query_log, span)
+from repro.obs.registry import Histogram, MetricsRegistry
+from repro.obs.validate import validate
+
+CFG = S.SummaryConfig(series_len=64, segments=8, bits=4)
+
+
+@pytest.fixture
+def obs():
+    """Clean observability state around each test (the registry and
+    tracer are process-global)."""
+    get_registry().reset()
+    disable_tracing()
+    get_tracer().clear()
+    prev = install_query_log(None)
+    yield get_registry()
+    get_registry().reset()
+    disable_tracing()
+    get_tracer().clear()
+    install_query_log(prev)
+
+
+def _data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, CFG.series_len)).astype(np.float32)
+
+
+# ------------------------------------------------------------- registry unit
+
+def test_counter_gauge_histogram_basics(obs):
+    reg = MetricsRegistry()
+    c = reg.counter("t.count_total")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    assert reg.counter("t.count_total") is c      # create-once semantics
+    g = reg.gauge("t.lag_rows")
+    g.set(7)
+    g.set(3)
+    assert g.value == 3.0
+    h = reg.histogram("t.latency_ms")
+    for v in (1.0, 2.0, 4.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 3 and s["sum"] == pytest.approx(7.0)
+    snap = reg.snapshot()
+    assert snap["t.count_total"] == 5
+    assert snap["t.lag_rows"] == 3.0
+    assert snap["t.latency_ms.count"] == 3
+
+
+def test_histogram_percentiles_within_bucket_resolution(obs):
+    h = Histogram("t.ms")
+    vals = [0.5, 1.0, 3.0, 10.0, 100.0, 1000.0]
+    for v in vals:
+        h.observe(v)
+    # log2 buckets: the percentile is exact to within 2x and clamped to
+    # the observed range
+    p50 = h.percentile(50)
+    assert vals[0] <= p50 <= vals[-1]
+    assert h.percentile(0) >= 0.5 - 1e-9
+    assert h.percentile(100) <= 1000.0 + 1e-9
+    # the bucketed p50 is within 2x of the rank-ceil(0.5*n) observation
+    # (log histograms don't interpolate between ranks like numpy does)
+    rank50 = sorted(vals)[int(np.ceil(0.5 * len(vals))) - 1]
+    assert p50 / rank50 < 2.0 and rank50 / p50 < 2.0
+    assert np.isnan(Histogram("t.empty").percentile(50))
+
+
+def test_io_ingest_views_mirror_into_registry(obs):
+    """The legacy telemetry objects are views: every update lands in
+    the global registry under the subsystem prefix."""
+    from repro.core.metrics import IngestMetrics, IOStats
+    io = IOStats(block_series=1)      # 1 entry/block: blocks == entries
+    io.seq_read(3)
+    io.rand_write(2)
+    snap = obs.snapshot()
+    assert snap["io.seq_read_blocks"] == 3
+    assert snap["io.rand_write_blocks"] == 2
+    assert io.counters["seq_read_blocks"] == 3    # local view still works
+    ing = IngestMetrics()
+    ing.add("wal_records", 5)
+    ing.set_gauge("ingest_lag_rows", 17)
+    snap = obs.snapshot()
+    assert snap["ingest.wal_records"] == 5
+    assert snap["ingest.ingest_lag_rows"] == 17.0
+
+
+def test_iostats_properties_locked_and_merge_documented(obs):
+    """Satellite: the byte properties read under the lock and
+    ``merged`` keeps self's block_series (documented winner) without
+    re-mirroring the sums into the registry."""
+    from repro.core.metrics import IOStats
+    a = IOStats(block_series=128)
+    b = IOStats(block_series=64)
+    a.rand_read(2)
+    b.seq_read(3 * 64)                # 3 blocks at b's size
+    a.read_bytes(100)
+    b.read_bytes(28)
+    m = a.merged(b)
+    assert m.block_series == 128                   # self wins
+    assert m.counters["rand_read_blocks"] == 2
+    assert m.counters["seq_read_blocks"] == 3
+    assert m.bytes_read == 128
+    assert m.random_blocks == 2 and m.sequential_blocks == 3
+    # merged writes counters directly: the registry saw only the inputs
+    assert obs.snapshot()["io.bytes_read"] == 128
+
+
+# ----------------------------------------------------- concurrency hammering
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(60)
+def test_registry_hammer_exact_counts(obs):
+    """Raw registry exactness: N threads x M increments lose nothing."""
+    c = obs.counter("hammer.incs_total")
+    h = obs.histogram("hammer.obs_ms")
+    threads, per = 8, 5000
+
+    def work():
+        for i in range(per):
+            c.inc()
+            h.observe(float(i % 7) + 0.5)
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == threads * per
+    assert h.count == threads * per
+
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(180)
+def test_registry_exact_totals_under_ingest_and_query(obs):
+    """The satellite's acceptance case: compactor thread + insert path
+    + two query threads all mirror into the registry simultaneously;
+    the query.* counter totals must equal the per-call SearchStats sums
+    exactly."""
+    raw = _data(4096)
+    per_thread, nq = 12, 4
+    queries = raw[:nq] + np.float32(0.01)
+    totals_lock = threading.Lock()
+    totals = {"calls": 0, "leaves_scanned": 0, "candidates": 0,
+              "scan_bytes": 0, "buffer_rows": 0}
+    stop = threading.Event()
+    errs = []
+
+    with CoconutLSM(CFG, buffer_capacity=256, leaf_size=64,
+                    concurrent=True, max_debt=2) as eng:
+        def writer():
+            try:
+                for s in range(0, len(raw), 128):
+                    eng.insert(raw[s: s + 128])
+            except Exception as e:             # pragma: no cover
+                errs.append(e)
+            finally:
+                stop.set()
+
+        def querier():
+            try:
+                while True:
+                    done = stop.is_set()
+                    for _ in range(per_thread if done else 1):
+                        _, _, info = eng.search_exact_batch(queries, k=2)
+                        st = info["stats"]
+                        with totals_lock:
+                            totals["calls"] += 1
+                            totals["leaves_scanned"] += st.leaves_scanned
+                            totals["candidates"] += st.candidates
+                            totals["scan_bytes"] += st.scan_bytes
+                            totals["buffer_rows"] += st.buffer_rows
+                    if done:
+                        return
+            except Exception as e:             # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=writer)] + \
+             [threading.Thread(target=querier) for _ in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    assert not errs, errs
+    snap = obs.snapshot()
+    # exact totals: every query-thread call folded in exactly once
+    assert snap["query.probes_total"] == totals["calls"]
+    assert snap["query.queries_total"] == totals["calls"] * nq
+    assert snap["query.pipeline_runs_total"] == totals["calls"]
+    assert snap["query.leaves_scanned_total"] == totals["leaves_scanned"]
+    assert snap["query.candidates_total"] == totals["candidates"]
+    assert snap["query.scan_bytes_total"] == totals["scan_bytes"]
+    assert snap["query.buffer_rows_total"] == totals["buffer_rows"]
+    # the compactor thread mirrored its ingest counters too
+    assert snap["ingest.rows_ingested"] == len(raw)
+    assert snap.get("compact.flush_ms.count", 0) >= 1
+
+
+# ------------------------------------------------------------ trace span tree
+
+def _spans_by_name(spans):
+    out = {}
+    for s in spans:
+        out.setdefault(s["name"], []).append(s)
+    return out
+
+
+@pytest.mark.timeout(300)
+def test_trace_span_tree_budgeted_sharded(obs):
+    """Acceptance criterion: a budgeted query against the sharded
+    engine with tracing enabled produces a span tree covering
+    plan/prune/scan/verify per shard, whose per-span ``leaves_scanned``
+    / ``scan_bytes`` attributes sum bit-for-bit to the SearchStats
+    totals — and the answers match the untraced run exactly."""
+    from repro.distributed.sharded_lsm import ShardedCoconutLSM
+    from repro.query import Budget
+    raw = _data(2048)
+    queries = raw[:3] + np.float32(0.01)
+    budget = Budget(max_leaves=10 ** 6)           # unlimited: exact bits
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=256,
+                            leaf_size=64, mode="btp")
+    try:
+        eng.insert(raw)
+        eng.flush()
+        # untraced reference
+        d_ref, off_ref, info_ref = eng.search_exact_batch(
+            queries, k=3, budget=budget, mode="approx")
+        enable_tracing()
+        d, off, info = eng.search_exact_batch(
+            queries, k=3, budget=budget, mode="approx")
+    finally:
+        eng.close()
+    np.testing.assert_array_equal(d, d_ref)
+    np.testing.assert_array_equal(off, off_ref)
+    st, st_ref = info["stats"], info_ref["stats"]
+    assert st.leaves_scanned == st_ref.leaves_scanned
+    assert st.scan_bytes == st_ref.scan_bytes
+    assert st.candidates == st_ref.candidates
+
+    spans = get_tracer().spans()
+    by_name = _spans_by_name(spans)
+    by_id = {s["id"]: s for s in spans}
+    # root: exactly one top-level probe (the sharded entry point);
+    # parent == 0 marks a root span
+    roots = [s for s in by_name["probe"] if s["parent"] == 0]
+    assert len(roots) == 1
+    root = roots[0]
+    assert root["args"]["kind"].startswith("sharded.")
+    # per-shard fan-out spans, children of the root probe
+    shard_spans = by_name["shard"]
+    assert {s["args"]["shard"] for s in shard_spans} == {0, 1}
+    for ss in shard_spans:
+        assert ss["parent"] == root["id"]
+
+    def ancestors(s):
+        while s["parent"]:
+            s = by_id[s["parent"]]
+            yield s
+
+    def under_shard(s):
+        return any(a["name"] == "shard" for a in ancestors(s))
+
+    # plan / prune-or-scan / verify all nest under shard fan-out spans
+    assert any(under_shard(s) for s in by_name["plan"])
+    assert any(under_shard(s) for s in by_name["scan"])
+    assert any(under_shard(s) for s in by_name["verify"])
+    # every span nests inside its parent's time range
+    for s in spans:
+        if s["parent"]:
+            p = by_id[s["parent"]]
+            assert s["ts"] >= p["ts"] - 2
+            assert s["ts"] + s["dur"] <= p["ts"] + p["dur"] + 2
+    # sibling durations are disjoint slices of the parent: per shard,
+    # the nested probe's children sum to no more than the probe itself
+    for ss in shard_spans:
+        kids = [s for s in spans if s["parent"] == ss["id"]]
+        assert sum(k["dur"] for k in kids) <= ss["dur"] + 2 * len(kids)
+
+    # bit-for-bit: scan-span deltas sum to the SearchStats totals
+    scan_leaves = sum(s["args"].get("leaves_scanned", 0)
+                      for s in by_name["scan"])
+    scan_bytes = sum(s["args"].get("scan_bytes", 0)
+                     for s in by_name["scan"])
+    assert scan_leaves == st.leaves_scanned
+    assert scan_bytes == st.scan_bytes
+    # ...and the per-shard fan-out attrs re-sum to the same totals
+    shard_leaves = sum(s["args"]["leaves_scanned"] for s in shard_spans)
+    assert shard_leaves == st.leaves_scanned
+
+    # the exported Chrome trace passes the CI validator
+    assert validate(get_tracer().export_chrome()) == []
+
+
+def test_tracing_disabled_is_noop(obs):
+    with span("anything", x=1) as sp:
+        sp.set(y=2)
+    assert get_tracer().spans() == []
+
+
+# -------------------------------------------------------------- query logging
+
+def test_probe_writes_query_log(tmp_path, obs):
+    log = QueryLog(str(tmp_path))
+    install_query_log(log)
+    raw = _data(512)
+    eng = CoconutLSM(CFG, buffer_capacity=256, leaf_size=64)
+    eng.insert(raw)
+    eng.flush()
+    eng.search_exact_batch(raw[:2], k=2, window=400)
+    log.close()
+    lines = [json.loads(l) for l in
+             open(log.path).read().splitlines()]
+    assert log.records_written == len(lines) >= 1
+    rec = lines[-1]
+    assert rec["kind"] == "snapshot.exact"
+    assert rec["queries"] == 2 and rec["k"] == 2 and rec["window"] == 400
+    assert "latency_ms" in rec and "leaves_scanned" in rec
+    assert "plan" in rec["timings_ms"]
+
+
+def test_query_log_rotation(tmp_path, obs):
+    log = QueryLog(str(tmp_path), max_bytes=512, max_files=2)
+    for i in range(64):
+        log.record({"kind": "t", "i": i, "pad": "x" * 64})
+    log.close()
+    assert log.rotations >= 1
+    assert (tmp_path / "query_log.1.jsonl").exists()
+    assert not (tmp_path / "query_log.3.jsonl").exists()  # bounded
+    for line in open(log.path).read().splitlines():
+        json.loads(line)
+
+
+# ---------------------------------------------------------------- validator
+
+def test_validator_flags_broken_traces(obs):
+    assert validate({}) == ["traceEvents missing or not a list"]
+    good = {"traceEvents": [
+        {"name": "probe", "ph": "X", "pid": 1, "tid": 1, "ts": 0,
+         "dur": 100, "args": {"span_id": 1}},
+        {"name": "plan", "ph": "X", "pid": 1, "tid": 1, "ts": 10,
+         "dur": 20, "args": {"span_id": 2, "parent_id": 1}},
+    ]}
+    assert validate(good) == []
+    bad_nest = json.loads(json.dumps(good))
+    bad_nest["traceEvents"][1]["ts"] = 95      # child spills past parent
+    assert any("not nested" in e for e in validate(bad_nest))
+    bad_dur = json.loads(json.dumps(good))
+    del bad_dur["traceEvents"][0]["dur"]
+    assert any("dur" in e for e in validate(bad_dur))
+    orphan = json.loads(json.dumps(good))
+    orphan["traceEvents"][1]["args"]["parent_id"] = 99
+    assert any("not in trace" in e for e in validate(orphan))
+    # scanning probes must come with scan spans
+    scanned = json.loads(json.dumps(good))
+    scanned["traceEvents"][0]["args"]["leaves_scanned"] = 5
+    assert any("scan" in e for e in validate(scanned))

@@ -17,6 +17,28 @@ ROWS = []
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 WRITTEN = {}        # bench name -> BENCH_<name>.json path
 
+_CALIB_US = None
+
+
+def machine_calibration_us() -> float:
+    """Wall time of one fixed numpy workload on this machine, cached
+    per process.  Every ``BENCH_*.json`` carries it as ``calib_us`` so
+    the regression gate (``benchmarks/regress.py``) can cancel
+    machine-speed differences between the committed baseline host and
+    the CI runner: a genuine 2x regression moves the bench rows but not
+    the calibration, a 2x-slower runner moves both."""
+    global _CALIB_US
+    if _CALIB_US is None:
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((512, 512)).astype(np.float32)
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            float((a @ a).sum())
+            best = min(best, time.perf_counter() - t0)
+        _CALIB_US = best * 1e6
+    return _CALIB_US
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """One CSV row: name,us_per_call,derived."""
@@ -28,11 +50,13 @@ def write_bench(name: str, payload: Optional[dict] = None,
                 rows: Optional[list] = None) -> pathlib.Path:
     """Write ``BENCH_<name>.json`` at the repo root — the one artifact
     contract every registered benchmark meets (CI uploads them).  The
-    doc always carries the emitted CSV rows; modules with richer
-    results (approx curves, scaling tables) add them via ``payload``.
-    Records the path in ``WRITTEN`` so the driver can assert coverage.
+    doc always carries the emitted CSV rows plus the machine
+    calibration (see :func:`machine_calibration_us`); modules with
+    richer results (approx curves, scaling tables) add them via
+    ``payload``.  Records the path in ``WRITTEN`` so the driver can
+    assert coverage.
     """
-    doc = {"bench": name}
+    doc = {"bench": name, "calib_us": machine_calibration_us()}
     if payload:
         doc.update(payload)
     doc["rows"] = [{"name": n, "us_per_call": u, "derived": d}

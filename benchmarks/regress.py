@@ -1,0 +1,235 @@
+"""Bench-trajectory regression gate.
+
+Compares fresh ``BENCH_<name>.json`` artifacts (written by
+``benchmarks/run.py``) against the committed baselines in
+``benchmarks/baselines/`` and fails when timings drift past the
+tolerance bands.  Every check appends one line per bench to
+``BENCH_trajectory.jsonl`` so the performance history of the repo is a
+greppable time series, not a pile of unversioned artifacts.
+
+Cross-machine comparison: every artifact carries ``calib_us`` (see
+``benchmarks.common.machine_calibration_us``), the wall time of a fixed
+numpy workload on the machine that produced it.  The per-row ratio is
+divided by the (clamped) calibration ratio, so a CI runner that is 2x
+slower than the baseline host does not read as a 2x regression — but a
+genuine 2x slowdown in the benched code does, because it moves the
+bench rows without moving the calibration.
+
+Two bands, both must hold per bench:
+
+* per-row: calibration-adjusted ratio <= ``ROW_TOL`` (catches a single
+  pathological row hiding inside an otherwise healthy bench);
+* geomean over all matched rows <= ``GEO_TOL`` (catches a broad
+  slowdown too small to trip any single row).
+
+``GEO_TOL`` is deliberately below 2.0: an injected uniform 2x slowdown
+must fail the gate (tests/test_obs.py asserts exactly that).  Rows are
+matched by name; a baseline row missing from the fresh artifact is a
+coverage regression and fails too.  Approx artifacts additionally gate
+``recall_at_10`` per budget fraction with an absolute floor, so a
+"speedup" bought by returning worse answers is caught.
+
+Usage::
+
+    python -m benchmarks.regress --check            # CI gate
+    python -m benchmarks.regress --update           # bless fresh runs
+    python -m benchmarks.regress --check --dir DIR  # artifacts elsewhere
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import shutil
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINES = pathlib.Path(__file__).resolve().parent / "baselines"
+TRAJECTORY = ROOT / "BENCH_trajectory.jsonl"
+
+ROW_TOL = 3.0        # per-row adjusted-ratio ceiling (single-row noise)
+GEO_TOL = 1.8        # geomean ceiling — an injected 2x slowdown fails
+MIN_ROW_US = 10.0    # rows faster than this are pure timer jitter
+CALIB_CLAMP = 3.0    # distrust calibration ratios beyond this
+RECALL_SLACK = 0.2   # absolute recall_at_10 floor below baseline
+
+
+def _load(path: pathlib.Path):
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"regress: unreadable artifact {path}: {e}")
+
+
+def _rows_by_name(doc: dict) -> dict:
+    return {r["name"]: float(r["us_per_call"])
+            for r in doc.get("rows", [])
+            if isinstance(r.get("us_per_call"), (int, float))}
+
+
+def _speed_adj(fresh: dict, base: dict) -> float:
+    """Machine-speed ratio fresh/base from the calibration workload,
+    clamped so a bogus calibration cannot mask a real regression."""
+    fc, bc = fresh.get("calib_us"), base.get("calib_us")
+    if not fc or not bc:
+        return 1.0
+    return min(CALIB_CLAMP, max(1.0 / CALIB_CLAMP, float(fc) / float(bc)))
+
+
+def compare(fresh: dict, base: dict, name: str) -> dict:
+    """One bench vs its baseline -> report dict with ``violations``."""
+    adj = _speed_adj(fresh, base)
+    f_rows, b_rows = _rows_by_name(fresh), _rows_by_name(base)
+    violations, ratios, rows = [], [], {}
+    for rname, b_us in sorted(b_rows.items()):
+        if rname not in f_rows:
+            violations.append(f"row {rname!r} missing from fresh run "
+                              f"(coverage regression)")
+            continue
+        if b_us < MIN_ROW_US:
+            continue
+        ratio = (f_rows[rname] / b_us) / adj
+        ratios.append(ratio)
+        rows[rname] = round(ratio, 3)
+        if ratio > ROW_TOL:
+            violations.append(
+                f"row {rname!r}: {ratio:.2f}x baseline "
+                f"(adj, tol {ROW_TOL}x): "
+                f"{b_us:.0f}us -> {f_rows[rname]:.0f}us")
+    geomean = (math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+               if ratios else float("nan"))
+    if ratios and geomean > GEO_TOL:
+        violations.append(f"geomean {geomean:.2f}x baseline over "
+                          f"{len(ratios)} rows (tol {GEO_TOL}x)")
+    if not ratios and not violations:
+        violations.append("no comparable rows between fresh and baseline")
+    # quality gate: recall at matching budget fractions must not sink
+    b_curves = {c.get("frac"): c for c in base.get("curves", [])}
+    for c in fresh.get("curves", []):
+        bc = b_curves.get(c.get("frac"))
+        if bc is None or "recall_at_10" not in bc:
+            continue
+        floor = bc["recall_at_10"] - RECALL_SLACK
+        if c.get("recall_at_10", 0.0) < floor:
+            violations.append(
+                f"curve frac={c['frac']}: recall_at_10 "
+                f"{c.get('recall_at_10'):.3f} < floor {floor:.3f} "
+                f"(baseline {bc['recall_at_10']:.3f})")
+    return {"bench": name, "geomean": geomean, "speed_adj": round(adj, 3),
+            "rows_compared": len(ratios), "row_ratios": rows,
+            "violations": violations}
+
+
+def append_trajectory(report: dict, path: pathlib.Path) -> None:
+    line = {"t": time.time(),
+            "bench": report["bench"],
+            "status": "fail" if report["violations"] else "ok",
+            "geomean": (None if math.isnan(report["geomean"])
+                        else round(report["geomean"], 4)),
+            "speed_adj": report["speed_adj"],
+            "rows_compared": report["rows_compared"],
+            "violations": len(report["violations"])}
+    with open(path, "a") as f:
+        f.write(json.dumps(line) + "\n")
+
+
+def check(art_dir: pathlib.Path, base_dir: pathlib.Path,
+          trajectory: pathlib.Path | None = TRAJECTORY,
+          benches: list | None = None) -> list:
+    """Gate every baseline in ``base_dir`` against ``art_dir``; returns
+    the per-bench reports.  The set of committed baselines *is* the
+    gate — a bench with no baseline is not checked."""
+    baselines = sorted(base_dir.glob("BENCH_*.json"))
+    if benches:
+        keep = {f"BENCH_{b}.json" for b in benches}
+        baselines = [p for p in baselines if p.name in keep]
+    if not baselines:
+        raise SystemExit(f"regress: no baselines under {base_dir} "
+                         f"(run --update to bless the current artifacts)")
+    reports = []
+    for bpath in baselines:
+        name = bpath.stem[len("BENCH_"):]
+        fpath = art_dir / bpath.name
+        if not fpath.exists():
+            rep = {"bench": name, "geomean": float("nan"),
+                   "speed_adj": 1.0, "rows_compared": 0, "row_ratios": {},
+                   "violations": [f"fresh artifact {fpath} missing"]}
+        else:
+            rep = compare(_load(fpath), _load(bpath), name)
+        reports.append(rep)
+        if trajectory is not None:
+            append_trajectory(rep, trajectory)
+    return reports
+
+
+def update(art_dir: pathlib.Path, base_dir: pathlib.Path,
+           benches: list | None = None) -> list:
+    base_dir.mkdir(parents=True, exist_ok=True)
+    copied = []
+    for fpath in sorted(art_dir.glob("BENCH_*.json")):
+        name = fpath.stem[len("BENCH_"):]
+        if benches and name not in benches:
+            continue
+        shutil.copy(fpath, base_dir / fpath.name)
+        copied.append(name)
+    return copied
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regress",
+        description="bench-trajectory regression gate")
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh artifacts to baselines; exit 1 "
+                         "on any violation")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh artifacts into the baselines dir")
+    ap.add_argument("--dir", default=str(ROOT),
+                    help="directory holding fresh BENCH_*.json")
+    ap.add_argument("--baselines", default=str(BASELINES),
+                    help="committed baselines directory")
+    ap.add_argument("--trajectory", default=str(TRAJECTORY),
+                    help="history file to append to")
+    ap.add_argument("--no-append", action="store_true",
+                    help="do not append to the trajectory file")
+    ap.add_argument("--benches", default=None,
+                    help="comma-separated subset (default: every "
+                         "baseline)")
+    args = ap.parse_args(argv)
+    art_dir = pathlib.Path(args.dir)
+    base_dir = pathlib.Path(args.baselines)
+    benches = args.benches.split(",") if args.benches else None
+    if args.update:
+        copied = update(art_dir, base_dir, benches)
+        print(f"regress: blessed {len(copied)} baselines: "
+              f"{', '.join(copied)}")
+        if not args.check:
+            return 0
+    if not args.check and not args.update:
+        ap.print_help()
+        return 2
+    trajectory = None if args.no_append else pathlib.Path(args.trajectory)
+    reports = check(art_dir, base_dir, trajectory, benches)
+    failed = 0
+    for rep in reports:
+        gm = rep["geomean"]
+        gm_s = "n/a" if math.isnan(gm) else f"{gm:.2f}x"
+        status = "FAIL" if rep["violations"] else "ok"
+        print(f"regress: {rep['bench']}: {status} geomean={gm_s} "
+              f"rows={rep['rows_compared']} "
+              f"speed_adj={rep['speed_adj']}")
+        for v in rep["violations"]:
+            failed += 1
+            print(f"regress:   {rep['bench']}: {v}", file=sys.stderr)
+    if failed:
+        print(f"regress: GATE FAILED ({failed} violations)",
+              file=sys.stderr)
+        return 1
+    print(f"regress: gate passed ({len(reports)} benches)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,7 +56,7 @@ from ..core import summarization as S
 from ..core import tree as T
 from ..core.lsm import CoconutLSM
 from ..core.metrics import IngestMetrics, IOStats
-from ..obs import probe, span as _span
+from ..obs import get_registry, probe, span as _span
 from ..query.merger import merge_pools
 from .router import (KeyRangeRouter, batch_summaries, fence_mindist_sq,
                      key_fence_of, key_range_code_bounds)
@@ -316,10 +316,18 @@ class ShardedCoconutLSM:
             with self._state_lock:
                 self._epoch += 1      # odd: routed batch in flight
             try:
+                reg = get_registry()
+
                 def put(si: int, m: np.ndarray) -> None:
                     shards[si].insert(raw[m], timestamps[m], ids=ids[m],
                                       key_fence=key_fence_of(keys[m]),
                                       summaries=(paas[m], codes[m]))
+                    # per-shard load counters: the skew signal the
+                    # workload analyzer / rebalance trigger read
+                    reg.counter(f"shard.s{si}.rows_total").inc(
+                        int(m.sum()))
+                    reg.gauge(f"shard.s{si}.size_rows").set(
+                        shards[si].n)
 
                 masks = [(si, dest == si) for si in range(self.n_shards)]
                 masks = [(si, m) for si, m in masks if m.any()]
@@ -572,7 +580,9 @@ class ShardedCoconutLSM:
     # ---------------------------------------------------------------- search
     def _snapshots(self):
         """Atomic multi-shard snapshot set (plus the router that routed
-        it): no routed insert batch is ever half-visible across shards.
+        it, plus the even insert epoch the set was cut at — the
+        ``snapshot_epoch`` field of the probe's query-log record): no
+        routed insert batch is ever half-visible across shards.
 
         Fast path: capture shard snapshots between insert epochs (the
         epoch is odd while a batch is mid-flight and bumps when it
@@ -588,13 +598,14 @@ class ShardedCoconutLSM:
                 snaps = [s.snapshot() for s in shards]
                 with self._state_lock:
                     if self._epoch == e0 and shards == self._shards:
-                        return snaps, router
+                        return snaps, router, e0
             time.sleep(0.001)
         with self._mutex:                # excludes inserts + migrations
             with self._state_lock:
                 shards = list(self._shards)
                 router = self.router
-            return [s.snapshot() for s in shards], router
+                e0 = self._epoch         # even: no insert under _mutex
+            return [s.snapshot() for s in shards], router, e0
 
     def _fence_bounds(self, snaps, q_paas: np.ndarray) -> np.ndarray:
         """[n_snaps, Q] mindist lower bounds from each shard's key fence
@@ -665,7 +676,8 @@ class ShardedCoconutLSM:
         probe scope (``rec`` is the probe's query-log record)."""
         from ..query import Budget
         nq = queries.shape[0]
-        snaps, router = self._snapshots()
+        snaps, router, epoch = self._snapshots()
+        rec["snapshot_epoch"] = epoch
         q_paas = np.asarray(S.paa(jnp.asarray(queries), self.cfg.segments))
         bounds = self._fence_bounds(snaps, q_paas)      # [S, Q]
         # each query's HOME shard: where its z-order key routes — by the
@@ -730,6 +742,14 @@ class ShardedCoconutLSM:
                         scan_bytes=sst.scan_bytes,
                         candidates=sst.candidates,
                         buffer_rows=sst.buffer_rows)
+                # per-shard query-load counters: with the rows_total /
+                # size_rows write-side pair, the full skew picture
+                reg = get_registry()
+                reg.counter(f"shard.s{si}.queries_total").inc(len(idx))
+                reg.counter(f"shard.s{si}.leaves_scanned_total").inc(
+                    int(sst.leaves_scanned))
+                reg.counter(f"shard.s{si}.scan_bytes_total").inc(
+                    int(sst.scan_bytes))
                 if approx:
                     # carryover: return the unspent slice to the pool
                     if rem["leaves"] is not None:
@@ -835,8 +855,9 @@ class ShardedCoconutLSM:
         nq = queries.shape[0]
         with probe("sharded.probe", queries=nq, k=k, window=window,
                    budget=as_budget(budget),
-                   shards=self.n_shards):
-            snaps, _ = self._snapshots()
+                   shards=self.n_shards) as rec:
+            snaps, _, epoch = self._snapshots()
+            rec["snapshot_epoch"] = epoch
             best_d = np.full((nq, k), np.inf, np.float32)
             best_off = np.full((nq, k), -1, np.int64)
             cands_pq = np.zeros(nq, np.int64)

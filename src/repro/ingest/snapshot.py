@@ -207,7 +207,8 @@ class Snapshot:
         budgeted = budget is not None or mode == "approx"
         with probe("snapshot." + ("approx" if budgeted else "exact"),
                    queries=queries.shape[0], k=k, window=window,
-                   budget=as_budget(budget) if budgeted else None) as rec:
+                   budget=as_budget(budget) if budgeted else None,
+                   snapshot_epoch=int(self.clock)) as rec:
             if budgeted:
                 best_d, best_off, stats = approx_knn(
                     self._partitions(), queries, self._cfg(),

@@ -63,12 +63,9 @@ from ..core.summarization import znormalize
 from ..ingest.wal import FSYNC_POLICIES
 from ..models.steps import make_prefill_step, make_serve_step, pad_cache
 from ..models.transformer import make_model
-from ..obs import (QueryLog, describe_metrics, enable_tracing, get_tracer,
-                   install_query_log)
-
-
-def _pctl(xs, p):
-    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+from ..obs import (QueryLog, add_probe_observer, describe_metrics,
+                   enable_tracing, get_tracer, install_query_log,
+                   remove_probe_observer, sample_percentile as _pctl)
 
 
 def main(argv=None) -> None:
@@ -128,6 +125,18 @@ def main(argv=None) -> None:
                          "(describe_metrics) as one JSON line every N "
                          "seconds during the decode loop, and once at "
                          "exit (0 = off)")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve live observability over HTTP on this "
+                         "port (0 = ephemeral): /metrics (Prometheus "
+                         "text exposition of the unified registry), "
+                         "/health (rolling-window SLO evaluation), "
+                         "/workload (live workload-analytics profile)")
+    ap.add_argument("--slo-probe-p99-ms", type=float, default=500.0,
+                    help="health: probe p99 over the rolling window "
+                         "above this is degraded (10x it: critical)")
+    ap.add_argument("--slo-max-debt", type=float, default=None,
+                    help="health: compaction debt above this is "
+                         "degraded (default: 2x --max-debt)")
     args = ap.parse_args(argv)
 
     qlog = None
@@ -223,6 +232,34 @@ def main(argv=None) -> None:
         budget = Budget(max_leaves=args.budget_leaves,
                         deadline_ms=args.deadline_ms)
 
+    # live observability endpoint: a workload analyzer fed every probe
+    # record (same dict the query log persists), a rolling-window SLO
+    # monitor over the registry + engine gauges, and the HTTP scrape
+    # surface in front of both
+    httpd = monitor = analyzer = None
+    if args.http_port is not None:
+        from ..obs.analytics import WorkloadAnalyzer
+        from ..obs.health import HealthMonitor, Threshold
+        from ..obs.httpd import ObsHTTPServer
+        analyzer = WorkloadAnalyzer()
+        add_probe_observer(analyzer.feed)
+        debt_thresh = (args.slo_max_debt if args.slo_max_debt is not None
+                       else 2.0 * args.max_debt)
+        monitor = HealthMonitor(
+            thresholds={
+                "probe_p99_ms": Threshold(args.slo_probe_p99_ms,
+                                          10.0 * args.slo_probe_p99_ms),
+                "compaction_debt": Threshold(debt_thresh,
+                                             8.0 * debt_thresh),
+            },
+            sources={"ingest_lag_rows": index.ingest_lag,
+                     "compaction_debt": index.compaction_debt},
+            events_dir=args.trace_dir).start()
+        httpd = ObsHTTPServer(args.http_port, health=monitor,
+                              analyzer=analyzer).start()
+        print(f"observability: {httpd.url}/metrics "
+              f"{httpd.url}/health {httpd.url}/workload")
+
     def answer_probes(batch):
         """Answer one probe micro-batch.  Synchronous engines flush first
         (their searches only see runs); concurrent snapshots already cover
@@ -281,6 +318,23 @@ def main(argv=None) -> None:
         probes_answered += len(pending)
         last_d = float(d[-1, 0])
     lag_at_end = index.ingest_lag()
+    if monitor is not None:
+        # final evaluation first (flush a last health state + any
+        # pending transition event), then stop the samplers
+        health_doc = monitor.evaluate()
+        print(f"health[exit]: {json.dumps(health_doc['state'])} "
+              + " ".join(f"{n}={c['value']}"
+                         for n, c in health_doc["checks"].items()))
+        monitor.stop()
+    if httpd is not None:
+        httpd.stop()
+    if analyzer is not None:
+        remove_probe_observer(analyzer.feed)
+        if args.trace_dir:
+            with open(os.path.join(args.trace_dir,
+                                   "WORKLOAD.json"), "w") as f:
+                json.dump(analyzer.profile(), f, indent=2)
+                f.write("\n")
     if args.data_dir:
         index.flush()                 # final checkpoint: commit manifests
         print(f"checkpointed "
@@ -342,6 +396,12 @@ def main(argv=None) -> None:
         trace_path = os.path.join(args.trace_dir, "trace.json")
         get_tracer().save(trace_path)
         qlog.close()
+        # the registry snapshot beside the log: what the analytics CLI
+        # cross-checks its bit-exact totals against (--check-metrics)
+        with open(os.path.join(args.trace_dir, "metrics.json"),
+                  "w") as f:
+            json.dump(describe_metrics(buckets=True), f, indent=2)
+            f.write("\n")
         print(f"trace: {trace_path} ({len(get_tracer().spans())} spans); "
               f"query log: {qlog.records_written} records in "
               f"{args.trace_dir}")

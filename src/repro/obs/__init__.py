@@ -31,19 +31,42 @@ from typing import Optional
 
 from .querylog import QueryLog, get_query_log, install_query_log
 from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
-                       describe_metrics, get_registry)
+                       describe_metrics, get_registry, sample_percentile)
 from .trace import (Tracer, disable_tracing, enable_tracing, get_tracer,
                     span)
 
 __all__ = ["MetricsRegistry", "Counter", "Gauge", "Histogram",
-           "get_registry", "describe_metrics",
+           "get_registry", "describe_metrics", "sample_percentile",
            "Tracer", "get_tracer", "enable_tracing", "disable_tracing",
            "span",
            "QueryLog", "install_query_log", "get_query_log",
-           "probe", "record_search", "budget_dict"]
+           "probe", "record_search", "budget_dict",
+           "add_probe_observer", "remove_probe_observer"]
 
 _probe_depth: contextvars.ContextVar[int] = \
     contextvars.ContextVar("coconut_probe_depth", default=0)
+
+# Live subscribers to finished outermost-probe records (the same dict
+# the query log persists).  The workload analyzer attaches here when
+# serving /workload from a live process, so the HTTP endpoint never
+# re-reads the log files it is itself producing.
+_OBSERVERS: list = []
+
+
+def add_probe_observer(fn) -> None:
+    """Register ``fn(rec: dict)`` to be called with every finished
+    outermost probe record (after stats/latency are folded in).
+    Observers must be fast and never raise; they run on the probe's
+    thread."""
+    _OBSERVERS.append(fn)
+
+
+def remove_probe_observer(fn) -> None:
+    """Unregister a probe observer (no-op when absent)."""
+    try:
+        _OBSERVERS.remove(fn)
+    except ValueError:
+        pass
 
 
 def budget_dict(budget) -> Optional[dict]:
@@ -146,7 +169,17 @@ def probe(kind: str, *, queries: int = 1, k: int = 1,
             reg.counter("query.probes_total").inc()
             reg.counter("query.queries_total").inc(int(queries))
             reg.histogram("query.probe_latency_ms").observe(dt_ms)
+            if "gap_max" in rec:
+                # budgeted probes: the certified-gap distribution is an
+                # SLO input (health monitors gap p95 over its window)
+                reg.histogram("query.gap_max").observe(
+                    float(rec["gap_max"]))
+            rec["latency_ms"] = round(dt_ms, 4)
+            rec.setdefault("t", time.time())
             ql = get_query_log()
             if ql is not None:
-                rec["latency_ms"] = round(dt_ms, 4)
-                ql.record(rec)
+                # observers get the stamped copy the file holds, so a
+                # live analyzer's seq accounting matches the log's
+                rec = ql.record(rec) or rec
+            for fn in list(_OBSERVERS):
+                fn(rec)

@@ -12,6 +12,16 @@ rotates to ``query_log.1.jsonl`` … ``query_log.<max_files>.jsonl``
 (oldest dropped), the same bounded-disk discipline as the WAL it sits
 beside.  Appends are serialized by one lock and the file is line
 buffered — a crash loses at most the tail line.
+
+Every record carries a monotonic per-log sequence number ``seq``
+(assigned under the append lock, so file order == seq order), which is
+what lets the analytics aggregator and ``repro.obs.validate
+--query-log`` detect rotation losses (first surviving seq > 0, or a
+hole where a rotated file was dropped) and dedup replayed records — a
+re-read of overlapping rotated files must never double-count leaf
+heat.  The engines add a ``snapshot_epoch`` field at probe time (which
+engine snapshot answered), so replays of the same probe against the
+same epoch are recognizable offline.
 """
 from __future__ import annotations
 
@@ -40,6 +50,7 @@ class QueryLog:
         self._f = open(self.path, "a", buffering=1)
         self.records_written = 0
         self.rotations = 0
+        self._seq = 0
 
     @property
     def path(self) -> str:
@@ -60,19 +71,27 @@ class QueryLog:
         self._f = open(self.path, "a", buffering=1)
         self.rotations += 1
 
-    def record(self, rec: dict) -> None:
-        """Append one probe record (adds a wall-clock ``t`` stamp)."""
+    def record(self, rec: dict) -> Optional[dict]:
+        """Append one probe record (adds a wall-clock ``t`` stamp and
+        the monotonic ``seq`` — assigned under the lock, so seq order
+        is file order even under concurrent probe threads).  Returns
+        the stamped copy that was persisted (None when closed), so
+        live probe observers see the same ``seq``/``t`` the file
+        holds."""
         rec = dict(rec)
         rec.setdefault("t", time.time())
-        line = json.dumps(rec, separators=(",", ":"),
-                          default=_jsonable) + "\n"
         with self._lock:
             if self._f.closed:
-                return
+                return None
+            rec["seq"] = self._seq
+            self._seq += 1
+            line = json.dumps(rec, separators=(",", ":"),
+                              default=_jsonable) + "\n"
             self._f.write(line)
             self.records_written += 1
             if self._f.tell() >= self.max_bytes:
                 self._rotate_locked()
+        return rec
 
     def close(self) -> None:
         with self._lock:

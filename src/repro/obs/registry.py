@@ -27,10 +27,26 @@ from __future__ import annotations
 
 import math
 import threading
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "get_registry", "describe_metrics"]
+           "get_registry", "describe_metrics",
+           "sample_percentile", "percentile_from_buckets",
+           "bucket_upper_bounds"]
+
+
+def sample_percentile(values: Sequence[float], p: float) -> float:
+    """Exact percentile over raw samples (NaN when empty).
+
+    THE percentile implementation for raw-sample readouts — serve.py's
+    latency report and the benchmarks import this instead of keeping
+    private ``_pctl`` copies; the bucketed counterpart for registry
+    histograms is :func:`percentile_from_buckets` below.
+    """
+    import numpy as np
+    if not len(values):
+        return float("nan")
+    return float(np.percentile(np.asarray(values), p))
 
 
 class Counter:
@@ -82,6 +98,55 @@ class Gauge:
 _EXP_LO = -20
 _EXP_HI = 30
 _NBUCKETS = _EXP_HI - _EXP_LO + 2        # + underflow + overflow
+
+
+def bucket_upper_bounds() -> List[float]:
+    """Inclusive upper edge of every histogram bucket, in order.
+
+    Bucket 0 (underflow) is everything <= 2^(_EXP_LO-1) including
+    non-positive observations; bucket i > 0 covers
+    ``(2^(i+_EXP_LO-1), 2^(i+_EXP_LO)]`` in ``le`` terms (frexp puts an
+    exact power of two at the *bottom* of the next bucket, a half-open
+    detail well inside the honest 2x resolution); the last bucket is the
+    overflow, upper bound +inf.  This is the boundary list the
+    Prometheus renderer turns into cumulative ``_bucket`` lines.
+    """
+    bounds = [2.0 ** (i + _EXP_LO) for i in range(_NBUCKETS - 1)]
+    bounds.append(math.inf)
+    return bounds
+
+
+def percentile_from_buckets(counts: Sequence[int], p: float, *,
+                            lo: Optional[float] = None,
+                            hi: Optional[float] = None) -> float:
+    """p-th percentile of a bucketed distribution (NaN when empty).
+
+    ``counts`` is per-bucket (non-cumulative) in the registry's log2
+    layout.  Interpolates to the winning bucket's geometric midpoint,
+    clamped to ``[lo, hi]`` when the observed range is known — the same
+    2x-honest readout as :meth:`Histogram.percentile`, factored out so
+    the health monitor can compute *windowed* percentiles from bucket
+    deltas between two scrapes.
+    """
+    total = sum(counts)
+    if total == 0:
+        return math.nan
+    target = p / 100.0 * total
+    seen = 0
+    for i, c in enumerate(counts):
+        seen += c
+        if seen >= target and c:
+            if i == 0:
+                return max(0.0, lo if lo is not None else 0.0)
+            blo = 2.0 ** (i + _EXP_LO - 1)
+            bhi = 2.0 ** (i + _EXP_LO)
+            mid = math.sqrt(blo * bhi)
+            if lo is not None:
+                mid = max(mid, lo)
+            if hi is not None:
+                mid = min(mid, hi)
+            return mid
+    return hi if hi is not None else math.nan
 
 
 class Histogram:
@@ -140,28 +205,25 @@ class Histogram:
     def percentile(self, p: float) -> float:
         """p in [0, 100].  NaN when empty."""
         with self._lock:
-            if self._count == 0:
-                return math.nan
-            target = p / 100.0 * self._count
-            seen = 0
-            for i, c in enumerate(self._counts):
-                seen += c
-                if seen >= target and c:
-                    if i == 0:
-                        return max(0.0, self._min)
-                    lo = 2.0 ** (i + _EXP_LO - 1)
-                    hi = 2.0 ** (i + _EXP_LO)
-                    # geometric midpoint, clamped to the observed range
-                    mid = math.sqrt(lo * hi)
-                    return min(max(mid, self._min), self._max)
-            return self._max
+            return percentile_from_buckets(self._counts, p,
+                                           lo=self._min, hi=self._max)
 
-    def summary(self) -> Dict[str, float]:
+    def buckets(self) -> Tuple[List[float], List[int]]:
+        """(upper_bounds, per-bucket counts) — the full bucket layout,
+        non-cumulative, aligned with :func:`bucket_upper_bounds`."""
+        with self._lock:
+            return bucket_upper_bounds(), list(self._counts)
+
+    def summary(self, *, buckets: bool = False) -> Dict[str, float]:
         with self._lock:
             count, total = self._count, self._sum
-        return {"count": count, "sum": total,
-                "p50": self.percentile(50), "p95": self.percentile(95),
-                "p99": self.percentile(99)}
+        out = {"count": count, "sum": total,
+               "p50": self.percentile(50), "p95": self.percentile(95),
+               "p99": self.percentile(99)}
+        if buckets:
+            bounds, counts = self.buckets()
+            out["buckets"] = [[b, c] for b, c in zip(bounds, counts)]
+        return out
 
 
 class MetricsRegistry:
@@ -221,6 +283,23 @@ class MetricsRegistry:
                 out[f"{h.name}.{k}"] = v
         return out
 
+    def describe(self, *, buckets: bool = True) -> Dict[str, dict]:
+        """Structured view: metrics grouped by type, histogram entries
+        carrying their full bucket layout (``buckets=[[le, count],
+        ...]``, non-cumulative) — what the Prometheus renderer needs to
+        emit proper cumulative ``_bucket`` lines, where the flat
+        :meth:`snapshot` only carries p50/p95/p99."""
+        with self._lock:
+            counters = list(self._counters.values())
+            gauges = list(self._gauges.values())
+            hists = list(self._histograms.values())
+        return {
+            "counters": {c.name: c.value for c in counters},
+            "gauges": {g.name: g.value for g in gauges},
+            "histograms": {h.name: h.summary(buckets=buckets)
+                           for h in hists},
+        }
+
 
 _REGISTRY = MetricsRegistry()
 
@@ -230,9 +309,16 @@ def get_registry() -> MetricsRegistry:
     return _REGISTRY
 
 
-def describe_metrics(registry: Optional[MetricsRegistry] = None
-                     ) -> Dict[str, float]:
+def describe_metrics(registry: Optional[MetricsRegistry] = None, *,
+                     buckets: bool = False):
     """Scrape-ready snapshot of the (global) registry — the dict the
     serving loop dumps on ``--metrics-interval`` ticks and prints at
-    exit, keyed by the ``subsystem.metric_unit`` convention."""
-    return (registry if registry is not None else _REGISTRY).snapshot()
+    exit, keyed by the ``subsystem.metric_unit`` convention.
+
+    ``buckets=True`` returns the structured form instead (counters /
+    gauges / histograms grouped, histogram entries carrying their full
+    ``[[le, count], ...]`` bucket layout) — the input of the Prometheus
+    text renderer in :mod:`repro.obs.httpd`.
+    """
+    reg = registry if registry is not None else _REGISTRY
+    return reg.describe(buckets=True) if buckets else reg.snapshot()

@@ -15,7 +15,12 @@ The two acceptance-critical cases:
   totals, and that the answer bits match an untraced run.
 """
 import json
+import math
+import sys
 import threading
+import time
+import urllib.request
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -380,3 +385,515 @@ def test_validator_flags_broken_traces(obs):
     scanned = json.loads(json.dumps(good))
     scanned["traceEvents"][0]["args"]["leaves_scanned"] = 5
     assert any("scan" in e for e in validate(scanned))
+
+
+# --------------------------------------------- histogram bucket export + prom
+
+def test_histogram_bucket_export_roundtrip(obs):
+    """Satellite acceptance: describe_metrics(buckets=True) carries the
+    full bucket layout, the Prometheus renderer emits proper cumulative
+    ``_bucket`` lines, and parsing those lines back recovers the exact
+    non-cumulative bucket counts."""
+    from repro.obs.httpd import prom_name, render_prometheus
+    from repro.obs.registry import bucket_upper_bounds
+    vals = [0.0007, 0.5, 1.0, 3.0, 3.1, 10.0, 100.0, 1e12]  # + overflow
+    h = obs.histogram("rt.latency_ms")
+    for v in vals:
+        h.observe(v)
+    obs.counter("rt.calls_total").inc(3)
+    obs.gauge("rt.lag_rows").set(11)
+
+    bounds, counts = h.buckets()
+    assert len(bounds) == len(counts)
+    assert bounds[-1] == math.inf and bounds == bucket_upper_bounds()
+    assert sum(counts) == len(vals)
+    # every value landed in the bucket its bounds say it should (the
+    # layout is half-open: an exact power of two sits at the BOTTOM of
+    # the next bucket — frexp semantics, documented in the registry)
+    manual = [0] * len(bounds)
+    for v in vals:
+        manual[next(i for i, b in enumerate(bounds) if v < b)] += 1
+    assert manual == counts
+
+    desc = obs.describe(buckets=True)
+    assert desc["histograms"]["rt.latency_ms"]["buckets"] == \
+        [[b, c] for b, c in zip(bounds, counts)]
+
+    text = render_prometheus(desc)
+    lines = text.splitlines()
+    assert f"# TYPE {prom_name('rt.calls_total')} counter" in lines
+    assert f"{prom_name('rt.calls_total')} 3" in lines
+    assert f"{prom_name('rt.lag_rows')} 11.0" in lines
+    p = prom_name("rt.latency_ms")
+    assert f"# TYPE {p} histogram" in lines
+    # parse the cumulative _bucket lines back
+    cum = []
+    for ln in lines:
+        if ln.startswith(f'{p}_bucket{{le="'):
+            le = ln.split('le="', 1)[1].split('"', 1)[0]
+            cum.append((float("inf") if le == "+Inf" else float(le),
+                        int(ln.rsplit(" ", 1)[1])))
+    assert cum[-1][0] == math.inf and cum[-1][1] == len(vals)
+    assert all(a[1] <= b[1] for a, b in zip(cum, cum[1:]))  # cumulative
+    # invert cumsum -> non-cumulative counts, compare to the registry's
+    got = {le: c - prev for (le, c), prev in
+           zip(cum, [0] + [c for _, c in cum[:-1]])}
+    want = {b: c for b, c in zip(bounds, counts) if c and math.isfinite(b)}
+    want[math.inf] = counts[-1]  # overflow folds into the +Inf terminal
+    assert {le: c for le, c in got.items() if c} == \
+        {le: c for le, c in want.items() if c}
+    assert f"{p}_count {len(vals)}" in lines
+    [sline] = [ln for ln in lines if ln.startswith(f"{p}_sum ")]
+    assert float(sline.split()[1]) == pytest.approx(sum(vals))
+
+
+def test_percentile_one_implementation(obs):
+    """The dedupe satellite: serve.py's report percentile IS the obs
+    one, and Histogram.percentile delegates to the shared bucketed
+    implementation."""
+    from repro.launch import serve
+    from repro.obs import sample_percentile
+    from repro.obs.registry import percentile_from_buckets
+    assert serve._pctl is sample_percentile
+    assert sample_percentile([1.0, 2.0, 3.0, 4.0], 50) == \
+        pytest.approx(2.5)
+    assert math.isnan(sample_percentile([], 99))
+    h = Histogram("t.ms")
+    for v in (1.0, 2.0, 4.0, 8.0):
+        h.observe(v)
+    _, counts = h.buckets()
+    assert h.percentile(99) == percentile_from_buckets(
+        counts, 99, lo=1.0, hi=8.0)
+
+
+# ------------------------------------------------------ query-log seq + epoch
+
+def test_query_log_seq_continuity_and_validator(tmp_path, obs):
+    from repro.obs.validate import validate_query_log
+    log = QueryLog(str(tmp_path), max_bytes=600, max_files=8)
+    for i in range(40):
+        log.record({"kind": "t", "i": i, "pad": "x" * 32})
+    log.close()
+    assert log.rotations >= 1
+    recs = [json.loads(l) for p in _log_files(tmp_path)
+            for l in open(p).read().splitlines()]
+    # chronological file order == seq order, nothing dropped
+    assert [r["seq"] for r in recs] == list(range(40))
+    assert all("t" in r for r in recs)
+    assert validate_query_log(str(tmp_path)) == []
+
+    # drop a middle record from an unrotated log -> hole detected
+    d2 = tmp_path / "lossy"
+    log2 = QueryLog(str(d2))
+    for i in range(6):
+        log2.record({"kind": "t", "i": i})
+    log2.close()
+    live = d2 / "query_log.jsonl"
+    lines = live.read_text().splitlines()
+    live.write_text("\n".join(lines[:2] + lines[3:]) + "\n")
+    assert any("hole" in e for e in validate_query_log(str(d2)))
+
+    # a record without seq is a violation
+    (tmp_path / "noseq.jsonl").write_text('{"kind": "t"}\n')
+    assert any("missing 'seq'" in e
+               for e in validate_query_log(str(tmp_path / "noseq.jsonl")))
+
+
+def _log_files(tmp_path):
+    from repro.obs.analytics import query_log_files
+    return query_log_files(str(tmp_path))
+
+
+def test_probe_records_carry_seq_and_epoch(tmp_path, obs):
+    """Engines stamp snapshot_epoch at probe time; the log stamps seq;
+    live observers see the same stamped record the file holds."""
+    from repro.obs import add_probe_observer, remove_probe_observer
+    log = QueryLog(str(tmp_path))
+    install_query_log(log)
+    seen = []
+    add_probe_observer(seen.append)
+    try:
+        raw = _data(512)
+        eng = CoconutLSM(CFG, buffer_capacity=256, leaf_size=64)
+        eng.insert(raw)
+        eng.flush()
+        eng.search_exact_batch(raw[:2] + np.float32(0.01), k=2)
+        eng.search_exact_batch(raw[2:4] + np.float32(0.01), k=2)
+    finally:
+        remove_probe_observer(seen.append)
+        log.close()
+    on_disk = [json.loads(l) for l in
+               open(log.path).read().splitlines()]
+    assert [r["seq"] for r in on_disk] == [0, 1]
+    assert [r["seq"] for r in seen] == [0, 1]
+    for r in on_disk:
+        assert "snapshot_epoch" in r and "t" in r
+    assert seen[0]["t"] == on_disk[0]["t"]
+
+
+# ------------------------------------------------------------------ analytics
+
+@pytest.mark.timeout(300)
+def test_analytics_bit_exact_totals_sharded(tmp_path, obs):
+    """Tentpole acceptance (golden): aggregate the query log of a real
+    2-shard session and the leaf-touch totals must sum bit-for-bit to
+    the logged SearchStats / registry counters."""
+    from repro.distributed.sharded_lsm import ShardedCoconutLSM
+    from repro.obs import describe_metrics
+    from repro.obs.analytics import WorkloadAnalyzer, iter_query_log
+    log = QueryLog(str(tmp_path))
+    install_query_log(log)
+    raw = _data(2048)
+    rng = np.random.default_rng(7)
+    stats_sum = {"leaves_scanned": 0, "scan_bytes": 0, "buffer_rows": 0}
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=256,
+                            leaf_size=64, mode="btp")
+    try:
+        eng.insert(raw)
+        eng.flush()
+        for i in range(5):
+            q = rng.standard_normal((2, CFG.series_len)).astype(np.float32)
+            _, _, info = eng.search_exact_batch(q, k=3)
+            for f in stats_sum:
+                stats_sum[f] += int(getattr(info["stats"], f))
+    finally:
+        eng.close()
+        log.close()
+    assert stats_sum["leaves_scanned"] > 0    # a real scan, not all-pruned
+
+    ana = WorkloadAnalyzer().feed_all(iter_query_log(str(tmp_path)))
+    prof = ana.profile()
+    assert prof["complete"] and prof["records"] == 5
+    assert prof["queries"] == 10
+    for f, total in stats_sum.items():
+        assert prof["totals"][f] == total      # bit-for-bit vs the log
+    assert ana.check_against(describe_metrics()) == []  # vs the registry
+    # leaf heat came from both shards with the s<i>/ re-keying
+    shards = {info["shard"] for info in prof["leaf_heat"].values()}
+    assert shards == {"s0", "s1"}
+    touches = prof["shard_load"]["touches"]
+    assert set(touches) == {"s0", "s1"}
+    assert sum(touches.values()) == \
+        sum(i["touches"] for i in prof["leaf_heat"].values())
+    assert 0.0 <= prof["shard_load"]["gini"] < 1.0
+    assert prof["shard_load"]["max_over_mean"] >= 1.0
+    assert prof["kinds"] == {"sharded.exact": 5}
+    assert prof["k_hist"] == {"3": 5}
+    assert len(prof["series"]) >= 1
+    assert sum(b["probes"] for b in prof["series"]) == 5
+
+    # feeding the same records again is a replay: seq dedup, same profile
+    ana.feed_all(iter_query_log(str(tmp_path)))
+    prof2 = ana.profile()
+    assert prof2["records"] == 5 and prof2["seq"]["duplicates"] == 5
+    assert prof2["totals"] == prof["totals"]
+
+    # an incomplete log refuses to certify
+    lossy = WorkloadAnalyzer()
+    lossy.feed_all(r for r in iter_query_log(str(tmp_path))
+                   if r["seq"] != 2)
+    assert not lossy.complete()
+    errs = lossy.check_against(describe_metrics())
+    assert errs and "incomplete" in errs[0]
+
+
+def test_analytics_cli(tmp_path, obs, capsys):
+    from repro.obs import describe_metrics
+    from repro.obs.analytics import main as ana_main
+    log = QueryLog(str(tmp_path))
+    install_query_log(log)
+    raw = _data(512)
+    eng = CoconutLSM(CFG, buffer_capacity=256, leaf_size=64)
+    eng.insert(raw)
+    eng.flush()
+    eng.search_exact_batch(raw[:2] + np.float32(0.5), k=2)
+    log.close()
+    mpath = tmp_path / "metrics.json"
+    mpath.write_text(json.dumps(describe_metrics()))
+    assert ana_main([str(tmp_path), "--check-metrics", str(mpath)]) == 0
+    out = json.loads((tmp_path / "WORKLOAD.json").read_text())
+    assert out["records"] == 1 and out["complete"]
+    assert "check-metrics: OK" in capsys.readouterr().out
+    # a tampered snapshot fails the gate
+    bad = json.loads(mpath.read_text())
+    bad["query.leaves_scanned_total"] += 1
+    mpath.write_text(json.dumps(bad))
+    assert ana_main([str(tmp_path), "--check-metrics", str(mpath)]) == 1
+    assert ana_main([str(tmp_path / "nope"), ]) == 2
+
+
+def test_gini():
+    from repro.obs.analytics import gini
+    assert gini([]) == 0.0
+    assert gini([5, 5, 5, 5]) == 0.0
+    assert gini([10, 0, 0, 0]) == pytest.approx(0.75)
+    assert 0.0 < gini([1, 2, 3, 4]) < 0.5
+
+
+# --------------------------------------------------------------------- health
+
+def test_health_monitor_transitions_and_events(tmp_path, obs):
+    """SLO acceptance: /health-style evaluation transitions
+    ok -> degraded -> critical as compaction debt is forced past the
+    thresholds, emitting one structured alert event per transition."""
+    from repro.obs.health import DEFAULT_THRESHOLDS, HealthMonitor, \
+        Threshold
+    debt = {"v": 0.0}
+    mon = HealthMonitor(sources={"compaction_debt": lambda: debt["v"]},
+                        events_dir=str(tmp_path), window_s=30.0)
+    assert mon.evaluate()["state"] == "ok"
+    debt["v"] = 20.0                      # > degraded 8, <= critical 64
+    doc = mon.evaluate()
+    assert doc["state"] == "degraded"
+    assert doc["checks"]["compaction_debt"]["state"] == "degraded"
+    debt["v"] = 100.0
+    assert mon.evaluate()["state"] == "critical"
+    debt["v"] = 0.0
+    assert mon.evaluate()["state"] == "ok"
+    events = [json.loads(l) for l in
+              (tmp_path / "health_events.jsonl").read_text().splitlines()]
+    assert [(e["from"], e["to"]) for e in events] == \
+        [("ok", "degraded"), ("degraded", "critical"), ("critical", "ok")]
+    assert "compaction_debt" in events[0]["failing"]
+    assert mon.transitions == 3
+    # threshold semantics: exceed to trip, None/NaN never alerts
+    th = Threshold(8.0, 64.0)
+    assert th.state(8.0) == "ok" and th.state(8.1) == "degraded"
+    assert th.state(64.1) == "critical"
+    assert th.state(None) == "ok" and th.state(math.nan) == "ok"
+    assert DEFAULT_THRESHOLDS["probe_p99_ms"].degraded == 500.0
+
+
+def test_health_windowed_p99_from_bucket_deltas(obs):
+    """The rolling window forgets: a latency spike present in the first
+    sample but outside the window must not keep p99 elevated."""
+    from repro.obs.health import HealthMonitor
+    h = obs.histogram("query.probe_latency_ms")
+    mon = HealthMonitor(window_s=3600.0)
+    for v in (10000.0,) * 5:              # old spike
+        h.observe(v)
+    mon.sample()
+    for v in (2.0,) * 200:                # recent healthy traffic
+        h.observe(v)
+    mon.sample()
+    v99 = mon.values()["probe_p99_ms"]
+    # the delta-window holds only the 200 fast probes
+    assert v99 < 10.0
+    # lifetime percentile would have been dominated by the spike
+    assert h.percentile(99) > 1000.0
+
+
+# ---------------------------------------------------------------- HTTP server
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read().decode(), dict(r.headers)
+
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(300)
+def test_http_endpoints_live_sharded_engine(tmp_path, obs):
+    """End-to-end acceptance: scrape /metrics, /health, and /workload
+    over HTTP while a 2-shard engine ingests and serves queries
+    concurrently; every registry metric must appear in the exposition
+    and /health must flip to 503 when a source goes critical."""
+    from repro.distributed.sharded_lsm import ShardedCoconutLSM
+    from repro.obs import add_probe_observer, remove_probe_observer
+    from repro.obs.analytics import WorkloadAnalyzer
+    from repro.obs.health import HealthMonitor
+    from repro.obs.httpd import ObsHTTPServer, prom_name
+    log = QueryLog(str(tmp_path))
+    install_query_log(log)
+    ana = WorkloadAnalyzer()
+    add_probe_observer(ana.feed)
+    debt = {"v": 0.0}
+    mon = HealthMonitor(sources={"compaction_debt": lambda: debt["v"]},
+                        events_dir=str(tmp_path))
+    raw = _data(2048)
+    rng = np.random.default_rng(3)
+    errs, scrapes = [], []
+    eng = ShardedCoconutLSM(CFG, shards=2, buffer_capacity=256,
+                            leaf_size=64, mode="btp")
+    try:
+        with ObsHTTPServer(0, health=mon, analyzer=ana) as srv:
+            stop = threading.Event()
+
+            def writer():
+                try:
+                    for s in range(0, len(raw), 256):
+                        eng.insert(raw[s: s + 256])
+                finally:
+                    stop.set()
+
+            def querier():
+                try:
+                    while not stop.is_set():
+                        q = rng.standard_normal(
+                            (2, CFG.series_len)).astype(np.float32)
+                        eng.search_exact_batch(q, k=2)
+                except Exception as e:     # pragma: no cover
+                    errs.append(e)
+
+            def scraper():
+                try:
+                    while not stop.is_set():
+                        scrapes.append(_get(srv.url + "/metrics")[0])
+                        scrapes.append(_get(srv.url + "/health")[0])
+                        time.sleep(0.05)
+                except Exception as e:     # pragma: no cover
+                    errs.append(e)
+
+            ts = [threading.Thread(target=writer),
+                  threading.Thread(target=querier),
+                  threading.Thread(target=scraper)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            assert not errs, errs
+            assert scrapes and all(s == 200 for s in scrapes)
+
+            # quiesced: the final scrape covers EVERY registry metric
+            status, text, headers = _get(srv.url + "/metrics")
+            assert status == 200
+            assert headers["Content-Type"].startswith("text/plain")
+            assert "version=0.0.4" in headers["Content-Type"]
+            desc = obs.describe(buckets=True)
+            names = set(desc["counters"]) | set(desc["gauges"]) | \
+                set(desc["histograms"])
+            assert names        # the run populated the registry
+            for n in names:
+                assert f"# TYPE {prom_name(n)} " in text, n
+            assert f'{prom_name("query.probe_latency_ms")}_bucket' in text
+            # exposition totals match the registry bit-for-bit
+            probes = desc["counters"]["query.probes_total"]
+            assert f"{prom_name('query.probes_total')} {probes}" in text
+
+            status, body, _ = _get(srv.url + "/health")
+            assert status == 200
+            doc = json.loads(body)
+            assert doc["state"] in ("ok", "degraded")
+            assert set(doc["checks"]) >= {"probe_p99_ms",
+                                          "compaction_debt"}
+
+            status, body, _ = _get(srv.url + "/workload")
+            prof = json.loads(body)
+            assert prof["records"] == probes
+            assert prof["complete"]
+
+            # force critical -> load balancers must see 503
+            debt["v"] = 1e9
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url + "/health")
+            assert ei.value.code == 503
+            assert json.loads(ei.value.read().decode())["state"] == \
+                "critical"
+
+            status, _, _ = _get(srv.url + "/")
+            assert status == 200
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url + "/nope")
+            assert ei.value.code == 404
+    finally:
+        remove_probe_observer(ana.feed)
+        eng.close()
+        log.close()
+    # the analyzer fed live and the log agree record-for-record
+    from repro.obs.analytics import WorkloadAnalyzer as WA
+    from repro.obs.analytics import iter_query_log
+    offline = WA().feed_all(iter_query_log(str(tmp_path)))
+    assert offline.profile()["totals"] == ana.profile()["totals"]
+
+
+# ------------------------------------------------------------ regression gate
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _regress():
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks import regress
+    finally:
+        sys.path.pop(0)
+    return regress
+
+
+def _bench_doc(name, us, calib=1000.0):
+    return {"bench": name, "calib_us": calib,
+            "rows": [{"name": f"{name}/{r}", "us_per_call": u,
+                      "derived": ""} for r, u in us.items()]}
+
+
+def test_regress_gate_negative_2x_slowdown(tmp_path):
+    """Tentpole acceptance: the gate passes on identical artifacts and
+    FAILS when a copied BENCH_query.json gets a 2x slowdown injected."""
+    regress = _regress()
+    base_dir = tmp_path / "baselines"
+    art_dir = tmp_path / "fresh"
+    traj = tmp_path / "BENCH_trajectory.jsonl"
+    base_dir.mkdir()
+    art_dir.mkdir()
+    doc = _bench_doc("query", {"exact": 5000.0, "approx": 600.0,
+                               "batched": 9000.0})
+    (base_dir / "BENCH_query.json").write_text(json.dumps(doc))
+    (art_dir / "BENCH_query.json").write_text(json.dumps(doc))
+    argv = ["--check", "--dir", str(art_dir),
+            "--baselines", str(base_dir), "--trajectory", str(traj)]
+    assert regress.main(argv) == 0
+
+    # inject the 2x slowdown
+    slow = json.loads(json.dumps(doc))
+    for r in slow["rows"]:
+        r["us_per_call"] *= 2.0
+    (art_dir / "BENCH_query.json").write_text(json.dumps(slow))
+    assert regress.main(argv) == 1
+    rep = regress.compare(slow, doc, "query")
+    assert rep["geomean"] == pytest.approx(2.0)
+    assert any("geomean" in v for v in rep["violations"])
+
+    # trajectory recorded both verdicts
+    hist = [json.loads(l) for l in traj.read_text().splitlines()]
+    assert [h["status"] for h in hist] == ["ok", "fail"]
+    assert hist[0]["geomean"] == pytest.approx(1.0)
+    assert hist[1]["bench"] == "query"
+
+
+def test_regress_calibration_and_row_checks(tmp_path):
+    regress = _regress()
+    base = _bench_doc("q", {"a": 5000.0, "b": 800.0})
+    # a uniformly 2x-slower MACHINE (calib moved too) is NOT a regression
+    slow_host = _bench_doc("q", {"a": 10000.0, "b": 1600.0}, calib=2000.0)
+    rep = regress.compare(slow_host, base, "q")
+    assert not rep["violations"]
+    assert rep["geomean"] == pytest.approx(1.0)
+    # one pathological row trips the per-row band even with geomean ok
+    spike = _bench_doc("q", {"a": 5000.0 * 4.0, "b": 800.0 / 4.0})
+    rep = regress.compare(spike, base, "q")
+    assert any(v.startswith("row ") for v in rep["violations"])
+    # a dropped row is a coverage regression
+    missing = _bench_doc("q", {"a": 5000.0})
+    rep = regress.compare(missing, base, "q")
+    assert any("missing" in v for v in rep["violations"])
+    # recall floor on approx curves
+    base["curves"] = [{"frac": 0.1, "recall_at_10": 0.9}]
+    bad = _bench_doc("q", {"a": 5000.0, "b": 800.0})
+    bad["curves"] = [{"frac": 0.1, "recall_at_10": 0.5}]
+    rep = regress.compare(bad, base, "q")
+    assert any("recall_at_10" in v for v in rep["violations"])
+
+
+def test_regress_committed_baselines_self_consistent():
+    """The committed baselines gate the committed artifacts: comparing a
+    baseline against itself must pass (ratio exactly 1), so CI only
+    fails on real drift."""
+    regress = _regress()
+    baselines = sorted((ROOT / "benchmarks" / "baselines")
+                       .glob("BENCH_*.json"))
+    assert baselines, "no committed baselines"
+    for p in baselines:
+        doc = json.loads(p.read_text())
+        assert "calib_us" in doc and doc["calib_us"] > 0
+        rep = regress.compare(doc, doc, p.stem)
+        assert rep["violations"] == []
+        assert rep["rows_compared"] > 0 or doc.get("curves")

@@ -105,6 +105,21 @@ def compare(fresh: dict, base: dict, name: str) -> dict:
                           f"{len(ratios)} rows (tol {GEO_TOL}x)")
     if not ratios and not violations:
         violations.append("no comparable rows between fresh and baseline")
+    # absolute gates the fresh artifact carries: self-certifying
+    # thresholds (warm/cold speedup, packed footprint ratio, ...) that
+    # hold on every machine, no baseline comparison involved
+    for g in fresh.get("gates", []):
+        gname, v = g.get("name", "?"), g.get("value")
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or math.isnan(v):
+            violations.append(f"gate {gname!r}: non-numeric value {v!r}")
+            continue
+        if "min" in g and v < g["min"]:
+            violations.append(
+                f"gate {gname!r}: {v:.3f} < min {g['min']}")
+        if "max" in g and v > g["max"]:
+            violations.append(
+                f"gate {gname!r}: {v:.3f} > max {g['max']}")
     # quality gate: recall at matching budget fractions must not sink
     b_curves = {c.get("frac"): c for c in base.get("curves", [])}
     for c in fresh.get("curves", []):

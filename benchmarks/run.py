@@ -18,6 +18,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                                   shard-prune rate, verified/query
   approx         Fig. 13c/d+      recall@10 vs latency across leaf-budget
                                   fractions (-> BENCH_approx.json)
+  tiered         (infra)          tiered leaf cache: cold/warm/hot probe
+                                  latency + packed-column footprint,
+                                  with hard gates (-> BENCH_tiered.json)
   roofline       (assignment)     arch x shape terms from the dry-run
 """
 import inspect
@@ -27,8 +30,8 @@ import sys
 def main() -> None:
     from . import (approx, construction, distributed_bench, insertions,
                    kernels_bench, query, roofline, segments,
-                   sharded_streaming, space, storage, streaming, windows,
-                   workload)
+                   sharded_streaming, space, storage, streaming, tiered,
+                   windows, workload)
     mods = {
         "construction": construction, "space": space,
         "segments": segments, "query": query, "insertions": insertions,
@@ -36,7 +39,7 @@ def main() -> None:
         "kernels": kernels_bench, "distributed": distributed_bench,
         "storage": storage, "streaming": streaming,
         "sharded_streaming": sharded_streaming, "approx": approx,
-        "roofline": roofline,
+        "tiered": tiered, "roofline": roofline,
     }
     from . import common
     args = sys.argv[1:]

@@ -1,0 +1,155 @@
+"""Tiered leaf cache: cold vs warm vs hot probes + packed footprint.
+
+The tentpole claim of the tiered store, measured end to end:
+
+* **cold** — fresh :class:`TieredLeafStore`, every leaf block read off
+  the mmap'd v3 segments (first touch of a skewed Zipf probe workload);
+* **warm** — the SAME probe batches replayed: leaf blocks served from
+  the host clock cache and whole answers from the query-result cache
+  (the snapshot epoch is unchanged, so replays are cache-exact);
+* **hot** — *perturbed* queries (result cache deliberately missed)
+  after enough Zipf passes that the hottest code blocks crossed the
+  promotion threshold and live on device for the fused unpack+mindist
+  kernel.
+
+Plus the storage half of the claim: the same sorted tree written as a
+v2 (full-byte codes, raw keys) and a v3 (bit-packed codes, delta+varint
+keys) segment, comparing the *summarization* footprint — keys + codes
+bytes, the columns every SIMS scan touches (the raw column is identical
+in both formats and priced separately by ``benchmarks/storage.py``).
+
+Both claims are hard gates in ``BENCH_tiered.json`` (see
+``benchmarks/regress.py``): warm p50 must be >= 2x faster than cold,
+and v3 keys+codes must be <= 0.7x of v2.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import summarization as S
+from repro.core import tree as T
+from repro.core.lsm import CoconutLSM
+from repro.storage import Segment, SegmentStore, write_segment
+from repro.storage.tiers import TieredLeafStore
+
+from .common import cfg_for, dataset, emit, write_bench
+
+
+def _pctl(lat, q):
+    return float(np.percentile(np.asarray(lat, np.float64), q)) * 1e6
+
+
+def _zipf_order(n_batches: int, length: int, seed: int = 7,
+                a: float = 1.2) -> np.ndarray:
+    """Rank-skewed batch visit order: batch r drawn with p ~ 1/(r+1)^a."""
+    p = 1.0 / np.arange(1, n_batches + 1, dtype=np.float64) ** a
+    p /= p.sum()
+    return np.random.default_rng(seed).choice(n_batches, size=length, p=p)
+
+
+def bench_tiered(n: int = 20000, n_batches: int = 24, q_per: int = 4,
+                 leaf: int = 64) -> None:
+    cfg = cfg_for()                    # w=8, b=4: codes pack 2 symbols/byte
+    raw = np.asarray(dataset(n))
+    rng = np.random.default_rng(3)
+    base_q = [raw[rng.integers(0, n, q_per)] + rng.normal(
+        scale=0.05, size=(q_per, cfg.series_len)).astype(np.float32)
+        for _ in range(n_batches)]
+
+    work = tempfile.mkdtemp(prefix="coconut-tiered-")
+    try:
+        # ---- packed footprint: one tree, v2 vs v3 ----------------------
+        tree = T.build(raw, cfg, leaf_size=leaf, materialized=True)
+        sizes = {}
+        for ver in (2, 3):
+            path = os.path.join(work, f"fmt-v{ver}.coco")
+            write_segment(path, tree, version=ver)
+            seg = Segment.open(path)
+            sizes[ver] = (seg.columns["keys"].nbytes
+                          + seg.columns["codes"].nbytes)
+            seg.close()
+        pack_ratio = sizes[3] / sizes[2]
+        emit("tiered/summary_bytes_v2", 0.0,
+             f"bytes_per_series={sizes[2] / n:.2f}")
+        emit("tiered/summary_bytes_v3", 0.0,
+             f"bytes_per_series={sizes[3] / n:.2f};"
+             f"ratio={pack_ratio:.3f}")
+
+        # ---- build the tiered engine -----------------------------------
+        tiers = TieredLeafStore(64 << 20, promote_touches=2)
+        store = SegmentStore(os.path.join(work, "lsm"))
+        lsm = CoconutLSM(cfg, buffer_capacity=max(1024, n // 8),
+                         leaf_size=leaf, store=store, tiers=tiers)
+        step = max(1, n // 6)
+        for i in range(0, n, step):
+            lsm.insert(raw[i:i + step])
+            lsm.flush()
+
+        def probe(qs):
+            t0 = time.perf_counter()
+            lsm.search_exact_batch(qs, k=10)
+            return time.perf_counter() - t0
+
+        probe(base_q[0] + 1.0)         # JIT warmup outside all timings
+        tiers.clear()
+
+        # cold: first touch of every distinct batch, caches empty
+        lat_cold = [probe(qs) for qs in base_q]
+        # warm: exact replay — leaf blocks in the clock cache, whole
+        # answers in the result cache (epoch unchanged)
+        lat_warm = [probe(qs) for qs in base_q]
+        # heat the clock: skewed Zipf replays push the popular leaves
+        # over the promotion threshold onto the device tier
+        for bi in _zipf_order(n_batches, 4 * n_batches):
+            probe(base_q[bi])
+        # hot: new query values (result cache misses by construction) so
+        # the timing measures the device-resident leaf path
+        lat_hot = [probe(qs + rng.normal(
+            scale=1e-3, size=qs.shape).astype(np.float32))
+            for qs in base_q]
+
+        st = tiers.stats()
+        emit("tiered/cold_p50", _pctl(lat_cold, 50), f"n={n}")
+        emit("tiered/cold_p99", _pctl(lat_cold, 99), "")
+        emit("tiered/warm_p50", _pctl(lat_warm, 50),
+             f"result_hits={st['result_hits']}")
+        emit("tiered/warm_p99", _pctl(lat_warm, 99), "")
+        emit("tiered/hot_p50", _pctl(lat_hot, 50),
+             f"promotions={st['promotions']}")
+        emit("tiered/hot_p99", _pctl(lat_hot, 99),
+             f"hit_rate={st['hit_rate']:.3f}")
+        warm_speedup = _pctl(lat_cold, 50) / max(_pctl(lat_warm, 50),
+                                                 1e-9)
+        emit("tiered/warm_speedup", 0.0, f"x={warm_speedup:.2f}")
+        lsm.close()
+
+        write_bench("tiered", payload={
+            "n": n, "batches": n_batches, "q_per_batch": q_per,
+            "cache": st,
+            "summary_bytes_per_series": {
+                "v2": sizes[2] / n, "v3": sizes[3] / n},
+            "gates": [
+                {"name": "warm_p50_speedup_x", "value": warm_speedup,
+                 "min": 2.0},
+                {"name": "packed_summary_ratio", "value": pack_ratio,
+                 "max": 0.7},
+            ],
+        })
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def main(smoke: bool = False) -> None:
+    if smoke:
+        bench_tiered(n=4000, n_batches=8)
+    else:
+        bench_tiered()
+
+
+if __name__ == "__main__":
+    main()

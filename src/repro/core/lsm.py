@@ -45,6 +45,7 @@ chaining), ``advance_clock`` (one window clock across shards), and
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import List, Optional, Tuple
@@ -82,6 +83,11 @@ class Run:
     t_min: int
     t_max: int
     segment: Optional[str] = None   # on-disk segment file (store-backed)
+    # open Segment reader for the file above — kept only when a tiered
+    # leaf store is attached, so snapshot partitions can serve cached
+    # leaf blocks off the (packed) on-disk columns
+    seg_handle: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
     _fence: Optional[Tuple[int, int]] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -141,7 +147,8 @@ class CoconutLSM:
                  store=None,
                  concurrent: bool = False,
                  wal_fsync: str = "always",
-                 max_debt: int = 4):
+                 max_debt: int = 4,
+                 tiers=None):
         if mode not in ("pp", "tp", "btp"):
             raise ValueError(f"unknown windowing mode {mode!r}")
         if store is not None and store.exists():
@@ -158,6 +165,17 @@ class CoconutLSM:
         self.store = store                 # Optional[SegmentStore]
         if store is not None and store.io is None:
             store.io = self.io             # disk writes charge index stats
+        # Optional[repro.storage.tiers.TieredLeafStore]: leaf-block and
+        # query-result caching over the committed segments
+        self.tiers = tiers if store is not None else None
+        # monotone data-visibility epoch: bumped whenever the rows a
+        # snapshot could see change (insert, run publish, merge).  The
+        # result cache keys on it, so an answer computed against an older
+        # view is unreachable the instant the view changes.  (The clock
+        # alone is NOT a safe key: a sync-mode insert advances the clock
+        # while the rows stay invisible until flush — and the flush
+        # itself doesn't advance it.)
+        self.data_epoch = 0
         self.runs: List[Run] = []          # newest first
         self._buf_raw: List[np.ndarray] = []
         self._buf_ts: List[np.ndarray] = []
@@ -202,7 +220,8 @@ class CoconutLSM:
     def open(cls, store, *, io: Optional[IOStats] = None,
              concurrent: bool = False,
              wal_fsync: str = "always",
-             max_debt: int = 4) -> "CoconutLSM":
+             max_debt: int = 4,
+             tiers=None) -> "CoconutLSM":
         """Reopen a persisted index from its manifest (restart/recovery).
 
         ``store`` is a ``SegmentStore`` or a directory path.  Runs the
@@ -233,6 +252,7 @@ class CoconutLSM:
         lsm.store = store
         if store.io is None:
             store.io = lsm.io
+        lsm.tiers = tiers
         lsm.clock = manifest["clock"]
         lsm.merges = manifest.get("merges", 0)
         for entry in manifest["runs"]:     # manifest keeps newest-first
@@ -240,10 +260,13 @@ class CoconutLSM:
             try:
                 tree = seg.to_tree()
             finally:
-                seg.close()
+                if tiers is None:
+                    seg.close()
             lsm.runs.append(Run(tree=tree, level=entry["level"],
                                 t_min=entry["t_min"], t_max=entry["t_max"],
-                                segment=entry["file"]))
+                                segment=entry["file"],
+                                seg_handle=seg if tiers is not None
+                                else None))
         # pre-ids stores (segments without an ids column): synthesize
         # unique global ids — oldest-first run bases + the run's own
         # offsets (unique within a run) — so merges with new id-carrying
@@ -322,6 +345,8 @@ class CoconutLSM:
             for r in runs:
                 if r.segment is None:
                     r.segment = self.store.write_tree(r.tree)
+                if self.tiers is not None and r.seg_handle is None:
+                    r.seg_handle = self.store.open_segment(r.segment)
             manifest = SegmentStore.manifest_for(
                 self.cfg,
                 [{"file": r.segment, "level": r.level,
@@ -332,7 +357,12 @@ class CoconutLSM:
                 materialized=self.materialized, merges=self.merges,
                 wal_start=sum(r.n for r in runs))
             self.store.commit_manifest(manifest)
-            self.store.gc()
+            removed = self.store.gc()
+            if self.tiers is not None:
+                # retired segment files can never be read again (ids are
+                # never reused) — drop their cached leaf blocks
+                for f in removed or ():
+                    self.tiers.invalidate(os.path.join(self.store.root, f))
             self.ingest.add("commits")
             self._rotate_wal()
         get_registry().histogram("compact.commit_ms").observe(
@@ -385,6 +415,7 @@ class CoconutLSM:
                 # the clock (a regressing clock would shift window cuts
                 # and break shard-count invariance)
                 self.clock = max(self.clock, int(timestamps.max()) + 1)
+                self.data_epoch += 1
                 start_row = self._rows_inserted
                 self._rows_inserted += n
                 if ids is None:
@@ -560,6 +591,7 @@ class CoconutLSM:
         with self._cv:
             self._flushing = [e for e in self._flushing if e is not entry]
             self.runs.insert(0, run)
+            self.data_epoch += 1
             self._dirty = True
             self._cv.notify_all()
 
@@ -595,6 +627,7 @@ class CoconutLSM:
             runs.insert(pos, new)
             self.runs = runs
             self.merges += 1
+            self.data_epoch += 1
             self._dirty = True
             self._cv.notify_all()
 
@@ -727,6 +760,7 @@ class CoconutLSM:
         with self._lock:                 # reference capture only, no copy
             runs = tuple(self.runs)
             clock = self.clock
+            epoch = self.data_epoch
             if include_buffer:
                 parts = []
                 for e in self._flushing:
@@ -755,7 +789,9 @@ class CoconutLSM:
         fence = _combine_fences(fences) if fences else None
         return Snapshot(runs=runs, clock=clock, mode=self.mode,
                         io=self.io, buffer=buf, key_fence=fence,
-                        cfg=self.cfg)
+                        cfg=self.cfg, tiers=self.tiers, epoch=epoch,
+                        scope=(self.store.root
+                               if self.store is not None else None))
 
     def search_approx(self, query: np.ndarray, *,
                       k: int = 1,

@@ -103,7 +103,8 @@ class ShardedCoconutLSM:
                  max_debt: int = 4,
                  sample_cap: int = 8192,
                  rebalance_every: int = 0,
-                 rebalance_factor: float = 1.5):
+                 rebalance_factor: float = 1.5,
+                 tiers=None):
         """``max_debt`` is the SHARED budget: total outstanding
         flush/merge units across all shards (each shard also keeps it as
         its local cap, which can only be tighter).  ``rebalance_every``
@@ -125,12 +126,16 @@ class ShardedCoconutLSM:
                     "— reopen it with ShardedCoconutLSM.open instead")
             dirs = [shard_dir.shard_dir_name(i, 0) for i in range(shards)]
             stores = [shard_dir.shard_store(d) for d in dirs]
+        # ONE TieredLeafStore shared by every shard: cache keys are
+        # segment paths (unique across shard dirs), so shards share the
+        # byte budget without colliding
         engines = [CoconutLSM(cfg, buffer_capacity=buffer_capacity,
                               leaf_size=leaf_size, size_ratio=size_ratio,
                               mode=mode, materialized=materialized,
                               io=io, store=stores[i],
                               concurrent=concurrent,
-                              wal_fsync=wal_fsync, max_debt=max_debt)
+                              wal_fsync=wal_fsync, max_debt=max_debt,
+                              tiers=tiers)
                    for i in range(shards)]
         router = KeyRangeRouter(cfg, shards, boundaries=boundaries,
                                 sample_cap=sample_cap)
@@ -142,7 +147,8 @@ class ShardedCoconutLSM:
                           concurrent=concurrent, wal_fsync=wal_fsync,
                           max_debt=max_debt,
                           rebalance_every=rebalance_every,
-                          rebalance_factor=rebalance_factor)
+                          rebalance_factor=rebalance_factor,
+                          tiers=tiers)
         if shard_dir is not None:
             self._commit_meta()   # reopenable from birth, like CoconutLSM
 
@@ -150,8 +156,9 @@ class ShardedCoconutLSM:
                      generation, clock, next_id, buffer_capacity,
                      leaf_size, size_ratio, mode, materialized, io,
                      concurrent, wal_fsync, max_debt, rebalance_every,
-                     rebalance_factor) -> None:
+                     rebalance_factor, tiers=None) -> None:
         self.cfg = cfg
+        self.tiers = tiers if shard_dir is not None else None
         self.n_shards = len(engines)
         self.mode = mode
         self.buffer_capacity = buffer_capacity
@@ -201,7 +208,8 @@ class ShardedCoconutLSM:
              max_debt: int = 4,
              sample_cap: int = 8192,
              rebalance_every: int = 0,
-             rebalance_factor: float = 1.5) -> "ShardedCoconutLSM":
+             rebalance_factor: float = 1.5,
+             tiers=None) -> "ShardedCoconutLSM":
         """Reopen a persisted sharded index.
 
         Cleans up migration orphans, reopens every shard from its own
@@ -222,7 +230,8 @@ class ShardedCoconutLSM:
         p = meta["params"]
         engines = [CoconutLSM.open(shard_dir.shard_store(d), io=io,
                                    concurrent=concurrent,
-                                   wal_fsync=wal_fsync, max_debt=max_debt)
+                                   wal_fsync=wal_fsync, max_debt=max_debt,
+                                   tiers=tiers)
                    for d in meta["dirs"]]
         router = KeyRangeRouter(
             cfg, len(engines),
@@ -244,7 +253,8 @@ class ShardedCoconutLSM:
                          concurrent=concurrent, wal_fsync=wal_fsync,
                          max_debt=max_debt,
                          rebalance_every=rebalance_every,
-                         rebalance_factor=rebalance_factor)
+                         rebalance_factor=rebalance_factor,
+                         tiers=tiers)
         for e in engines:
             e.advance_clock(clock)
         return obj
@@ -450,7 +460,8 @@ class ShardedCoconutLSM:
                                io=self.io, store=stores[i],
                                concurrent=self.concurrent,
                                wal_fsync=self.wal_fsync,
-                               max_debt=self.max_debt))
+                               max_debt=self.max_debt,
+                               tiers=self.tiers))
             # detach the fill-phase WALs: the OLD generation stays the
             # authoritative durable copy until the SHARDS.json switch (a
             # crash before it orphans the new dirs entirely), so logging +
@@ -518,6 +529,14 @@ class ShardedCoconutLSM:
             old_dirs, self._dirs = self._dirs, new_dirs
         self._commit_meta()                       # atomic commit point
         for s in old_shards:
+            # drop the retired generation's cached leaf blocks before the
+            # dirs are deleted (tokens are segment paths, so this frees
+            # the shared budget; the new generation re-warms on demand)
+            if self.tiers is not None and s.store is not None:
+                for r in s.runs:
+                    if r.segment:
+                        self.tiers.invalidate(
+                            os.path.join(s.store.root, r.segment))
             s.close()
         if self._shard_dir is not None:
             self._shard_dir.cleanup()             # retire old generation

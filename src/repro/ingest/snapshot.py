@@ -74,6 +74,17 @@ class Snapshot:
     buffer: Optional[FrozenBuffer] = None
     key_fence: Optional[Tuple[int, int]] = None   # (lo, hi) z-order bigints
     cfg: Optional[S.SummaryConfig] = None
+    # TieredLeafStore shared with the engine: run partitions then read
+    # leaf blocks through the cache (and probe the query-result cache)
+    tiers: Optional[object] = None
+    # engine data-visibility epoch at capture time — the result-cache
+    # key component that makes answers from any older view unreachable
+    epoch: int = 0
+    # engine identity (store root): one TieredLeafStore may back many
+    # engines (the sharded router shares one across shards), and two
+    # engines can hold the same epoch value — the scope keeps their
+    # result-cache entries apart
+    scope: Optional[str] = None
 
     @property
     def n(self) -> int:
@@ -105,7 +116,16 @@ class Snapshot:
         parts = []
         if self.buffer is not None and self.buffer.n:
             parts.append(Partition.from_buffer(self.buffer, self._cfg()))
-        parts.extend(Partition.from_run(r) for r in self.runs)
+        for r in self.runs:
+            seg = getattr(r, "seg_handle", None)
+            if self.tiers is not None and seg is not None:
+                # tiered backend: the run's committed segment file, read
+                # leaf-by-leaf through the cache — answers bit-identical
+                # to the device tree view (cross-backend parity)
+                parts.append(Partition.from_segment(
+                    seg, ts_range=(r.t_min, r.t_max), tiers=self.tiers))
+            else:
+                parts.append(Partition.from_run(r))
         return parts
 
     # ----------------------------------------------------------- single query
@@ -205,6 +225,32 @@ class Snapshot:
                   temporal_prune=(self.mode != "pp"),
                   bsf=bsf, radius_leaves=radius_leaves, io=self.io)
         budgeted = budget is not None or mode == "approx"
+        # whole-probe result cache: only unbudgeted exact probes without
+        # an external bound are cacheable (a bsf chain or budget changes
+        # what the probe may return).  Keyed by the raw query bytes (the
+        # PAA derives from them, but PAA alone would alias distinct
+        # queries with equal summaries onto one answer), the window cut,
+        # k, the seed radius, and the snapshot's data epoch — any
+        # flush/merge/rebalance bumps the epoch, so a stale answer is
+        # unreachable by construction.
+        ckey = None
+        if (self.tiers is not None and not budgeted and bsf is None):
+            ckey = (queries.tobytes(), queries.shape, window, k,
+                    radius_leaves, int(self.epoch), self.mode,
+                    self.scope)
+            hit = self.tiers.result_get(ckey)
+            if hit is not None:
+                best_d, best_off, info = hit
+                # the cached probe is logged (records/queries stay in
+                # step with query.probes_total) but carries NO "stats":
+                # no pipeline ran, so the registry's query.* totals were
+                # not advanced and the analytics bit-exact certification
+                # still holds
+                with probe("snapshot.exact", queries=queries.shape[0],
+                           k=k, window=window,
+                           snapshot_epoch=int(self.clock)) as rec:
+                    rec["result_cache"] = "hit"
+                return best_d.copy(), best_off.copy(), dict(info)
         with probe("snapshot." + ("approx" if budgeted else "exact"),
                    queries=queries.shape[0], k=k, window=window,
                    budget=as_budget(budget) if budgeted else None,
@@ -218,6 +264,9 @@ class Snapshot:
                     self._partitions(), queries, self._cfg(), **kw)
             rec["stats"] = stats
         info = self._info(stats)
+        if ckey is not None:
+            self.tiers.result_put(ckey, (best_d.copy(), best_off.copy(),
+                                         info))
         return best_d, best_off, info
 
     @staticmethod

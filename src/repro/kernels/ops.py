@@ -33,14 +33,19 @@ _euclid_jit = jax.jit(ref.batch_euclid_ref)
 _euclid_multi_jit = jax.jit(ref.batch_euclid_multi_ref)
 _scan_verify_jit = jax.jit(ref.scan_verify_ref,
                            static_argnames=("scale", "k"))
+_mindist_batch_packed_jit = jax.jit(
+    ref.mindist_batch_packed_ref,
+    static_argnames=("scale", "w", "b"))
 from .batch_euclid import batch_euclid_pallas
 from .mindist_batch import mindist_batch_pallas
 from .mindist_scan import mindist_pallas
 from .sax_summarize import sax_summarize_pallas
 from .scan_verify import scan_verify_pallas
+from .unpack_mindist import unpack_mindist_batch_pallas
 from .zorder import zorder_pallas
 
-__all__ = ["mindist", "mindist_batch", "sax_summarize", "zorder",
+__all__ = ["mindist", "mindist_batch", "mindist_batch_packed",
+           "sax_summarize", "zorder",
            "batch_euclid", "batch_euclid_multi", "scan_verify",
            "summarize_and_key"]
 
@@ -91,6 +96,31 @@ def mindist_batch(q_paas: jax.Array, codes: jax.Array, cfg: S.SummaryConfig,
         return done(mindist_batch_pallas(q_paas, codes.astype(jnp.int32),
                                          lower, upper, scale=scale,
                                          interpret=(mode == "interpret")))
+
+
+def mindist_batch_packed(q_paas: jax.Array, packed: jax.Array,
+                         cfg: S.SummaryConfig,
+                         mode: str = "auto") -> jax.Array:
+    """Batched lower bound over v3 *packed* code rows:
+    ``[Q, w] x [N, ceil(w*b/8)] -> [Q, N]``.
+
+    The packed-column twin of :func:`mindist_batch` — fused bit-unpack +
+    one-hot mindist, so the executor scans cached/device-resident packed
+    blocks without a host-side decode round trip.  Both paths compute
+    the identical bound (the unpack is exact), so answers never depend
+    on which one ran.
+    """
+    mode = _resolve(mode)
+    scale = cfg.series_len / cfg.segments
+    lower, upper = _finite_bounds(cfg.bits)
+    with _prof.profiled("mindist_batch_packed") as done:
+        if mode == "jnp":
+            return done(_mindist_batch_packed_jit(
+                q_paas, packed, lower, upper, scale=scale,
+                w=cfg.segments, b=cfg.bits))
+        return done(unpack_mindist_batch_pallas(
+            q_paas, packed, lower, upper, w=cfg.segments, b=cfg.bits,
+            scale=scale, interpret=(mode == "interpret")))
 
 
 def sax_summarize(x: jax.Array, cfg: S.SummaryConfig, mode: str = "auto"):

@@ -14,7 +14,8 @@ from ..core import summarization as S
 
 __all__ = ["mindist_ref", "mindist_batch_ref", "sax_summarize_ref",
            "zorder_ref", "batch_euclid_ref", "batch_euclid_multi_ref",
-           "scan_verify_ref"]
+           "scan_verify_ref", "unpack_codes_ref",
+           "mindist_batch_packed_ref"]
 
 
 def mindist_ref(q_paa: jax.Array, codes: jax.Array, lower: jax.Array,
@@ -43,6 +44,40 @@ def mindist_batch_ref(q_paas: jax.Array, codes: jax.Array, lower: jax.Array,
     above = jnp.where(q > ub[None], q - ub[None], 0.0)
     d = below + above
     return scale * jnp.sum(d * d, axis=-1).astype(jnp.float32)
+
+
+def unpack_codes_ref(packed: jax.Array, *, w: int, b: int) -> jax.Array:
+    """Packed ``[N, ceil(w*b/8)]`` uint8 rows -> ``[N, w]`` int32 codes.
+
+    Symbol ``j`` occupies bits ``[j*b, (j+1)*b)`` of its row, MSB-first
+    (the v3 segment layout of :mod:`repro.storage.packing`).  For b <= 8
+    a symbol spans at most two adjacent bytes, so each column extraction
+    is one 16-bit window shift — exact integer ops, bit-identical to the
+    numpy decoder.  Padding one zero byte keeps the second-byte index in
+    range for every symbol, including ``b == 8`` (where this degenerates
+    to the identity).
+    """
+    pk = packed.astype(jnp.int32)
+    pk = jnp.pad(pk, ((0, 0), (0, 1)))
+    cols = []
+    for j in range(w):
+        bl, sh = (j * b) // 8, (j * b) % 8
+        window = (pk[:, bl] << 8) | pk[:, bl + 1]
+        cols.append((window >> (16 - sh - b)) & ((1 << b) - 1))
+    return jnp.stack(cols, axis=1)
+
+
+def mindist_batch_packed_ref(q_paas: jax.Array, packed: jax.Array,
+                             lower: jax.Array, upper: jax.Array, *,
+                             scale: float, w: int, b: int) -> jax.Array:
+    """Fused oracle: unpack v3 code rows, then the batched lower bound.
+
+    q_paas [Q, w], packed [N, ceil(w*b/8)] -> [Q, N] float32, bit-equal
+    to ``mindist_batch_ref`` on the decoded codes (the parity guarantee
+    the packed executor fast path rests on).
+    """
+    return mindist_batch_ref(q_paas, unpack_codes_ref(packed, w=w, b=b),
+                             lower, upper, scale)
 
 
 def sax_summarize_ref(x: jax.Array, bps: jax.Array, segments: int):

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused bit-unpack + batched SIMS lower bound.
+
+Segment format v3 stores SAX codes bit-packed at ``b`` bits per symbol
+(``ceil(w*b/8)`` bytes per row instead of ``w``) — that is what makes
+hot leaves cheap enough to keep device-resident.  Scanning them with the
+existing batched kernel would need a host-side (or separate-launch)
+unpack, touching ``w/pw``x more HBM than the data actually occupies.
+This kernel fuses the unpack into the scan: packed code tiles stream
+HBM -> VMEM at their *packed* width and are expanded to symbols in
+registers, so the bandwidth win of packing survives into the scan
+itself.
+
+TPU adaptation notes:
+  * Symbol extraction is a static Python loop over the ``w`` columns —
+    each symbol spans at most two adjacent bytes (b <= 8), so one
+    16-bit window shift per column; no gathers, and the loop unrolls
+    into straight-line VPU code at trace time.
+  * One zero byte is padded onto every packed row so the two-byte
+    window never reads past the row, including at ``b == 8``.
+  * Everything after extraction is the one-hot compare+select+reduce
+    mindist of ``mindist_batch.py`` — same tiles, same constant-index
+    query/bound specs, same ``[Q, block_n]`` output layout — so the two
+    kernels stay interchangeable behind ``ops.mindist_batch``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["unpack_mindist_batch_pallas"]
+
+
+def _kernel(packed_ref, qpaa_ref, lower_ref, upper_ref, out_ref, *,
+            w: int, b: int, card: int, scale: float):
+    pk = packed_ref[...].astype(jnp.int32)            # [bn, pw + 1]
+    q = qpaa_ref[...]                                  # [Q, w]
+    lower = lower_ref[...]                             # [1, card]
+    upper = upper_ref[...]
+    cols = []
+    for j in range(w):
+        bl, sh = (j * b) // 8, (j * b) % 8
+        window = (pk[:, bl] << 8) | pk[:, bl + 1]
+        cols.append((window >> (16 - sh - b)) & ((1 << b) - 1))
+    codes = jnp.stack(cols, axis=1)                    # [bn, w] int32
+    bn = codes.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, w, card), 2)
+    onehot = (codes[:, :, None] == iota)
+    lb = jnp.sum(jnp.where(onehot, lower[0][None, None, :], 0.0), axis=-1)
+    ub = jnp.sum(jnp.where(onehot, upper[0][None, None, :], 0.0), axis=-1)
+    below = jnp.maximum(lb[None, :, :] - q[:, None, :], 0.0)   # [Q, bn, w]
+    above = jnp.maximum(q[:, None, :] - ub[None, :, :], 0.0)
+    d = below + above
+    out_ref[...] = (scale * jnp.sum(d * d, axis=-1)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "b", "scale", "block_n",
+                                    "interpret"))
+def unpack_mindist_batch_pallas(q_paas: jax.Array, packed: jax.Array,
+                                lower: jax.Array, upper: jax.Array, *,
+                                w: int, b: int, scale: float,
+                                block_n: int = 256,
+                                interpret: bool = True) -> jax.Array:
+    """Batched squared mindist over *packed* codes.
+
+    q_paas ``[Q, w]``, packed ``[N, ceil(w*b/8)]`` uint8 -> ``[Q, N]``,
+    bit-identical to ``mindist_batch_pallas`` on the decoded rows.
+    ``lower``/``upper`` are the per-code region bounds (``[2**b]``,
+    +-inf replaced by large finite sentinels by the caller).
+    """
+    n, pw = packed.shape
+    nq = q_paas.shape[0]
+    card = lower.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    # pad rows for the grid AND one zero byte per row for the two-byte
+    # extraction window
+    packed_p = jnp.pad(packed.astype(jnp.int32),
+                       ((0, n_pad - n), (0, 1)))
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, w=w, b=b, card=card,
+                          scale=float(scale)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, pw + 1), lambda i: (i, 0)),
+            pl.BlockSpec((nq, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, card), lambda i: (0, 0)),
+            pl.BlockSpec((1, card), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((nq, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, n_pad), jnp.float32),
+        interpret=interpret,
+    )(packed_p, q_paas.astype(jnp.float32),
+      lower[None, :].astype(jnp.float32),
+      upper[None, :].astype(jnp.float32))
+    return out[:, :n]

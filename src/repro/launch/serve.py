@@ -110,6 +110,14 @@ def main(argv=None) -> None:
                          "--shards N: one ShardDirectory of per-shard "
                          "stores under a single atomic top-level "
                          "manifest)")
+    ap.add_argument("--cache-mb", type=float, default=0.0,
+                    help="tiered leaf cache over the durable segment "
+                         "store, in MiB (0 = off; requires --data-dir): "
+                         "hot leaves promoted to device arrays, warm "
+                         "leaves in a clock-evicted host cache, cold "
+                         "leaves on mmap, plus a query-result cache — "
+                         "cache.* metrics land in /metrics and the "
+                         "final report")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="extra flush + manifest commit every N decode "
                          "steps; the WAL already covers acked inserts "
@@ -182,6 +190,14 @@ def main(argv=None) -> None:
             raise SystemExit(
                 f"{args.data_dir} holds a sharded index (SHARDS.json); "
                 "rerun with --shards N or pick another --data-dir")
+    tiers = None
+    if args.cache_mb > 0:
+        if not args.data_dir:
+            raise SystemExit("--cache-mb requires --data-dir (the "
+                             "tiered cache sits over the durable "
+                             "segment store)")
+        from ..storage.tiers import TieredLeafStore
+        tiers = TieredLeafStore(int(args.cache_mb * (1 << 20)))
     store = None
     if args.shards > 1:
         from ..distributed.sharded_lsm import ShardedCoconutLSM
@@ -190,7 +206,8 @@ def main(argv=None) -> None:
             index = ShardedCoconutLSM.open(args.data_dir,
                                            concurrent=args.concurrent,
                                            wal_fsync=args.wal_fsync,
-                                           max_debt=args.max_debt)
+                                           max_debt=args.max_debt,
+                                           tiers=tiers)
             print(f"reopened {index.describe()}: {index.n} entries in "
                   f"{len(index.runs)} runs across {index.n_shards} "
                   f"shards (clock={index.clock})")
@@ -205,7 +222,8 @@ def main(argv=None) -> None:
                                       mode="btp", data_dir=args.data_dir,
                                       concurrent=args.concurrent,
                                       wal_fsync=args.wal_fsync,
-                                      max_debt=args.max_debt)
+                                      max_debt=args.max_debt,
+                                      tiers=tiers)
     else:
         if args.data_dir:
             from ..storage import SegmentStore
@@ -213,7 +231,7 @@ def main(argv=None) -> None:
         if store is not None and store.exists():
             index = CoconutLSM.open(store, concurrent=args.concurrent,
                                     wal_fsync=args.wal_fsync,
-                                    max_debt=args.max_debt)
+                                    max_debt=args.max_debt, tiers=tiers)
             print(f"reopened {store.describe()}: {index.n} entries in "
                   f"{len(index.runs)} runs (clock={index.clock})")
         else:
@@ -221,7 +239,7 @@ def main(argv=None) -> None:
                                mode="btp", store=store,
                                concurrent=args.concurrent,
                                wal_fsync=args.wal_fsync,
-                               max_debt=args.max_debt)
+                               max_debt=args.max_debt, tiers=tiers)
 
     base = T + (cfg.frontend_tokens
                 if cfg.frontend != "none" and not cfg.is_encdec else 0)
@@ -389,6 +407,17 @@ def main(argv=None) -> None:
         "ingest.backpressure_waits_total": im.get("backpressure_waits", 0),
         "ingest.wal_bytes_total": im.get("wal_bytes", 0),
     }
+    if tiers is not None:
+        cs = tiers.stats()
+        report.update({
+            "cache.hits_total": cs["hits"],
+            "cache.misses_total": cs["misses"],
+            "cache.hit_rate": round(cs["hit_rate"], 4),
+            "cache.bytes_saved_total": cs["bytes_saved"],
+            "cache.result_hits_total": cs["result_hits"],
+            "cache.promotions_total": cs["promotions"],
+            "cache.resident_bytes": cs["resident_bytes"],
+        })
     print("report: " + " ".join(f"{k}={v}" for k, v in report.items()))
     if args.metrics_interval > 0 or args.trace_dir:
         dump_metrics("exit")

@@ -182,8 +182,11 @@ def _drain(plan: ScanPlan, queries_np: np.ndarray, *, k: int,
     per_fn = []
     for e in sorted_entries:
         if mindist_fn is None:
-            per_fn.append((lambda cfg: lambda qp, c:
-                           S.mindist_sq_batch(qp, c, cfg))(e.partition.cfg))
+            fn = (lambda cfg: lambda qp, c:
+                  S.mindist_sq_batch(qp, c, cfg))(e.partition.cfg)
+            # default bound: enables the executor's packed scan fast path
+            fn._coconut_default_mindist = True
+            per_fn.append(fn)
         else:
             per_fn.append(mindist_fn)
     live_total = 0

@@ -136,9 +136,9 @@ def _scan_leaf_group(entry: ScanEntry, queries_j, q_paas_j,
     row_idx = (grp[:, None] * leaf
                + np.arange(leaf)[None, :]).reshape(-1)
     row_idx = row_idx[row_idx < part.n]
-    codes_blk = part.codes_rows(row_idx, io=io)
     nbytes = len(row_idx) * part.cfg.segments
     if fused is not None:
+        codes_blk = part.codes_rows(row_idx, io=io)
         t0 = time.perf_counter()
         with _span("verify", rows=len(row_idx), fused=True) as vsp:
             before = stats.candidates
@@ -151,9 +151,23 @@ def _scan_leaf_group(entry: ScanEntry, queries_j, q_paas_j,
         # the fused kernel streams the whole group's raw rows (that IS
         # the fusion), so the group charges every row's raw bytes
         return live_pairs, nbytes + len(row_idx) * part.cfg.series_len * 4
-    if part.backend != "device":
-        codes_blk = jnp.asarray(codes_blk)
-    md = np.asarray(mindist_fn(q_paas_j, codes_blk))      # [Q, B]
+    # packed fast path: when the partition stores v3 packed codes and
+    # the lower bound is the default kernel, hand the stored-form rows
+    # straight to the fused unpack+mindist kernel — no host-side decode,
+    # and device-promoted hot leaves skip the host->device copy too.
+    # Both bound paths compute identical bits, so answers never depend
+    # on which one ran.
+    if (part.is_packed
+            and getattr(mindist_fn, "_coconut_default_mindist", False)):
+        from ..kernels import ops
+        packed_blk = part.codes_rows_packed(row_idx, io=io)
+        md = np.asarray(ops.mindist_batch_packed(
+            q_paas_j, jnp.asarray(packed_blk), part.cfg))     # [Q, B]
+    else:
+        codes_blk = part.codes_rows(row_idx, io=io)
+        if part.backend != "device":
+            codes_blk = jnp.asarray(codes_blk)
+        md = np.asarray(mindist_fn(q_paas_j, codes_blk))      # [Q, B]
     live = md < pool.bound()[:, None]
     if alive is not None:
         live &= alive[row_idx][None, :]
@@ -337,6 +351,9 @@ def execute(plan: ScanPlan, queries, *, k: int = 1,
         if mindist_fn is None:
             cfg = part.cfg
             part_mindist = lambda qp, c: S.mindist_sq_batch(qp, c, cfg)
+            # marks the bound as the default kernel, which the packed
+            # scan fast path is bit-equal to — injected bounds disable it
+            part_mindist._coconut_default_mindist = True
         else:
             part_mindist = mindist_fn
         total_rows += part.n

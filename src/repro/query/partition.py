@@ -15,6 +15,16 @@ per-leaf mindist bounds, and row-subset accessors (``codes_rows`` /
 trees, as real ``bytes_read``-charged mmap reads for segments.  The
 unsorted buffer has no fences and is brute-force scanned by the
 executor.
+
+Segment partitions optionally carry a
+:class:`repro.storage.tiers.TieredLeafStore`: row gathers then assemble
+from leaf-granular cached blocks (host-RAM warm tier, device-promoted
+hot tier) and fall through to the mmap only on a miss — a caching
+backend is just another Partition view, so the planner/executor above
+this seam is unchanged and answers are bit-identical across tiers.
+Byte accounting keeps two strict currencies: a miss charges the
+*stored* (packed) bytes to ``io.bytes_read``; a hit charges nothing to
+``io`` and credits the same figure to ``cache.bytes_saved``.
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ class Partition:
     leaf_size: int
     source: object
     ts_range: Optional[Tuple[int, int]] = None   # (t_min, t_max) or None
+    tiers: Optional[object] = None               # TieredLeafStore or None
 
     # ------------------------------------------------------------ constructors
     @classmethod
@@ -56,16 +67,18 @@ class Partition:
 
     @classmethod
     def from_segment(cls, seg, *,
-                     ts_range: Optional[Tuple[int, int]] = None
-                     ) -> "Partition":
+                     ts_range: Optional[Tuple[int, int]] = None,
+                     tiers: Optional[object] = None) -> "Partition":
         """Wrap an on-disk :class:`~repro.storage.segment.Segment`; all
         row access goes through the mmap and is charged to ``io``.
         ``ts_range`` is optional — computing it would read the whole
         timestamp column, so callers that know it (the LSM manifest
-        records t_min/t_max per run) pass it in."""
+        records t_min/t_max per run) pass it in.  ``tiers`` attaches a
+        :class:`~repro.storage.tiers.TieredLeafStore` so leaf blocks are
+        served from cache when warm."""
         return cls(kind="segment", backend="mmap", cfg=seg.cfg,
                    n=seg.n, leaf_size=seg.leaf_size, source=seg,
-                   ts_range=ts_range)
+                   ts_range=ts_range, tiers=tiers)
 
     @classmethod
     def from_buffer(cls, buf, cfg: S.SummaryConfig, *,
@@ -84,6 +97,27 @@ class Partition:
     @property
     def n_leaves(self) -> int:
         return -(-self.n // self.leaf_size)
+
+    @property
+    def cache_token(self):
+        """Cache group key for this partition's leaf blocks: the segment
+        path.  Segment files are immutable once published and their ids
+        are never reused, so the path identifies the bytes forever."""
+        return getattr(self.source, "path", None)
+
+    @property
+    def is_packed(self) -> bool:
+        """True when the source stores bit-packed v3 code rows — the
+        executor's cue that the fused unpack+mindist path applies."""
+        return (self.kind == "segment"
+                and getattr(self.source, "codes_packed", None) is not None)
+
+    @property
+    def code_row_bytes(self) -> int:
+        """Stored bytes per code row — what one row costs to read."""
+        if self.kind == "segment":
+            return self.source.code_row_bytes
+        return self.cfg.segments
 
     # ----------------------------------------------------------- sorted access
     def leaf_fences(self, io: Optional[IOStats] = None
@@ -152,10 +186,7 @@ class Partition:
                     continue                   # keys[0] >= q_key: pos 0
                 l = int(fl[qi]) - 1
                 s = l * self.leaf_size
-                e = min(s + self.leaf_size, self.n)
-                blk = np.asarray(seg.keys[s:e])
-                if io is not None:
-                    io.read_bytes(blk.nbytes)
+                blk = np.asarray(self._leaf_block("keys", l, io))
                 lt = np.zeros(len(blk), bool)
                 und = np.ones(len(blk), bool)
                 for w in range(blk.shape[1]):  # lexicographic <
@@ -172,14 +203,94 @@ class Partition:
             io.rand_read(2 * radius_leaves * len(idx))
         return idx
 
+    # ------------------------------------------------------------- leaf tiers
+    def _leaf_block(self, col: str, li: int,
+                    io: Optional[IOStats] = None):
+        """One leaf of the ``codes`` (stored form: packed on v3) or
+        ``keys`` (decoded) column, through the tier cache when attached.
+
+        A hit returns the cached block (possibly device-resident for hot
+        code leaves) with no ``io`` charge — the tier store credits the
+        stored bytes to ``cache.bytes_saved`` instead.  A miss reads the
+        mmap, charges the stored bytes to ``io.bytes_read``, and admits
+        the block to the warm tier.
+        """
+        seg = self.source
+        s = li * self.leaf_size
+        e = min(s + self.leaf_size, self.n)
+        if col == "codes":
+            stored = (e - s) * self.code_row_bytes
+        else:
+            stored = seg.keys_leaf_nbytes(li)
+        if self.tiers is not None:
+            blk = self.tiers.get(self.cache_token, col, li, stored)
+            if blk is not None:
+                return blk
+        if col == "codes":
+            src = seg.codes_packed
+            blk = np.asarray((seg.codes if src is None else src)[s:e])
+        else:
+            blk = np.asarray(seg.keys[s:e])
+        if io is not None:
+            io.read_bytes(stored)
+            if col == "codes":
+                io.seq_read(e - s)
+        if self.tiers is not None:
+            self.tiers.admit(self.cache_token, col, li, blk, stored)
+        return blk
+
+    def _gather_rows(self, col: str, idx: np.ndarray,
+                     io: Optional[IOStats] = None):
+        """Stored-form rows for sorted indices, assembled leaf-by-leaf
+        through the cache.  Stays on device when every touched block is
+        device-resident (the hot tier feeding the fused kernel with no
+        host→device copy)."""
+        idx = np.asarray(idx)
+        leaves = idx // self.leaf_size
+        parts, device = [], True
+        for li in np.unique(leaves):           # sorted, like idx
+            blk = self._leaf_block(col, int(li), io)
+            local = idx[leaves == li] - int(li) * self.leaf_size
+            if isinstance(blk, np.ndarray):
+                device = False
+                parts.append(blk[local])
+            else:
+                parts.append(blk[local])       # jnp fancy index
+        if len(parts) == 1:
+            return parts[0]
+        if device:
+            import jax.numpy as jnp
+            return jnp.concatenate(parts)
+        return np.concatenate([np.asarray(p) for p in parts])
+
     def codes_rows(self, idx: np.ndarray,
                    io: Optional[IOStats] = None):
-        """SAX code rows for sorted-order indices (device array for
-        trees, real charged mmap reads for segments)."""
+        """Full-width SAX code rows for sorted-order indices (device
+        array for trees, cache/mmap reads charged at stored width for
+        segments)."""
         if self.kind == "tree":
             import jax.numpy as jnp
             return self.source.codes[jnp.asarray(idx)]
+        if self.kind == "segment" and self.tiers is not None:
+            blk = self._gather_rows("codes", idx, io)
+            if self.is_packed:
+                from ..storage.packing import unpack_codes
+                return unpack_codes(np.asarray(blk), self.cfg.segments,
+                                    self.cfg.bits)
+            return np.asarray(blk)
         blk = np.asarray(self.source.codes[idx])
+        if io is not None:
+            io.read_bytes(len(blk) * self.code_row_bytes)
+            io.seq_read(len(blk))
+        return blk
+
+    def codes_rows_packed(self, idx: np.ndarray,
+                          io: Optional[IOStats] = None):
+        """Packed (stored-form) code rows — the fused unpack+mindist
+        kernel's input.  Only meaningful when :attr:`is_packed`."""
+        if self.tiers is not None:
+            return self._gather_rows("codes", idx, io)
+        blk = np.asarray(self.source.codes_packed[idx])
         if io is not None:
             io.read_bytes(blk.nbytes)
             io.seq_read(len(blk))

@@ -10,8 +10,7 @@ needs:
     +--------------------------------------------------------------+
     | header (512 B): magic, crc, flags, n, SummaryConfig, layout  |
     +--------------------------------------------------------------+
-    | keys        [N, n_words] uint32   z-order sorted             |
-    | codes       [N, w]       uint8    SAX words (sorted order)   |
+    | codes       [N, ceil(w*b/8)] uint8  bit-packed SAX words     |
     | paas        [N, w]       float32  PAA values (sorted order)  |
     | offsets     [N]          int64    position in original file  |
     | timestamps  [N]          int64    (optional)                 |
@@ -20,20 +19,32 @@ needs:
     |                                    order otherwise)          |
     | fences      [ceil(N/leaf), n_words] uint32  leaf-first keys  |
     | ids         [N]          int64    global row ids (optional)  |
+    | keys        <variable>   delta+zigzag-varint encoded, with a |
+    |                          per-leaf byte directory (format v3) |
     +--------------------------------------------------------------+
     | footer (20 B): magic, n, header-crc echo                     |
     +--------------------------------------------------------------+
+
+**Format v3** (current): the codes column is bit-packed to ``cfg.bits``
+bits per symbol and the sorted keys column is delta+varint encoded per
+leaf (see :mod:`repro.storage.packing`) — Coconut's storage-cost claim
+made real on disk and in the tiered leaf cache.  Versions 1/2 (full-byte
+codes, fixed-width keys placed first in the column chain) remain fully
+readable: :meth:`Segment.open` detects the version and the ``keys`` /
+``codes`` properties present the same decoded view either way, so every
+consumer — and every search answer — is version-agnostic.
 
 Every column is 64-byte aligned and carries a crc32.  The header embeds
 the ``SummaryConfig`` so a segment is self-describing; the footer is
 written *last*, so a file without a valid footer is an interrupted write
 and is discarded during recovery (see :mod:`repro.storage.store`).
 
-Reading is zero-copy: :class:`Segment` exposes each column as an
-``np.memmap``, and :func:`exact_search_mmap` streams the code column
-through the existing mindist kernels chunk-wise, charging the *actual*
-bytes touched to :class:`repro.core.metrics.IOStats` — the paper's I/O
-accounting finally measures real I/O instead of a model.
+Reading is zero-copy for the fixed columns: :class:`Segment` exposes each
+as an ``np.memmap`` (packed columns behind thin decoding views), and
+:func:`exact_search_mmap` streams the code column through the existing
+mindist kernels chunk-wise, charging the *actual* bytes touched to
+:class:`repro.core.metrics.IOStats` — the paper's I/O accounting finally
+measures real I/O instead of a model.
 """
 from __future__ import annotations
 
@@ -48,17 +59,21 @@ import numpy as np
 
 from ..core import summarization as S
 from ..core.metrics import IOStats
+from .packing import (PackedCodes, PackedKeys, encode_keys, pack_codes,
+                      packed_code_width)
 
 __all__ = ["Segment", "SegmentWriter", "write_segment",
            "exact_search_mmap", "SegmentFormatError",
-           "MAGIC", "FOOTER_MAGIC", "HEADER_SIZE", "FOOTER_SIZE"]
+           "MAGIC", "FOOTER_MAGIC", "HEADER_SIZE", "FOOTER_SIZE",
+           "VERSION", "LEGACY_VERSIONS"]
 
 MAGIC = b"COCOSEG1"
 FOOTER_MAGIC = b"COCOFIN1"
 HEADER_SIZE = 512
 FOOTER_SIZE = 20
 _ALIGN = 64
-VERSION = 1
+VERSION = 3                 # packed codes + delta/varint keys
+LEGACY_VERSIONS = (1, 2)    # full-byte codes, fixed-width keys
 
 # flags
 F_MATERIALIZED = 1 << 0    # raw block is co-sorted with the keys
@@ -92,13 +107,23 @@ def _align(off: int) -> int:
 
 
 def _layout(n: int, cfg: S.SummaryConfig, leaf_size: int,
-            has_ts: bool, has_raw: bool, has_ids: bool = False) -> dict:
+            has_ts: bool, has_raw: bool, has_ids: bool = False,
+            version: int = VERSION) -> dict:
     """Column name -> (offset, nbytes, shape).  Deterministic given the
-    header fields, so the writer can place columns before any data exists."""
+    header fields, so the writer can place columns before any data exists.
+
+    Format v3 places the variable-length keys blob *after* the fixed
+    columns: its entry carries ``(None, None, shape)`` here and the real
+    ``(offset, nbytes)`` lives in the header's column table (written at
+    finalize, once the encoded size is known).  ``__var__`` marks where
+    that blob starts; for legacy versions the keys column sits first in
+    the fixed chain exactly as v1 wrote it.
+    """
     w, nw, L = cfg.segments, cfg.n_words, cfg.series_len
     n_fences = -(-n // leaf_size) if n else 0
+    code_w = packed_code_width(w, cfg.bits) if version >= 3 else w
     shapes = {
-        "keys": (n, nw), "codes": (n, w), "paas": (n, w),
+        "keys": (n, nw), "codes": (n, code_w), "paas": (n, w),
         "offsets": (n,), "timestamps": (n,) if has_ts else None,
         "raw": (n, L) if has_raw else None,
         "fences": (n_fences, nw),
@@ -110,12 +135,19 @@ def _layout(n: int, cfg: S.SummaryConfig, leaf_size: int,
         if shape is None:
             out[name] = (0, 0, None)
             continue
+        if name == "keys" and version >= 3:
+            out[name] = (None, None, shape)
+            continue
         nbytes = int(np.prod(shape, dtype=np.int64)) * \
             np.dtype(_DTYPES[name]).itemsize
         off = _align(off)
         out[name] = (off, nbytes, shape)
         off += nbytes
-    out["__footer__"] = (_align(off), FOOTER_SIZE, None)
+    out["__var__"] = (_align(off), 0, None)
+    # v3's footer lands after the keys blob — position resolved at
+    # finalize (writer) / from the header's keys entry (reader)
+    out["__footer__"] = ((None if version >= 3 else _align(off)),
+                         FOOTER_SIZE, None)
     return out
 
 
@@ -128,15 +160,25 @@ class SegmentWriter:
     sequentially.  The header is written twice: a zeroed placeholder first
     (an interrupted write is therefore unreadable), the real one at
     :meth:`finalize` after the footer, then fsync.
+
+    Writes format v3 by default (packed codes, delta/varint keys);
+    ``version=1`` reproduces the legacy full-byte layout byte for byte
+    (migration tests build old-format fixtures through it).  ``append``
+    accepts codes either full-width ``[m, w]`` (packed here) or already
+    packed ``[m, ceil(w*b/8)]`` (copied verbatim — the external-sort merge
+    path, which never needs the decoded bytes).
     """
 
     def __init__(self, path: str, cfg: S.SummaryConfig, n: int, *,
                  leaf_size: int = 256, materialized: bool = True,
                  has_timestamps: bool = False, has_raw: bool = True,
                  has_ids: bool = False,
-                 io: Optional[IOStats] = None):
+                 io: Optional[IOStats] = None,
+                 version: int = VERSION):
         if materialized and not has_raw:
             raise ValueError("materialized segment requires the raw block")
+        if version != VERSION and version not in LEGACY_VERSIONS:
+            raise ValueError(f"unwritable segment version {version}")
         self.path = path
         self.cfg = cfg
         self.n = int(n)
@@ -146,11 +188,14 @@ class SegmentWriter:
         self.has_raw = bool(has_raw)
         self.has_ids = bool(has_ids)
         self.io = io
+        self.version = int(version)
         self._layout = _layout(self.n, cfg, self.leaf_size,
-                               self.has_ts, self.has_raw, self.has_ids)
+                               self.has_ts, self.has_raw, self.has_ids,
+                               version=self.version)
         self._pos = {name: 0 for name in _COLUMNS}   # rows written per col
         self._crc = {name: 0 for name in _COLUMNS}
         self._fences: list[np.ndarray] = []
+        self._key_parts: list[np.ndarray] = []       # v3: buffered keys
         self._f = open(path, "w+b")
         self._f.write(b"\0" * HEADER_SIZE)
 
@@ -177,6 +222,16 @@ class SegmentWriter:
             self.io.write_bytes(len(buf))
             self.io.seq_write(len(arr))
 
+    def _put_codes(self, codes: np.ndarray) -> None:
+        """Route codes through the packer when the target layout packs."""
+        codes = np.asarray(codes)
+        if self.version >= 3:
+            w = self.cfg.segments
+            pw = packed_code_width(w, self.cfg.bits)
+            if codes.ndim == 2 and codes.shape[1] == w and pw != w:
+                codes = pack_codes(codes, self.cfg.bits)
+        self._put("codes", codes)
+
     def append(self, keys: np.ndarray, codes: np.ndarray, paas: np.ndarray,
                offsets: np.ndarray,
                timestamps: Optional[np.ndarray] = None,
@@ -188,9 +243,17 @@ class SegmentWriter:
         materialized; for non-materialized segments the original-order raw
         block is streamed separately via :meth:`append_raw`.
         """
+        keys = np.ascontiguousarray(keys, np.uint32)
         start = self._pos["keys"]
-        self._put("keys", keys)
-        self._put("codes", codes)
+        if self.version >= 3:
+            if start + len(keys) > self.n:
+                raise ValueError(
+                    f"keys: {start + len(keys)} rows > n={self.n}")
+            self._key_parts.append(keys)
+            self._pos["keys"] = start + len(keys)
+        else:
+            self._put("keys", keys)
+        self._put_codes(codes)
         self._put("paas", paas)
         self._put("offsets", offsets)
         if self.has_ts:
@@ -209,8 +272,7 @@ class SegmentWriter:
         idx = np.arange(start, start + len(keys))
         mask = idx % self.leaf_size == 0
         if mask.any():
-            self._fences.append(
-                np.ascontiguousarray(keys, np.uint32)[mask])
+            self._fences.append(keys[mask])
 
     def append_raw(self, rows: np.ndarray) -> None:
         """Append original-order raw rows (non-materialized segments)."""
@@ -231,6 +293,22 @@ class SegmentWriter:
         fences = (np.concatenate(self._fences) if self._fences
                   else np.zeros((0, self.cfg.n_words), np.uint32))
         self._put("fences", fences)
+        if self.version >= 3:
+            keys = (np.concatenate(self._key_parts) if self._key_parts
+                    else np.zeros((0, self.cfg.n_words), np.uint32))
+            blob = encode_keys(keys, self.leaf_size)
+            buf = blob.tobytes()
+            var_off = self._layout["__var__"][0]
+            self._f.seek(var_off)
+            self._f.write(buf)
+            self._crc["keys"] = zlib.crc32(buf)
+            self._layout["keys"] = (var_off, len(buf),
+                                    self._layout["keys"][2])
+            self._layout["__footer__"] = (_align(var_off + len(buf)),
+                                          FOOTER_SIZE, None)
+            if self.io is not None:
+                self.io.write_bytes(len(buf))
+                self.io.seq_write(len(keys))
         header = self._header_bytes()
         head_crc, = struct.unpack_from("<I", header, 8)
         foot_off = self._layout["__footer__"][0]
@@ -257,7 +335,7 @@ class SegmentWriter:
                  | (F_HAS_IDS if self.has_ids else 0))
         n_fences = self._layout["fences"][2][0]
         head = bytearray(HEADER_SIZE)
-        struct.pack_into(_HEAD_FMT, head, 0, MAGIC, 0, VERSION, flags,
+        struct.pack_into(_HEAD_FMT, head, 0, MAGIC, 0, self.version, flags,
                          self.n, self.cfg.series_len, self.cfg.segments,
                          self.cfg.bits, self.leaf_size, self.cfg.n_words,
                          n_fences)
@@ -273,7 +351,8 @@ class SegmentWriter:
         return bytes(head)
 
 
-def write_segment(path: str, tree, *, io: Optional[IOStats] = None) -> None:
+def write_segment(path: str, tree, *, io: Optional[IOStats] = None,
+                  version: int = VERSION) -> None:
     """Persist an in-memory ``CoconutTree`` as one segment file.
 
     One large sequential write per column — the O(N/B) sequential-write
@@ -285,7 +364,7 @@ def write_segment(path: str, tree, *, io: Optional[IOStats] = None) -> None:
     w = SegmentWriter(path, tree.cfg, tree.n, leaf_size=tree.leaf_size,
                       materialized=tree.materialized,
                       has_timestamps=has_ts, has_raw=has_raw,
-                      has_ids=has_ids, io=io)
+                      has_ids=has_ids, io=io, version=version)
     try:
         w.append(np.asarray(tree.keys), np.asarray(tree.codes),
                  np.asarray(tree.paas), np.asarray(tree.offsets),
@@ -316,6 +395,11 @@ class Segment:
     columns: dict                    # name -> np.memmap (or None)
     column_crcs: dict                # name -> stored crc32
     nbytes: int                      # file size on disk
+    version: int = VERSION
+    _keys_view: Optional[PackedKeys] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _codes_view: Optional[PackedCodes] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @classmethod
     def open(cls, path: str) -> "Segment":
@@ -333,7 +417,7 @@ class Segment:
             raise SegmentFormatError(f"{path}: bad magic {magic!r}")
         if zlib.crc32(head[12:]) != crc:
             raise SegmentFormatError(f"{path}: header checksum mismatch")
-        if version != VERSION:
+        if version != VERSION and version not in LEGACY_VERSIONS:
             raise SegmentFormatError(f"{path}: unknown version {version}")
         cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
         if cfg.n_words != nw:
@@ -342,7 +426,8 @@ class Segment:
         cols, crcs = {}, {}
         lay = _layout(n, cfg, leaf,
                       bool(flags & F_HAS_TS), bool(flags & F_HAS_RAW),
-                      bool(flags & F_HAS_IDS))
+                      bool(flags & F_HAS_IDS), version=version)
+        keys_end = 0
         for name in _COLUMNS:
             off, nbytes, col_crc = struct.unpack_from(_COL_FMT, head, pos)
             pos += struct.calcsize(_COL_FMT)
@@ -352,6 +437,18 @@ class Segment:
                     raise SegmentFormatError(
                         f"{path}: unexpected {name} column")
                 cols[name] = None
+                continue
+            if name == "keys" and version >= 3:
+                # variable-length blob: the header's (offset, nbytes) is
+                # authoritative, anchored at the deterministic var start
+                if off != lay["__var__"][0] or off + nbytes > size:
+                    raise SegmentFormatError(
+                        f"{path}: keys layout mismatch")
+                crcs[name] = col_crc
+                cols[name] = (np.memmap(path, dtype=np.uint8, mode="r",
+                                        offset=off, shape=(nbytes,))
+                              if nbytes else np.zeros(0, np.uint8))
+                keys_end = off + nbytes
                 continue
             if (off, nbytes) != (want_off, want_bytes):
                 raise SegmentFormatError(
@@ -364,7 +461,8 @@ class Segment:
             else:
                 cols[name] = np.memmap(path, dtype=_DTYPES[name],
                                        mode="r", offset=off, shape=shape)
-        foot_off = lay["__footer__"][0]
+        foot_off = (_align(keys_end) if version >= 3
+                    else lay["__footer__"][0])
         if foot_off + FOOTER_SIZE > size:
             raise SegmentFormatError(f"{path}: missing footer "
                                      "(interrupted write)")
@@ -375,18 +473,49 @@ class Segment:
         if fmagic != FOOTER_MAGIC or fn != n or fcrc != crc:
             raise SegmentFormatError(f"{path}: bad footer "
                                      "(interrupted write)")
-        return cls(path=path, cfg=cfg, n=n, leaf_size=leaf,
-                   materialized=bool(flags & F_MATERIALIZED),
-                   columns=cols, column_crcs=crcs, nbytes=size)
+        seg = cls(path=path, cfg=cfg, n=n, leaf_size=leaf,
+                  materialized=bool(flags & F_MATERIALIZED),
+                  columns=cols, column_crcs=crcs, nbytes=size,
+                  version=version)
+        if version >= 3:
+            seg._keys_view = PackedKeys(cols["keys"], n, nw, leaf)
+            seg._codes_view = PackedCodes(cols["codes"], w, b)
+        return seg
 
     # ------------------------------------------------------------ column views
     @property
-    def keys(self) -> np.memmap:
-        return self.columns["keys"]
+    def keys(self):
+        """Decoded ``[N, n_words]`` uint32 view (indexable like a memmap;
+        v3 decodes leaf-at-a-time through :class:`PackedKeys`)."""
+        return self._keys_view if self.version >= 3 else \
+            self.columns["keys"]
 
     @property
-    def codes(self) -> np.memmap:
-        return self.columns["codes"]
+    def codes(self):
+        """Decoded ``[N, w]`` uint8 view (v3 unpacks on access)."""
+        return self._codes_view if self.version >= 3 else \
+            self.columns["codes"]
+
+    @property
+    def codes_packed(self) -> Optional[np.ndarray]:
+        """Raw packed code storage ``[N, ceil(w*b/8)]`` (None on legacy
+        files) — the zero-decode input of the fused unpack+mindist kernel
+        and the block the leaf cache keeps resident."""
+        return self.columns["codes"] if self.version >= 3 else None
+
+    @property
+    def code_row_bytes(self) -> int:
+        """Stored bytes per code row (what a code read actually costs)."""
+        return (packed_code_width(self.cfg.segments, self.cfg.bits)
+                if self.version >= 3 else self.cfg.segments)
+
+    def keys_leaf_nbytes(self, li: int) -> int:
+        """Stored bytes of one leaf of the keys column."""
+        if self.version >= 3:
+            return self._keys_view.leaf_nbytes(li)
+        s = li * self.leaf_size
+        e = min(s + self.leaf_size, self.n)
+        return (e - s) * self.cfg.n_words * 4
 
     @property
     def paas(self) -> np.memmap:
@@ -440,7 +569,8 @@ class Segment:
 
         The columns are already sorted on disk, so this is a straight
         sequential read — no re-sorting — and searches on the result are
-        bit-identical to the tree that produced the segment.
+        bit-identical to the tree that produced the segment (packed
+        columns decode exactly; pack/unpack is the identity round trip).
         """
         from ..core.tree import CoconutTree
         ts = self.timestamps
@@ -466,10 +596,19 @@ class Segment:
     def iter_sorted(self, batch: int = 8192
                     ) -> Iterator[Tuple[np.ndarray, ...]]:
         """Yield (keys, codes, paas, offsets[, ts][, raw]) batches in key
-        order — the sequential-read side of a k-way merge."""
+        order — the sequential-read side of a k-way merge.
+
+        On v3 files the codes element is the *packed* ``[m, ceil(w*b/8)]``
+        uint8 rows, never a full-width decode: each packed row is
+        independently byte-aligned, so the merge can copy rows verbatim
+        into a new segment (``SegmentWriter.append`` accepts packed rows)
+        and the round trip stays bit-exact with zero decode work.
+        """
+        codes_src = (self.columns["codes"] if self.version >= 3
+                     else self.codes)
         for s in range(0, self.n, batch):
             e = min(s + batch, self.n)
-            out = [np.asarray(self.keys[s:e]), np.asarray(self.codes[s:e]),
+            out = [np.asarray(self.keys[s:e]), np.asarray(codes_src[s:e]),
                    np.asarray(self.paas[s:e]),
                    np.asarray(self.offsets[s:e])]
             out.append(None if self.timestamps is None
@@ -479,6 +618,8 @@ class Segment:
             yield tuple(out)
 
     def close(self) -> None:
+        self._keys_view = None
+        self._codes_view = None
         for name, mm in list(self.columns.items()):
             if isinstance(mm, np.memmap):
                 del mm

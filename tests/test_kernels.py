@@ -99,6 +99,68 @@ def test_mindist_batch_kernel(n, L, w, b, nq):
                                    rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("n,L,w,b", SWEEP)
+def test_unpack_codes_kernel_roundtrip(n, L, w, b):
+    """The device-side unpacker inverts the v3 storage packer exactly
+    (bit-for-bit), including the b == 8 identity degenerate."""
+    from repro.storage.packing import pack_codes, packed_code_width
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    _, codes = S.summarize(x, cfg)
+    codes_np = np.asarray(codes, np.uint8)
+    packed = pack_codes(codes_np, b)
+    assert packed.shape == (n, packed_code_width(w, b))
+    out = ref.unpack_codes_ref(jnp.asarray(packed), w=w, b=b)
+    assert np.array_equal(np.asarray(out), codes_np)
+
+
+@pytest.mark.parametrize("n,L,w,b", SWEEP)
+@pytest.mark.parametrize("nq", [1, 5])
+def test_unpack_mindist_kernel(n, L, w, b, nq):
+    """Fused unpack+mindist over packed rows: Pallas (interpret) vs the
+    fused oracle, and the fused oracle vs the plain batched oracle on
+    the decoded rows — the parity the executor's packed fast path
+    rests on."""
+    from repro.kernels.unpack_mindist import unpack_mindist_batch_pallas
+    from repro.storage.packing import pack_codes
+    cfg = S.SummaryConfig(series_len=L, segments=w, bits=b)
+    x = _data(n, L)
+    _, codes = S.summarize(x, cfg)
+    packed = jnp.asarray(pack_codes(np.asarray(codes, np.uint8), b))
+    q_paas = S.paa(_data(nq, L, seed=3), w)
+    lower = jnp.nan_to_num(S.region_bounds(b)[0], neginf=-1e30)
+    upper = jnp.nan_to_num(S.region_bounds(b)[1], posinf=1e30)
+    scale = L / w
+    m_k = unpack_mindist_batch_pallas(q_paas, packed, lower, upper,
+                                      w=w, b=b, scale=scale,
+                                      block_n=128, interpret=True)
+    m_r = ref.mindist_batch_packed_ref(q_paas, packed, lower, upper,
+                                       scale=scale, w=w, b=b)
+    assert m_k.shape == (nq, n)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-5)
+    # the unpack is exact, so the fused oracle is BIT-equal to the
+    # plain oracle on the decoded rows
+    m_u = ref.mindist_batch_ref(q_paas, codes, lower, upper, scale)
+    assert np.array_equal(np.asarray(m_r), np.asarray(m_u))
+
+
+def test_mindist_batch_packed_dispatch_modes_agree():
+    """ops.mindist_batch_packed equals ops.mindist_batch on the decoded
+    column in every dispatch mode (the Partition-level contract)."""
+    from repro.storage.packing import pack_codes
+    cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+    x = _data(200, 64)
+    paa, codes = S.summarize(x, cfg)
+    packed = jnp.asarray(pack_codes(np.asarray(codes, np.uint8), 4))
+    q_paas = paa[:4]
+    want = ops.mindist_batch(q_paas, codes, cfg, mode="jnp")
+    for mode in ("jnp", "interpret"):
+        got = ops.mindist_batch_packed(q_paas, packed, cfg, mode=mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_mindist_batch_dispatch_modes_agree():
     cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
     x = _data(200, 64)

@@ -630,6 +630,101 @@ def test_gini():
     assert 0.0 < gini([1, 2, 3, 4]) < 0.5
 
 
+# ------------------------------------------------------- tiered cache metrics
+
+def test_cache_metrics_eagerly_registered_in_exposition(obs):
+    """Satellite: constructing a TieredLeafStore registers the FULL
+    ``cache.*`` family up front, so the first /metrics scrape already
+    carries every series (no flaky first-touch registration)."""
+    from repro.obs.httpd import prom_name, render_prometheus
+    from repro.storage.tiers import TieredLeafStore
+    TieredLeafStore(1 << 20)
+    names = set(obs.snapshot())
+    want = {f"cache.{c}" for c in (
+        "hits", "misses", "bytes_saved", "promotions", "evictions",
+        "insertions", "result_hits", "result_misses",
+        "resident_bytes", "entries", "device_bytes")}
+    assert want <= names
+    text = render_prometheus(obs.describe())
+    for n in sorted(want):
+        assert f"# TYPE {prom_name(n)} " in text, n
+
+
+def test_cache_hits_charge_bytes_saved_not_io(tmp_path, obs):
+    """Satellite acceptance: the two byte currencies never mix.  A leaf
+    served from the cache charges NOTHING to ``io.bytes_read`` and
+    credits the identical stored-byte figure to ``cache.bytes_saved`` —
+    so a warm replay of the same scan satisfies
+    ``warm_io + bytes_saved == cold_io`` exactly."""
+    from repro.storage import SegmentStore
+    from repro.storage.tiers import TieredLeafStore
+    tiers = TieredLeafStore(8 << 20)
+    raw = _data(2048)
+    eng = CoconutLSM(CFG, buffer_capacity=2048, leaf_size=64,
+                     store=SegmentStore(str(tmp_path / "lsm")),
+                     tiers=tiers)
+    eng.insert(raw)
+    eng.flush()
+    q = raw[:4] + np.float32(0.25)
+    # bypass the result cache so the replay re-runs the identical scan
+    tiers.result_get = lambda key: None
+    io0 = eng.io.bytes_read
+    d0, o0, _ = eng.search_exact_batch(q, k=3)
+    io_cold = eng.io.bytes_read - io0
+    saved0 = tiers.bytes_saved
+    assert tiers.misses > 0 and io_cold > 0
+    d1, o1, i1 = eng.search_exact_batch(q, k=3)
+    io_warm = eng.io.bytes_read - io0 - io_cold
+    saved = tiers.bytes_saved - saved0
+    np.testing.assert_array_equal(d1, d0)      # same answer bits
+    np.testing.assert_array_equal(o1, o0)
+    assert tiers.hits > 0 and saved > 0
+    # identical scan on both passes: the warm io charge is the cold
+    # charge minus exactly what the cache credited, minus the fence
+    # column the reused snapshot partition reads only once
+    seg = eng.runs[0].seg_handle
+    n_leaves = -(-seg.n // seg.leaf_size)
+    assert int(i1["leaves_scanned"]) == n_leaves
+    fence_bytes = (seg.fences.nbytes
+                   + np.asarray(seg.keys[seg.n - 1]).nbytes)
+    # at minimum every packed code leaf came from the cache
+    assert saved >= seg.n * seg.code_row_bytes
+    assert io_warm + saved == io_cold - fence_bytes
+    # the registry mirrors this store's counter exactly
+    assert obs.snapshot()["cache.bytes_saved"] == tiers.bytes_saved
+
+
+def test_analytics_certifies_with_result_cache_hits(tmp_path, obs):
+    """Satellite: a result-cache hit logs a probe record WITHOUT stats
+    and increments no ``query.*`` registry counters, so the analytics
+    gate's bit-exact log-vs-registry certification still passes on a
+    workload with cache hits."""
+    from repro.obs import describe_metrics
+    from repro.obs.analytics import WorkloadAnalyzer, iter_query_log
+    from repro.storage import SegmentStore
+    from repro.storage.tiers import TieredLeafStore
+    log = QueryLog(str(tmp_path / "qlog"))
+    install_query_log(log)
+    tiers = TieredLeafStore(8 << 20)
+    eng = CoconutLSM(CFG, buffer_capacity=1024, leaf_size=64,
+                     store=SegmentStore(str(tmp_path / "lsm")),
+                     tiers=tiers)
+    eng.insert(_data(1024))
+    eng.flush()
+    q = _data(4, seed=5)
+    d0, o0, _ = eng.search_exact_batch(q, k=3)
+    d1, o1, _ = eng.search_exact_batch(q, k=3)   # result-cache hit
+    np.testing.assert_array_equal(d1, d0)
+    np.testing.assert_array_equal(o1, o0)
+    assert tiers.result_cache.hits >= 1
+    log.close()
+    ana = WorkloadAnalyzer().feed_all(
+        iter_query_log(str(tmp_path / "qlog")))
+    prof = ana.profile()
+    assert prof["complete"] and prof["records"] == 2
+    assert ana.check_against(describe_metrics()) == []
+
+
 # --------------------------------------------------------------------- health
 
 def test_health_monitor_transitions_and_events(tmp_path, obs):

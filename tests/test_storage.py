@@ -385,6 +385,113 @@ def test_pre_ids_store_upgrades_on_open(tmp_path, data):
     assert len(np.unique(all_ids)) == len(all_ids) == N
 
 
+# ------------------------------------------------- segment format migration
+
+def test_v2_segment_opens_bit_identical(tmp_path, data, tree):
+    """Satellite: a legacy v2 segment (full-byte codes, fixed-width
+    keys) opens under the v3 reader with bit-identical columns AND
+    bit-identical search answers to the same tree written as v3."""
+    raw, queries = data
+    paths = {}
+    for ver in (2, 3):
+        paths[ver] = str(tmp_path / f"t-v{ver}.coco")
+        write_segment(paths[ver], tree, version=ver)
+    s2, s3 = Segment.open(paths[2]), Segment.open(paths[3])
+    try:
+        assert s2.version == 2 and s3.version == 3
+        s2.verify()
+        s3.verify()
+        for seg in (s2, s3):
+            np.testing.assert_array_equal(np.asarray(seg.keys),
+                                          np.asarray(tree.keys))
+            np.testing.assert_array_equal(np.asarray(seg.codes),
+                                          np.asarray(tree.codes))
+        # the packed layout is strictly smaller on disk (b=4: 2 symbols
+        # per byte; sorted neighbours share key words)
+        assert (s3.columns["keys"].nbytes + s3.columns["codes"].nbytes) \
+            < (s2.columns["keys"].nbytes + s2.columns["codes"].nbytes)
+        q = np.asarray(queries)
+        d2, off2, _ = exact_search_mmap(s2, q, k=3)
+        d3, off3, _ = exact_search_mmap(s3, q, k=3)
+        np.testing.assert_array_equal(d3, d2)        # BIT identical
+        np.testing.assert_array_equal(off3, off2)
+    finally:
+        s2.close()
+        s3.close()
+
+
+def test_v3_iter_sorted_yields_packed_views(tmp_path, tree):
+    """``iter_sorted`` on a v3 file yields the *packed* code rows (no
+    full-width uint8 decode per batch); unpacking them recovers the
+    decoded column bit-for-bit."""
+    from repro.storage.packing import packed_code_width, unpack_codes
+    path = str(tmp_path / "t.coco")
+    T.save(tree, path)
+    seg = Segment.open(path)
+    try:
+        assert seg.version == 3
+        w, b = CFG.segments, CFG.bits
+        pw = packed_code_width(w, b)
+        assert pw < w                      # b=4 genuinely packs
+        s = 0
+        for batch in seg.iter_sorted(batch=512):
+            codes = batch[1]
+            assert codes.dtype == np.uint8
+            assert codes.shape[1] == pw    # packed, not decoded
+            np.testing.assert_array_equal(
+                unpack_codes(codes, w, b),
+                np.asarray(seg.codes[s:s + len(codes)]))
+            s += len(codes)
+        assert s == seg.n
+    finally:
+        seg.close()
+
+
+@pytest.mark.disk
+def test_mixed_version_lsm_compacts_to_v3(tmp_path, data):
+    """A store holding a committed v2 segment keeps serving identical
+    answers after reopen, and the first leveling merge that consumes it
+    rewrites everything as v3 — a mixed v2/v3 store compacts clean."""
+    raw, queries = data
+    raw_np = np.asarray(raw)
+    store = SegmentStore(str(tmp_path / "lsm"))
+    old = T.build(raw[: N // 2], CFG, leaf_size=64,
+                  timestamps=jnp.arange(N // 2))
+    path = store.new_segment_path()
+    write_segment(path, old, version=2)
+    f = os.path.basename(path)
+    # committed at level 0 so the very first flush pairs with it
+    store.commit_manifest(SegmentStore.manifest_for(
+        CFG, [{"file": f, "level": 0, "t_min": 0, "t_max": N // 2 - 1}],
+        clock=N // 2, mode="btp", buffer_capacity=512, leaf_size=64,
+        size_ratio=2, materialized=True, merges=0, wal_start=N // 2))
+    seg = Segment.open(path)
+    assert seg.version == 2
+    seg.close()
+
+    re = CoconutLSM.open(store)
+    # the v2 run serves correct answers through the v3 reader
+    d0, _, _ = re.search_exact_batch(np.asarray(queries), k=1)
+    bf_half = np.asarray(S.euclidean_sq_batch(
+        jnp.asarray(queries), jnp.asarray(raw_np[: N // 2]))).min(axis=1)
+    np.testing.assert_allclose(d0[:, 0], bf_half, rtol=1e-5, atol=1e-3)
+    re.insert(raw_np[N // 2:])             # flushes write v3; the merge
+    re.flush()                             # consumes the v2 run
+    re.check_invariants()
+    assert re.n == N
+    live = store.segment_files()
+    assert f not in live                   # the v2 file was retired
+    for name in live:
+        seg = Segment.open(os.path.join(str(tmp_path / "lsm"), name))
+        assert seg.version == 3
+        seg.close()
+    # the compacted engine matches brute force over the full dataset
+    d1, _, _ = re.search_exact_batch(np.asarray(queries), k=1)
+    for i in range(NQ):
+        bf = float(np.asarray(S.euclidean_sq(queries[i], raw)).min())
+        assert abs(float(d1[i, 0]) - bf) < 1e-3
+
+
 def test_nonmaterialized_lsm_roundtrip(tmp_path, data):
     raw, queries = data
     store = SegmentStore(str(tmp_path / "lsm"))

@@ -1,0 +1,257 @@
+"""Tiered leaf store: cache policy units + staleness under mutation.
+
+Policy units pin the :class:`ClockCache` second-chance semantics (byte
+budget, group invalidation, eviction callback), the
+:class:`TieredLeafStore` hit/promotion accounting, and the
+:class:`QueryResultCache` LRU bound.  The two mutation tests are the
+tentpole's safety bar: a result cache keyed by the engine's data epoch
+must NEVER serve an answer computed against an older view — neither
+under concurrent ingest+flush on one engine, nor across a sharded
+rebalance that retires a whole generation of segment files.
+"""
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import keys as K, summarization as S
+from repro.core.lsm import CoconutLSM
+from repro.data.series import random_walk
+from repro.distributed.router import batch_keys
+from repro.distributed.sharded_lsm import ShardedCoconutLSM
+from repro.storage import SegmentStore
+from repro.storage.cache import ClockCache, QueryResultCache
+from repro.storage.tiers import TieredLeafStore
+
+CFG = S.SummaryConfig(series_len=64, segments=8, bits=4)
+
+
+def _data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, CFG.series_len)).astype(np.float32)
+
+
+def _blk(nbytes, fill=1):
+    return np.full(nbytes, fill, np.uint8)
+
+
+# -------------------------------------------------------------- clock cache
+
+def test_clock_cache_budget_and_second_chance():
+    evicted = []
+    c = ClockCache(300, on_evict=lambda k, e: evicted.append(k))
+    for i in range(3):
+        c.put(("s", i), _blk(100), 100)
+    assert len(c) == 3 and c.resident_bytes == 300
+    # every fresh entry is referenced, so the first sweep's rotation
+    # clears all ref bits and evicts the oldest
+    c.put(("s", 3), _blk(100), 100)
+    assert ("s", 0) not in c and evicted == [("s", 0)]
+    # second chance: re-touch 2 — the next sweep passes it over and
+    # takes the older untouched 1
+    assert c.get(("s", 2)) is not None
+    c.put(("s", 4), _blk(100), 100)
+    assert evicted == [("s", 0), ("s", 1)]
+    assert ("s", 2) in c
+    assert c.resident_bytes == 300 and c.evictions == 2
+    # re-putting an existing key replaces it without double counting
+    c.put(("s", 4), _blk(100, fill=7), 100)
+    assert c.resident_bytes == 300
+    assert c.get(("s", 4)).value[0] == 7
+
+
+def test_clock_cache_refuses_oversized_and_counts_touches():
+    c = ClockCache(100)
+    assert c.put(("s", 0), _blk(101), 101) is None      # > whole budget
+    ent = c.put(("s", 1), _blk(10), 10)
+    assert ent.touches == 1
+    for _ in range(3):
+        c.get(("s", 1))
+    assert c.get(("s", 1)).touches == 5
+
+
+def test_clock_cache_group_invalidation():
+    evicted = []
+    c = ClockCache(1 << 20, on_evict=lambda k, e: evicted.append(k))
+    for seg in ("a", "b"):
+        for li in range(4):
+            c.put((seg, "codes", li), _blk(8), 8)
+    assert c.invalidate_group("a") == 4
+    assert len(c) == 4 and len(evicted) == 4
+    assert all(k[0] == "a" for k in evicted)
+    assert ("b", "codes", 0) in c
+    assert c.invalidate_group("a") == 0                 # idempotent
+    c.clear()
+    assert len(c) == 0 and c.resident_bytes == 0
+
+
+# ------------------------------------------------------------- result cache
+
+def test_query_result_cache_lru_bound():
+    rc = QueryResultCache(max_entries=2)
+    rc.put(("a",), 1)
+    rc.put(("b",), 2)
+    assert rc.get(("a",)) == 1          # refresh "a"
+    rc.put(("c",), 3)                   # evicts LRU "b"
+    assert rc.get(("b",)) is None
+    assert rc.get(("a",)) == 1 and rc.get(("c",)) == 3
+    assert rc.hits == 3 and rc.misses == 1
+    assert len(rc) == 2
+
+
+# --------------------------------------------------------- tiered leaf store
+
+def test_tiered_store_hit_miss_and_bytes_saved():
+    t = TieredLeafStore(1 << 20)
+    assert t.get("seg1", "codes", 0, stored_nbytes=64) is None
+    t.admit("seg1", "codes", 0, _blk(256), stored_nbytes=64)
+    blk = t.get("seg1", "codes", 0, stored_nbytes=64)
+    assert blk is not None and blk.nbytes == 256
+    assert t.hits == 1 and t.misses == 1
+    assert t.bytes_saved == 64          # the STORED figure, not resident
+    st = t.stats()
+    assert st["hit_rate"] == 0.5 and st["entries"] == 1
+    assert st["resident_bytes"] == 256
+    t.invalidate("seg1")
+    assert t.get("seg1", "codes", 0, stored_nbytes=64) is None
+
+
+def test_tiered_store_promotes_hot_code_blocks_within_budget():
+    import jax.numpy as jnp
+    t = TieredLeafStore(1 << 20, device_capacity_bytes=300,
+                        promote_touches=2)
+    t.admit("seg1", "codes", 0, _blk(256), stored_nbytes=256)
+    t.admit("seg1", "codes", 1, _blk(256), stored_nbytes=256)
+    t.admit("seg1", "keys", 0, _blk(256), stored_nbytes=256)
+    # second touch crosses promote_touches=2 -> device copy
+    t.get("seg1", "codes", 0, 256)
+    blk = t.get("seg1", "codes", 0, 256)
+    assert isinstance(blk, jnp.ndarray)
+    assert t.promotions == 1 and t.device_bytes == 256
+    # the device budget refuses the second block (256 + 256 > 300)
+    t.get("seg1", "codes", 1, 256)
+    blk2 = t.get("seg1", "codes", 1, 256)
+    assert isinstance(blk2, np.ndarray)
+    assert t.promotions == 1 and t.device_bytes == 256
+    # keys never promote, no matter how hot
+    for _ in range(5):
+        t.get("seg1", "keys", 0, 256)
+    assert isinstance(t.get("seg1", "keys", 0, 256), np.ndarray)
+    # invalidation releases the device budget through on_evict
+    t.invalidate("seg1")
+    assert t.device_bytes == 0
+    assert t.stats()["entries"] == 0
+
+
+def test_tiered_store_clear_resets_both_caches():
+    t = TieredLeafStore(1 << 20)
+    t.admit("seg1", "codes", 0, _blk(64), 64)
+    t.result_put(("k",), (1, 2, {}))
+    assert t.result_get(("k",)) is not None
+    t.clear()
+    assert t.get("seg1", "codes", 0, 64) is None
+    assert t.result_get(("k",)) is None
+
+
+# ------------------------------------------------- staleness under mutation
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(180)
+def test_result_cache_never_serves_stale_under_ingest(tmp_path):
+    """Plant a row identical to the probe query, flush (merges included),
+    and re-probe: the answer must be 0 immediately, every round, while
+    background threads hammer the same query (their replays are the ones
+    a broken epoch key would poison)."""
+    tiers = TieredLeafStore(16 << 20)
+    probe = _data(1, seed=99)            # far from the walk data
+    errors = []
+    stop = threading.Event()
+
+    def hammer(eng):
+        try:
+            while not stop.is_set():
+                d, _, _ = eng.search_exact_batch(probe, k=1)
+                assert d.shape == (1, 1)
+        except Exception as e:           # pragma: no cover
+            errors.append(e)
+
+    with CoconutLSM(CFG, buffer_capacity=256, leaf_size=64,
+                    concurrent=True, max_debt=64,
+                    store=SegmentStore(str(tmp_path / "lsm")),
+                    tiers=tiers) as eng:
+        base = np.asarray(random_walk(jax.random.PRNGKey(0), 512,
+                                      CFG.series_len))
+        eng.insert(base)
+        eng.flush()
+        threads = [threading.Thread(target=hammer, args=(eng,))
+                   for _ in range(2)]
+        for th in threads:
+            th.start()
+        try:
+            # warm the result cache on the pre-plant view
+            d0, _, _ = eng.search_exact_batch(probe, k=1)
+            assert float(d0[0, 0]) > 1e-3           # not present yet...
+            eng.insert(_data(256, seed=0))          # churn -> merges
+            eng.insert(probe)                       # ...plant it
+            eng.flush()
+            d1, _, _ = eng.search_exact_batch(probe, k=1)
+            assert float(d1[0, 0]) <= 1e-6          # fresh view, not cache
+            # keep mutating: every new epoch must still find the row
+            for i in range(1, 3):
+                eng.insert(_data(256, seed=10 + i))
+                eng.flush()
+                d2, _, _ = eng.search_exact_batch(probe, k=1)
+                assert float(d2[0, 0]) <= 1e-6      # still found post-merge
+        finally:
+            stop.set()
+            for th in threads:
+                th.join(timeout=30)
+    assert not errors
+    assert tiers.result_cache.hits > 0   # the cache genuinely served hits
+
+
+@pytest.mark.disk
+def test_sharded_rebalance_with_shared_tiers_stays_fresh(tmp_path):
+    """One TieredLeafStore shared across shards: answers are identical
+    warm vs cold, survive a forced rebalance bit-for-bit (old-generation
+    segment tokens are invalidated), and a row planted after the
+    rebalance is visible immediately."""
+    cfg = S.SummaryConfig(series_len=32, segments=8, bits=4)
+    n = 1600
+    raw = np.asarray(random_walk(jax.random.PRNGKey(0), n, 32))
+    keys = batch_keys(raw, cfg)
+    skewed = raw[K.lexsort_keys_np(keys)]    # all-to-one-shard routing
+    queries = raw[:4] + np.float32(0.3)
+    tiers = TieredLeafStore(32 << 20, promote_touches=2)
+    eng = ShardedCoconutLSM(cfg, shards=2, buffer_capacity=256,
+                            leaf_size=32, data_dir=str(tmp_path),
+                            tiers=tiers)
+    try:
+        for s in range(0, n, 200):
+            eng.insert(skewed[s: s + 200])
+        eng.flush()
+        d0, off0, _ = eng.search_exact_batch(queries, k=2)
+        d_w, off_w, _ = eng.search_exact_batch(queries, k=2)   # warm
+        np.testing.assert_array_equal(d_w, d0)
+        np.testing.assert_array_equal(off_w, off0)
+        assert tiers.hits > 0
+        old_files = {os.path.join(s.store.root, r.segment)
+                     for s in eng._shard_list()
+                     for r in s.runs if r.segment}
+        assert eng.rebalance(force=True)
+        # the old generation's cached leaf blocks are unreachable
+        resident = {k[0] for k in tiers.cache._map}
+        assert not (resident & old_files)
+        d1, off1, _ = eng.search_exact_batch(queries, k=2)
+        np.testing.assert_array_equal(d1, d0)    # same data, same bits
+        np.testing.assert_array_equal(off1, off0)
+        # freshness across the generation swap: plant and find
+        probe = _data(1, seed=7)[:, :32].copy()
+        eng.insert(probe)
+        eng.flush()
+        d2, _, _ = eng.search_exact_batch(probe, k=1)
+        assert float(d2[0, 0]) <= 1e-6
+    finally:
+        eng.close()

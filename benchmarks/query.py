@@ -16,6 +16,12 @@ the whole batch), the throughput lever for serving traffic.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
 import numpy as np
 
 import jax.numpy as jnp
@@ -23,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import keys as K, summarization as S, tree as T
 from repro.kernels import ops
 
-from .common import ROWS, block, cfg_for, dataset, emit, timeit, \
+from .common import ROOT, ROWS, block, cfg_for, dataset, emit, timeit, \
     write_bench
 
 
@@ -159,6 +165,95 @@ def bench_batched_query(n: int = 16000,
                 (i, off_b[i, 0], off_s)
 
 
+def _mesh_sweep_impl(n: int = 64000, nq: int = 64, k: int = 10,
+                     shards: int = 4, *, smoke: bool = False):
+    """QPS vs device count for the device-resident sharded scan: one
+    threaded reference, then the mesh launch at D in {1, 2, 4} devices
+    (``COCONUT_MESH_DEVICES`` caps the scan mesh below the forced host
+    device count, so one 4-device process sweeps the whole curve).
+    Must run under >= 4 devices; answers are parity-checked against the
+    threaded fan-out at every point.  Returns (rows, gates)."""
+    import jax
+    from repro.distributed.sharded_lsm import ShardedCoconutLSM
+    assert jax.device_count() >= 4, jax.device_count()
+    cfg = cfg_for()
+    raw = np.asarray(dataset(n))
+    queries = np.asarray(dataset(nq, seed=11))
+    eng = ShardedCoconutLSM(cfg, shards=shards, buffer_capacity=8192,
+                            leaf_size=64)
+    eng.insert(raw, np.arange(n, dtype=np.int64))
+    eng.flush()
+    rows = []
+    tag = f"n{n}Q{nq}k{k}"
+
+    dt, it, _ = eng.search_exact_batch(queries, k=k,
+                                       scan_mode="threaded")  # warm
+    us_t = timeit(lambda: eng.search_exact_batch(
+        queries, k=k, scan_mode="threaded"), repeat=3)
+    rows.append((f"query/mesh_sweep/threaded/{tag}", us_t,
+                 f"qps={nq / (us_t / 1e6):.1f};shards={shards}"))
+    us_mesh = {}
+    for d in (1, 2, 4):
+        os.environ["COCONUT_MESH_DEVICES"] = str(d)
+        try:
+            eng._mesh_engine = None     # re-pin under the device cap
+            dm, im, inf = eng.search_exact_batch(queries, k=k,
+                                                 scan_mode="mesh")
+            assert inf["scan_mode"] == "mesh", inf
+            assert inf["mesh_devices"] == d, inf
+            np.testing.assert_array_equal(dm, dt)
+            np.testing.assert_array_equal(im, it)
+            us = timeit(lambda: eng.search_exact_batch(
+                queries, k=k, scan_mode="mesh"), repeat=3)
+        finally:
+            del os.environ["COCONUT_MESH_DEVICES"]
+        us_mesh[d] = us
+        rows.append((f"query/mesh_sweep/mesh_d{d}/{tag}", us,
+                     f"qps={nq / (us / 1e6):.1f};devices={d};"
+                     f"speedup={us_t / us:.2f}x"))
+    eng.close()
+    speedup = us_t / us_mesh[4]
+    gates = [{"name": "mesh_vs_threaded_d4", "value": speedup,
+              "min": 1.3}]
+    if smoke:
+        # the scaling claim, asserted at bench time: with >= 2 devices
+        # the one-launch scan must beat the threaded fan-out outright
+        assert us_mesh[2] < us_t, (us_mesh, us_t)
+        assert speedup >= 1.3, (us_mesh, us_t)
+    for name, us, derived in rows:
+        emit(name, us, derived)
+    return rows, gates
+
+
+def bench_mesh_devices(*, smoke: bool = False):
+    """Run the mesh device sweep, re-execing into a 4-forced-host-device
+    child when this process's device topology is already locked smaller
+    (device count is fixed at first jax init)."""
+    import jax
+    if jax.device_count() >= 4:
+        _rows, gates = _mesh_sweep_impl(smoke=smoke)
+        return gates
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out_path = f.name
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env.setdefault("PYTHONPATH", str(ROOT / "src"))
+    cmd = [sys.executable, "-m", "benchmarks.query",
+           "--mesh-sweep-child", out_path] + (["--smoke"] if smoke else [])
+    try:
+        r = subprocess.run(cmd, env=env, cwd=ROOT, capture_output=True,
+                           text=True, timeout=1800)
+        assert r.returncode == 0, \
+            f"mesh sweep child failed\nstdout:\n{r.stdout}" \
+            f"\nstderr:\n{r.stderr}"
+        doc = json.loads(open(out_path).read())
+    finally:
+        os.unlink(out_path)
+    for row in doc["rows"]:
+        emit(row["name"], row["us_per_call"], row["derived"])
+    return doc["gates"]
+
+
 def main(smoke: bool = False) -> None:
     before = len(ROWS)
     if smoke:
@@ -168,9 +263,21 @@ def main(smoke: bool = False) -> None:
     else:
         bench_query()
         bench_batched_query()
-    write_bench("query", payload={"smoke": smoke},
+    # the device-scaling sweep runs in smoke too: its rows are blessed
+    # baseline coverage and its gate (mesh >= 1.3x threaded at 4
+    # devices on the 64k batch probe) is a hard CI check via regress.py
+    gates = bench_mesh_devices(smoke=smoke)
+    write_bench("query", payload={"smoke": smoke, "gates": gates},
                 rows=ROWS[before:])
 
 
 if __name__ == "__main__":
-    main()
+    if "--mesh-sweep-child" in sys.argv:
+        out = sys.argv[sys.argv.index("--mesh-sweep-child") + 1]
+        rows, gates = _mesh_sweep_impl(smoke="--smoke" in sys.argv)
+        with open(out, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": u,
+                                 "derived": d} for n, u, d in rows],
+                       "gates": gates}, f)
+    else:
+        main()

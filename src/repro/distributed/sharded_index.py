@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import keys as K
 from ..core import summarization as S
+from ..kernels import mesh_scan as _mesh
 from .compat import shard_map
 from .samplesort import sharded_sort
 
@@ -126,23 +127,38 @@ def distributed_exact_search_batch(tree: ShardedCoconutTree,
     ts = tree.ts if tree.ts is not None else jnp.zeros(
         tree.keys.shape[0], jnp.float32)
 
+    scale = cfg.series_len / cfg.segments
+    env_lower, env_upper = _mesh._finite_bounds(cfg.bits)
+
     def body(codes, paas, raw, keys, ts_loc):
-        # ONE local lower-bound pass for the whole batch (batched kernel
-        # op shape), amortizing the code stream across all Q queries
-        md = S.mindist_sq_batch(q_paas, codes, cfg)          # [Q, n_loc]
         valid = ~jnp.all(keys == jnp.uint32(0xFFFFFFFF), axis=1)
         if ts_min is not None:
             valid = valid & (ts_loc >= jnp.float32(ts_min))
-        md = jnp.where(valid[None, :], md, jnp.inf)
         if budget is None:
-            # verify ALL unpruned rows (masked ED — static shapes)
-            ed = S.euclidean_sq_batch(q, raw)                # [Q, n_loc]
-            ed = jnp.where(valid[None, :] & (md <= ed), ed, jnp.inf)
-            neg, idx = jax.lax.top_k(-ed, k)                 # [Q, k]
-            cand_d = -neg
-            cand_rows = raw[idx]                             # [Q, k, L]
+            # verify ALL unpruned rows through the shared device-scan
+            # helper (the mesh launch's per-device body): with bound
+            # +inf every valid row stays live — md <= ed always — so
+            # this is the same masked-ED top-k, one formulation shared
+            # with the sharded-LSM mesh path
+            dead = (~valid).astype(jnp.int32)
+            cand_d, idx, _live = _mesh.local_scan_topk(
+                q, q_paas, codes, raw, dead,
+                jnp.full(nq, jnp.inf, jnp.float32),
+                env_lower, env_upper, scale=scale, k=k)
+            cand_rows = raw[jnp.maximum(idx, 0)]             # [Q, k, L]
             certified = jnp.ones(nq, bool)
+            diffk = cand_rows - q[:, None, :]
+            # final bits from the one [Q, k, L] recompute both branches
+            # share — the scan above only SELECTS the candidates, so
+            # budget/no-budget answers stay bit-identical
+            cand_d = jnp.where(jnp.isfinite(cand_d),
+                               jnp.sum(diffk * diffk, axis=-1),
+                               jnp.inf)
         else:
+            # ONE local lower-bound pass for the whole batch (batched
+            # kernel op shape), amortizing the code stream across all Q
+            md = S.mindist_sq_batch(q_paas, codes, cfg)      # [Q, n_loc]
+            md = jnp.where(valid[None, :], md, jnp.inf)
             # verify only the budget best lower bounds per query
             negm, order = jax.lax.top_k(-md, budget)         # [Q, budget]
             rows = raw[order]                                # [Q, B, L]
@@ -153,6 +169,10 @@ def distributed_exact_search_batch(tree: ShardedCoconutTree,
             cand_d = -neg
             cand_rows = jnp.take_along_axis(rows, idx[:, :, None],
                                             axis=1)
+            diffk = cand_rows - q[:, None, :]
+            cand_d = jnp.where(jnp.isfinite(cand_d),
+                               jnp.sum(diffk * diffk, axis=-1),
+                               jnp.inf)
             # certified iff the worst verified lower bound exceeds the
             # best found distance (per query, on this shard)
             certified = (-negm[:, budget - 1]) >= cand_d[:, 0]

@@ -104,14 +104,18 @@ class ShardedCoconutLSM:
                  sample_cap: int = 8192,
                  rebalance_every: int = 0,
                  rebalance_factor: float = 1.5,
-                 tiers=None):
+                 tiers=None,
+                 scan_mode: str = "threaded"):
         """``max_debt`` is the SHARED budget: total outstanding
         flush/merge units across all shards (each shard also keeps it as
         its local cap, which can only be tighter).  ``rebalance_every``
         > 0 checks skew (and possibly migrates) every that-many inserted
         rows; 0 leaves rebalancing to explicit :meth:`rebalance` calls.
         ``data_dir`` makes the engine durable via a ``ShardDirectory``;
-        reopen an existing one with :meth:`open`."""
+        reopen an existing one with :meth:`open`.  ``scan_mode`` picks
+        the default probe policy: ``"threaded"`` (per-shard pipelines)
+        or ``"mesh"`` (one device-resident ``shard_map`` launch, falling
+        back to threaded whenever the batch cannot run on device)."""
         if shards < 1:
             raise ValueError("shards must be >= 1")
         shard_dir = None
@@ -148,7 +152,7 @@ class ShardedCoconutLSM:
                           max_debt=max_debt,
                           rebalance_every=rebalance_every,
                           rebalance_factor=rebalance_factor,
-                          tiers=tiers)
+                          tiers=tiers, scan_mode=scan_mode)
         if shard_dir is not None:
             self._commit_meta()   # reopenable from birth, like CoconutLSM
 
@@ -156,9 +160,20 @@ class ShardedCoconutLSM:
                      generation, clock, next_id, buffer_capacity,
                      leaf_size, size_ratio, mode, materialized, io,
                      concurrent, wal_fsync, max_debt, rebalance_every,
-                     rebalance_factor, tiers=None) -> None:
+                     rebalance_factor, tiers=None,
+                     scan_mode: str = "threaded") -> None:
+        if scan_mode not in ("threaded", "mesh"):
+            raise ValueError(
+                f"scan_mode must be 'threaded' or 'mesh', "
+                f"got {scan_mode!r}")
         self.cfg = cfg
         self.tiers = tiers if shard_dir is not None else None
+        self.scan_mode = scan_mode
+        # device-resident scan engine, built lazily on the first mesh
+        # probe (touching jax device state at construction would break
+        # callers that set XLA_FLAGS between construction and first use)
+        self._mesh_engine = None
+        self._mesh_engine_lock = threading.Lock()
         self.n_shards = len(engines)
         self.mode = mode
         self.buffer_capacity = buffer_capacity
@@ -209,7 +224,8 @@ class ShardedCoconutLSM:
              sample_cap: int = 8192,
              rebalance_every: int = 0,
              rebalance_factor: float = 1.5,
-             tiers=None) -> "ShardedCoconutLSM":
+             tiers=None,
+             scan_mode: str = "threaded") -> "ShardedCoconutLSM":
         """Reopen a persisted sharded index.
 
         Cleans up migration orphans, reopens every shard from its own
@@ -254,7 +270,7 @@ class ShardedCoconutLSM:
                          max_debt=max_debt,
                          rebalance_every=rebalance_every,
                          rebalance_factor=rebalance_factor,
-                         tiers=tiers)
+                         tiers=tiers, scan_mode=scan_mode)
         for e in engines:
             e.advance_clock(clock)
         return obj
@@ -645,7 +661,8 @@ class ShardedCoconutLSM:
                            window: Optional[int] = None,
                            radius_leaves: int = 1,
                            budget=None,
-                           mode: str = "exact"
+                           mode: str = "exact",
+                           scan_mode: Optional[str] = None
                            ) -> Tuple[np.ndarray, np.ndarray, dict]:
         """Batched exact k-NN across shards, cheapest-shard-first.
 
@@ -654,6 +671,16 @@ class ShardedCoconutLSM:
         best seeds every later shard's scan (``bsf=``), and shards whose
         bound cannot beat it are pruned whole.  Answers (distance bits
         AND global ids) are identical for any shard count.
+
+        ``scan_mode`` overrides the engine default per call:
+        ``"mesh"`` routes the batch through the device-resident
+        ``shard_map`` launch (pinned shard columns, one compiled
+        prune+verify+top-k+merge pass; buffers are brute-forced host
+        side first and their k-th distances seed the launch bound), and
+        transparently falls back to the threaded fan-out whenever the
+        batch cannot run on device — budgeted/approx probes, snapshots
+        whose ids/timestamps do not fit the pinned int32 columns, or a
+        pin-budget miss — so answers stay exact either way.
 
         ``budget`` / ``mode="approx"``: the global
         :class:`repro.query.Budget` is *split* across shards — each
@@ -673,6 +700,10 @@ class ShardedCoconutLSM:
         if mode not in ("exact", "approx"):
             raise ValueError(
                 f"mode must be 'exact' or 'approx', got {mode!r}")
+        sm = scan_mode if scan_mode is not None else self.scan_mode
+        if sm not in ("threaded", "mesh"):
+            raise ValueError(
+                f"scan_mode must be 'threaded' or 'mesh', got {sm!r}")
         budget = as_budget(budget)
         approx = budget is not None or mode == "approx"
         if approx and budget is None:
@@ -683,9 +714,152 @@ class ShardedCoconutLSM:
                    queries=nq, k=k, window=window,
                    budget=budget if approx else None,
                    shards=self.n_shards) as rec:
+            if sm == "mesh":
+                eng = self._mesh_engine_get()
+                if approx:
+                    # the budgeted drain is a host-side leaf-frontier
+                    # policy — there is no device twin; take the seam
+                    eng.fallback("approx")
+                else:
+                    out = self._fanout_mesh(queries, rec, k=k,
+                                            window=window)
+                    if out is not None:
+                        return out
             return self._fanout(queries, rec, k=k, window=window,
                                 radius_leaves=radius_leaves,
                                 budget=budget, approx=approx)
+
+    def _mesh_engine_get(self):
+        """The lazily-built :class:`~repro.query.mesh.MeshScanEngine`,
+        subscribed to the tiered store's invalidation feed so segment GC
+        (flush / merge / rebalance) eagerly drops pinned device state."""
+        with self._mesh_engine_lock:
+            if self._mesh_engine is None:
+                from ..query.mesh import MeshScanEngine
+                eng = MeshScanEngine(self.cfg)
+                if self.tiers is not None:
+                    self.tiers.add_invalidation_hook(eng.on_invalidate)
+                self._mesh_engine = eng
+            return self._mesh_engine
+
+    def _fanout_mesh(self, queries: np.ndarray, rec: dict, *, k: int,
+                     window: Optional[int]
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray, dict]]:
+        """One device-resident pass over all shards, or None when the
+        batch must take the threaded seam instead.
+
+        bsf chaining is preserved with the roles flipped: the frozen
+        buffers (never device-resident — they mutate every insert) are
+        brute-forced host-side FIRST with the same ``buffer_topk``
+        kernel the threaded executor uses, and their per-query k-th
+        distances become the launch's strict ``md < bound`` cut — the
+        one-launch analogue of seeding every shard's scan with the
+        merged pool so far.  The launch's answers then merge into the
+        buffer pool with the same stable ``merge_pools``.
+        """
+        from ..query.executor import buffer_topk
+        eng = self._mesh_engine_get()
+        nq = queries.shape[0]
+        snaps, router, epoch = self._snapshots()
+        rec["snapshot_epoch"] = epoch
+        pinned = eng.pin(snaps)
+        if pinned is None:
+            eng.fallback("unpinnable")
+            return None
+        if window is not None and not pinned.has_ts:
+            eng.fallback("no_timestamps")
+            return None
+        ts_min = None
+        if window is not None:
+            ts_min = np.asarray([sn.clock - window for sn in snaps],
+                                np.int64)
+            if ts_min.size and int(ts_min.max()) > np.iinfo(np.int32).max:
+                eng.fallback("window_range")
+                return None
+            ts_min = np.clip(ts_min, np.iinfo(np.int32).min,
+                             np.iinfo(np.int32).max).astype(np.int32)
+        q_paas = np.asarray(S.paa(jnp.asarray(queries),
+                                  self.cfg.segments))
+        stats = T.SearchStats(candidates=0, exact=True, queries=nq)
+        info = {"partitions_touched": 0, "partitions_pruned": 0,
+                "buffer_rows": 0}
+
+        # host-side buffer pool first (its k-th bits seed the launch)
+        buf_rows, buf_ids, buf_per_shard = [], [], [0] * len(snaps)
+        for si, sn in enumerate(snaps):
+            b = sn.buffer
+            if b is None or b.n == 0:
+                continue
+            rows, ids, ts = b.raw, b.ids, b.ts
+            if window is not None:
+                keep = np.nonzero(ts >= (sn.clock - window))[0]
+                rows, ids = rows[keep], ids[keep]
+            if len(rows) == 0:
+                continue
+            buf_rows.append(rows)
+            buf_ids.append(ids)
+            buf_per_shard[si] = len(rows)
+        best_d = np.full((nq, k), np.inf, np.float32)
+        best_off = np.full((nq, k), -1, np.int64)
+        if buf_rows:
+            rows = np.concatenate(buf_rows, axis=0)
+            ids = np.concatenate(buf_ids, axis=0)
+            with _span("buffer", rows=len(rows)):
+                best_d, best_off = buffer_topk(
+                    jnp.asarray(queries), rows, ids, k, io=self.io)
+            stats.buffer_rows = len(rows)
+            info["buffer_rows"] = len(rows)
+            info["partitions_touched"] += sum(
+                1 for n_ in buf_per_shard if n_)
+        bound = best_d[:, -1].copy()
+
+        with _span("mesh_launch", shards=len(snaps),
+                   devices=pinned.layout.n_devices,
+                   sub_shards=pinned.layout.shards_per_device,
+                   queries=nq, rows=sum(pinned.rows)) as msp:
+            d, ids64, counts = eng.launch(pinned, queries, q_paas,
+                                          ts_min, bound, k=k)
+            msp.set(candidates=int(counts.sum()))
+        best_d, best_off = merge_pools(best_d, best_off, d, ids64, k)
+
+        # stats attribution per shard: the launch scans every pinned
+        # leaf (device residency trades the fence skip for zero
+        # host orchestration), so leaves_scanned is the pinned total
+        # and counts carries the per-shard verified rows
+        reg = get_registry()
+        per_query = counts.sum(axis=0).astype(np.int64)
+        for si in range(len(snaps)):
+            if pinned.rows[si] == 0 and buf_per_shard[si] == 0:
+                continue
+            reg.counter(f"shard.s{si}.queries_total").inc(nq)
+            reg.counter(f"shard.s{si}.leaves_scanned_total").inc(
+                int(pinned.leaves[si]))
+        stats.candidates = int(counts.sum()) + stats.buffer_rows
+        stats.candidates_per_query = per_query + stats.buffer_rows
+        stats.leaves_scanned = int(sum(pinned.leaves))
+        stats.leaves_per_query = np.full(
+            nq, stats.leaves_scanned, np.int64)
+        stats.leaves_touched = stats.leaves_scanned
+        stats.partitions_touched = sum(
+            len(sn.runs) for sn in snaps)
+        stats.shards_touched = sum(
+            1 for si in range(len(snaps))
+            if pinned.rows[si] or buf_per_shard[si])
+        info["partitions_touched"] += stats.partitions_touched
+        info.update(candidates=stats.candidates,
+                    candidates_per_query=stats.candidates_per_query,
+                    leaves_per_query=stats.leaves_per_query,
+                    leaves_pruned=stats.leaves_pruned,
+                    leaves_scanned=stats.leaves_scanned,
+                    shards_touched=stats.shards_touched,
+                    shards_pruned=stats.shards_pruned,
+                    stats=stats)
+        info["scan_mode"] = "mesh"
+        info["mesh_devices"] = pinned.layout.n_devices
+        rec["stats"] = stats
+        rec["scan_mode"] = "mesh"
+        rec["mesh_devices"] = pinned.layout.n_devices
+        return best_d, best_off, info
 
     def _fanout(self, queries: np.ndarray, rec: dict, *, k: int,
                 window: Optional[int], radius_leaves: int,

@@ -1,8 +1,12 @@
 """Public, backend-dispatching wrappers for the Coconut kernels.
 
 Dispatch policy (``mode``):
-  * ``"auto"``      — Pallas compiled on TPU, pure-jnp reference elsewhere.
-  * ``"pallas"``    — Pallas compiled (TPU only).
+  * ``"auto"``      — Pallas compiled on accelerators (TPU and GPU),
+                      pure-jnp reference elsewhere; the
+                      ``COCONUT_KERNEL_MODE`` env var overrides the
+                      auto choice (force/disable Pallas without code
+                      changes — explicit ``mode=`` arguments still win).
+  * ``"pallas"``    — Pallas compiled (accelerator only).
   * ``"interpret"`` — Pallas in interpret mode (CPU validation of the TPU
                       kernel body; used by the test suite).
   * ``"jnp"``       — pure-jnp oracle.
@@ -13,6 +17,7 @@ pallas directly.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -36,6 +41,7 @@ _scan_verify_jit = jax.jit(ref.scan_verify_ref,
 _mindist_batch_packed_jit = jax.jit(
     ref.mindist_batch_packed_ref,
     static_argnames=("scale", "w", "b"))
+from . import mesh_scan as _mesh
 from .batch_euclid import batch_euclid_pallas
 from .mindist_batch import mindist_batch_pallas
 from .mindist_scan import mindist_pallas
@@ -47,17 +53,30 @@ from .zorder import zorder_pallas
 __all__ = ["mindist", "mindist_batch", "mindist_batch_packed",
            "sax_summarize", "zorder",
            "batch_euclid", "batch_euclid_multi", "scan_verify",
-           "summarize_and_key"]
+           "mesh_scan", "summarize_and_key"]
 
 # large finite sentinels: TPU tables prefer finite values; any PAA value is
 # within a few sigma, so 1e30 behaves as +/-inf in the bound arithmetic.
 _NEG, _POS = -1e30, 1e30
 
 
+_VALID_MODES = ("pallas", "interpret", "jnp")
+
+
+def _default_mode() -> str:
+    """What ``mode="auto"`` resolves to: the ``COCONUT_KERNEL_MODE`` env
+    override when set (and valid), else Pallas on TPU/GPU, jnp on CPU."""
+    env = os.environ.get("COCONUT_KERNEL_MODE", "").strip().lower()
+    if env in _VALID_MODES:
+        return env
+    return ("pallas" if jax.default_backend() in ("tpu", "gpu")
+            else "jnp")
+
+
 def _resolve(mode: str) -> str:
     if mode != "auto":
         return mode
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return _default_mode()
 
 
 def _finite_bounds(bits: int) -> Tuple[jax.Array, jax.Array]:
@@ -197,6 +216,33 @@ def scan_verify(queries: jax.Array, q_paas: jax.Array, codes: jax.Array,
                                        raw, lower, upper, bound, dead,
                                        scale=scale, k=k,
                                        interpret=(mode == "interpret")))
+
+
+def mesh_scan(queries: jax.Array, q_paas: jax.Array, codes: jax.Array,
+              raw: jax.Array, ids: jax.Array, ts: jax.Array,
+              ts_min, bound: jax.Array, cfg: S.SummaryConfig, *,
+              mesh, axis: str = "shard", k: int = 1,
+              mode: str = "auto"):
+    """Whole-batch device-resident sharded scan: ONE ``shard_map``
+    launch running per-device prune + verify + top-k over every shard's
+    pinned ``[S, cap, ...]`` column stacks, merged on device.
+
+    ``ts_min`` is a per-shard ``[S]`` int32 visibility cut or None (no
+    window filtering compiled in).  Returns (dists ``[Q, k]``, global
+    ids ``[Q, k]`` int32 with -1 padding, counts ``[S, Q]`` int32).
+    On TPU/GPU with one sub-shard per device the per-device body is the
+    fused ``scan_verify`` Pallas kernel; everywhere else it is the jnp
+    twin with identical formulas.  Oracle: ``ref.mesh_scan_ref``.
+    """
+    mode = _resolve(mode)
+    ts_filter = ts_min is not None
+    if ts_min is None:
+        ts_min = jnp.zeros(ids.shape[0], jnp.int32)
+    fn = _mesh.mesh_scan_launch(mesh, axis, cfg, k=k,
+                                ts_filter=ts_filter, mode=mode)
+    with _prof.profiled("mesh_scan") as done:
+        return done(fn(codes, raw, ids, ts, ts_min, queries, q_paas,
+                       bound))
 
 
 def summarize_and_key(x: jax.Array, cfg: S.SummaryConfig,

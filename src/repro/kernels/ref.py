@@ -14,8 +14,9 @@ from ..core import summarization as S
 
 __all__ = ["mindist_ref", "mindist_batch_ref", "sax_summarize_ref",
            "zorder_ref", "batch_euclid_ref", "batch_euclid_multi_ref",
+           "batch_euclid_blocked_ref", "ED_BLOCK",
            "scan_verify_ref", "unpack_codes_ref",
-           "mindist_batch_packed_ref"]
+           "mindist_batch_packed_ref", "mesh_scan_ref"]
 
 
 def mindist_ref(q_paa: jax.Array, codes: jax.Array, lower: jax.Array,
@@ -106,6 +107,34 @@ def batch_euclid_multi_ref(queries: jax.Array,
     return jnp.sum(diff * diff, axis=-1)
 
 
+# rows per blocked-ED step: the naive [Q, N, L] difference tensor is
+# ~1 GB at serving scale and memory bandwidth kills the scan; blocking
+# the row axis keeps each [Q, BLOCK, L] intermediate cache-sized
+# (several times faster on CPU hosts)
+ED_BLOCK = 512
+
+
+def batch_euclid_blocked_ref(queries: jax.Array,
+                             series: jax.Array) -> jax.Array:
+    """``batch_euclid_multi_ref`` computed in fixed [Q, ED_BLOCK, L]
+    row blocks (zero-padded tail, trimmed after).
+
+    Always blocked — even when N <= ED_BLOCK — so the compiled
+    reduction body is one fixed shape and the bits are invariant to N:
+    the same row scanned under any shard/device partitioning (which
+    changes only the local N) produces the same distance word.  That
+    invariance is what lets the mesh launch match the single-device
+    oracle and the sharded index keep shard-count bit-parity.
+    """
+    n = series.shape[0]
+    pad = (-n) % ED_BLOCK
+    sp = jnp.pad(series, ((0, pad), (0, 0)))
+    blocks = sp.reshape(-1, ED_BLOCK, series.shape[-1])
+    out = jax.lax.map(
+        lambda blk: batch_euclid_multi_ref(queries, blk), blocks)
+    return out.transpose(1, 0, 2).reshape(queries.shape[0], -1)[:, :n]
+
+
 def scan_verify_ref(queries: jax.Array, q_paas: jax.Array,
                     codes: jax.Array, raw: jax.Array,
                     lower: jax.Array, upper: jax.Array,
@@ -132,3 +161,41 @@ def scan_verify_ref(queries: jax.Array, q_paas: jax.Array,
     counts = jnp.sum(live, axis=1).astype(jnp.int32)
     union = jnp.sum(jnp.any(live, axis=0)).astype(jnp.int32)
     return d, idx, counts, union
+
+
+def mesh_scan_ref(queries: jax.Array, q_paas: jax.Array,
+                  codes: jax.Array, raw: jax.Array,
+                  ids: jax.Array, ts: jax.Array, ts_min: jax.Array,
+                  bound: jax.Array, lower: jax.Array, upper: jax.Array,
+                  *, scale: float, k: int):
+    """Oracle for the device-resident sharded scan: global top-k over the
+    stacked shard columns, as if every shard lived on one device.
+
+    queries [Q, L], q_paas [Q, w], codes [S, cap, w], raw [S, cap, L],
+    ids [S, cap] int32 (-1 marks padding rows), ts [S, cap] int32,
+    ts_min [S] int32 per-shard visibility cut (use INT32_MIN to disable),
+    bound [Q] per-query strict best-so-far from the buffer pool.
+    Returns (dists [Q, k] inf-padded, global ids [Q, k] int32 with -1
+    padding, counts [S, Q] int32 — rows verified per shard per query).
+
+    The ``shard_map`` launch must match this bit-for-bit: its per-device
+    partial top-k + all-gather merge selects the same distance *values*
+    (no re-arithmetic), so only tie ordering can differ — measure-zero
+    on real-valued series data.
+    """
+    s, cap = ids.shape
+    dead = (ids < 0) | (ts < ts_min[:, None])
+    codes_f = codes.reshape(s * cap, codes.shape[-1])
+    raw_f = raw.reshape(s * cap, raw.shape[-1])
+    dead_f = dead.reshape(s * cap).astype(jnp.int32)
+    md = mindist_batch_ref(q_paas, codes_f, lower, upper, scale)
+    live = (md < bound[:, None]) & (dead_f[None, :] == 0)
+    ed = jnp.where(live, batch_euclid_blocked_ref(queries, raw_f),
+                   jnp.inf)
+    neg, idx = jax.lax.top_k(-ed, k)
+    d = -neg
+    ids_f = ids.reshape(s * cap)
+    out_ids = jnp.where(jnp.isfinite(d), ids_f[idx], -1)
+    counts = jnp.transpose(
+        jnp.sum(live.reshape(-1, s, cap), axis=2)).astype(jnp.int32)
+    return d, out_ids, counts

@@ -11,9 +11,14 @@ sets XLA_FLAGS before any import).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
-__all__ = ["make_production_mesh", "dp_axes", "fsdp_axes", "tp_axis"]
+__all__ = ["make_production_mesh", "make_scan_mesh", "dp_axes",
+           "fsdp_axes", "tp_axis"]
+
+SCAN_AXIS = "shard"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -34,6 +39,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     import numpy as np
     return jax.sharding.Mesh(
         np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_scan_mesh(n_shards: int, *, axis: str = SCAN_AXIS):
+    """1-D mesh for the device-resident sharded scan of ``n_shards``.
+
+    Spans D devices where D is the largest divisor of ``n_shards`` that
+    fits the available devices, so the pinned ``[S, cap, ...]`` stacks
+    always shard evenly (each device scans ``S/D`` sub-shards; with one
+    device every shard count degenerates to a single-device launch).
+    The ``COCONUT_MESH_DEVICES`` env var caps D below the physical
+    device count (ops/bench knob for device-scaling sweeps).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    devices = jax.devices()
+    cap = int(os.environ.get("COCONUT_MESH_DEVICES", "0") or 0)
+    if cap > 0:
+        devices = devices[:cap]
+    import numpy as np
+    d = max(x for x in range(1, min(n_shards, len(devices)) + 1)
+            if n_shards % x == 0)
+    return jax.sharding.Mesh(np.asarray(devices[:d]), (axis,))
 
 
 def make_host_mesh():

@@ -99,6 +99,15 @@ def main(argv=None) -> None:
     ap.add_argument("--max-debt", type=int, default=4,
                     help="backpressure threshold: insert blocks once this "
                          "many flush/merge units are outstanding")
+    ap.add_argument("--scan-mode", choices=("threaded", "mesh"),
+                    default="threaded",
+                    help="probe scan policy for --shards > 1: "
+                         "'threaded' fans out per-shard pipelines; "
+                         "'mesh' pins shard columns device-side and "
+                         "answers each probe batch with one shard_map "
+                         "launch (falls back to threaded when a batch "
+                         "cannot run on device; ignored for a "
+                         "single-shard index)")
     ap.add_argument("--shards", type=int, default=1,
                     help="key-range-partition the streaming index into N "
                          "CoconutLSM shards behind a z-order router "
@@ -207,7 +216,8 @@ def main(argv=None) -> None:
                                            concurrent=args.concurrent,
                                            wal_fsync=args.wal_fsync,
                                            max_debt=args.max_debt,
-                                           tiers=tiers)
+                                           tiers=tiers,
+                                           scan_mode=args.scan_mode)
             print(f"reopened {index.describe()}: {index.n} entries in "
                   f"{len(index.runs)} runs across {index.n_shards} "
                   f"shards (clock={index.clock})")
@@ -223,8 +233,12 @@ def main(argv=None) -> None:
                                       concurrent=args.concurrent,
                                       wal_fsync=args.wal_fsync,
                                       max_debt=args.max_debt,
-                                      tiers=tiers)
+                                      tiers=tiers,
+                                      scan_mode=args.scan_mode)
     else:
+        if args.scan_mode != "threaded":
+            print("note: --scan-mode mesh ignored — the device-resident "
+                  "launch shards over an index with --shards > 1")
         if args.data_dir:
             from ..storage import SegmentStore
             store = SegmentStore(args.data_dir)
@@ -407,6 +421,13 @@ def main(argv=None) -> None:
         "ingest.backpressure_waits_total": im.get("backpressure_waits", 0),
         "ingest.wal_bytes_total": im.get("wal_bytes", 0),
     }
+    if args.shards > 1:
+        from ..obs.registry import get_registry
+        _reg = get_registry()
+        report["query.mesh_launches_total"] = int(
+            _reg.counter("query.mesh_launches_total").value)
+        report["query.mesh_fallbacks_total"] = int(
+            _reg.counter("query.mesh_fallbacks_total").value)
     if tiers is not None:
         cs = tiers.stats()
         report.update({

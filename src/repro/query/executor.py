@@ -325,9 +325,14 @@ def execute(plan: ScanPlan, queries, *, k: int = 1,
     drops in via ``repro.kernels.ops.mindist_batch``).
     ``scan_mode``: None (eager chain, the bit-canonical default) or a
     kernel dispatch mode (``"pallas"`` / ``"interpret"`` / ``"jnp"``)
-    for the fused scan+verify kernel.
+    for the fused scan+verify kernel.  ``"mesh"`` normalizes to None:
+    the device-resident mesh launch is orchestrated ABOVE this seam (in
+    the sharded fan-out) and this executor IS its threaded fallback, so
+    a mesh request that reaches here runs the canonical eager chain.
     """
     import jax.numpy as jnp
+    if scan_mode == "mesh":
+        scan_mode = None
     queries_np = np.atleast_2d(np.asarray(queries, np.float32))
     nq = queries_np.shape[0]
     queries_j = jnp.asarray(queries_np)

@@ -40,7 +40,7 @@ scraped by ``/metrics`` and ``serve.py``'s final report.
 from __future__ import annotations
 
 import threading
-from typing import Any, Hashable, Optional, Tuple
+from typing import Any, Callable, Hashable, List, Optional, Tuple
 
 import numpy as np
 
@@ -75,6 +75,10 @@ class TieredLeafStore:
         self._reg = registry if registry is not None else get_registry()
         self._dev_lock = threading.Lock()
         self._device_bytes = 0
+        # invalidation fan-out: other device-resident caches (the mesh
+        # scan engine's pinned shard columns) subscribe here so segment
+        # GC after flush/merge/rebalance drops THEIR state too
+        self._inval_hooks: List[Callable[[Optional[Hashable]], None]] = []
         # own monotone totals (the registry is process-global; these are
         # this store's view, what serve.py's final report prints)
         self.hits = 0
@@ -144,17 +148,31 @@ class TieredLeafStore:
                 ent.device = False
 
     # ----------------------------------------------------------- invalidation
+    def add_invalidation_hook(
+            self, fn: Callable[[Optional[Hashable]], None]) -> None:
+        """Subscribe ``fn(token)`` to every invalidation event.  Called
+        with the retired segment token on :meth:`invalidate` and with
+        ``None`` on :meth:`clear`.  Hooks must be cheap and must not
+        raise (they run on the compactor/rebalance thread)."""
+        self._inval_hooks.append(fn)
+
+    def _fire_invalidation(self, token: Optional[Hashable]) -> None:
+        for fn in list(self._inval_hooks):
+            fn(token)
+
     def invalidate(self, token: Hashable) -> int:
         """Drop every cached leaf of one segment (called when the
         segment file is garbage-collected after a merge/rebalance)."""
         n = self.cache.invalidate_group(token)
         self._publish_gauges()
+        self._fire_invalidation(token)
         return n
 
     def clear(self) -> None:
         self.cache.clear()
         self.result_cache.clear()
         self._publish_gauges()
+        self._fire_invalidation(None)
 
     # ----------------------------------------------------------- result cache
     def result_get(self, key: Tuple) -> Optional[Any]:

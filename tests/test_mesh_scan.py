@@ -1,0 +1,306 @@
+"""Device-resident sharded scan (`kernels.mesh_scan` + the sharded-LSM
+mesh probe path).
+
+The contract under test is unforgiving: the one-launch mesh scan must
+return bit-identical answers (distance bits AND global ids) to the
+threaded per-shard fan-out, for any shard count, window mode, and k,
+under concurrent ingest, and after rebalance.  Multi-device scenarios
+run in subprocesses with ``--xla_force_host_platform_device_count=4``
+(device count locks at first jax init); fallback-seam and kernel-mode
+tests run in-process on the single default device (the mesh path
+degenerates to a 1-device launch there, which is itself a case the
+parity contract covers).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(code: str, devices: int = 4, timeout: int = 520):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=REPO)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _make_engine(shards, **kw):
+    from repro.core import summarization as S
+    from repro.distributed.sharded_lsm import ShardedCoconutLSM
+    cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+    return ShardedCoconutLSM(cfg, shards=shards, buffer_capacity=256,
+                             leaf_size=64, **kw)
+
+
+@pytest.mark.timeout(520)
+def test_mesh_launch_matches_jitted_oracle():
+    """ops.mesh_scan over a real 4-device mesh == jit(mesh_scan_ref):
+    same distance bits, ids, and per-shard verified counts, with and
+    without the timestamp filter."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        assert jax.device_count() == 4
+        from repro.core import summarization as S
+        from repro.kernels import ops, ref
+        from repro.kernels.mesh_scan import _finite_bounds
+        from repro.launch.mesh import make_scan_mesh
+
+        cfg = S.SummaryConfig(series_len=32, segments=8, bits=4)
+        rng = np.random.default_rng(0)
+        s, cap, nq, k = 4, 256, 6, 5
+        raw = rng.standard_normal((s, cap, 32)).astype(np.float32)
+        codes = np.asarray(S.summarize(
+            jnp.asarray(raw.reshape(-1, 32)), cfg)[1]).reshape(s, cap, 8)
+        ids = np.arange(s * cap, dtype=np.int32).reshape(s, cap)
+        ids[:, -7:] = -1                         # dead padding tail
+        ts = rng.integers(0, 1000, (s, cap)).astype(np.int32)
+        queries = rng.standard_normal((nq, 32)).astype(np.float32)
+        q_paas = np.asarray(S.paa(jnp.asarray(queries), 8))
+        bound = np.full(nq, np.inf, np.float32)
+        lower, upper = _finite_bounds(cfg.bits)
+        scale = cfg.series_len / cfg.segments
+        oracle = jax.jit(lambda tm: ref.mesh_scan_ref(
+            jnp.asarray(queries), jnp.asarray(q_paas), jnp.asarray(codes),
+            jnp.asarray(raw), jnp.asarray(ids), jnp.asarray(ts), tm,
+            jnp.asarray(bound), lower, upper, scale=scale, k=k))
+        mesh = make_scan_mesh(s)
+        assert mesh.devices.size == 4
+        for ts_min in (np.zeros(s, np.int32),
+                       np.full(s, 500, np.int32)):
+            d, i, c = ops.mesh_scan(
+                jnp.asarray(queries), jnp.asarray(q_paas),
+                jnp.asarray(codes), jnp.asarray(raw), jnp.asarray(ids),
+                jnp.asarray(ts), jnp.asarray(ts_min),
+                jnp.asarray(bound), cfg, mesh=mesh, k=k)
+            dr, ir, cr = oracle(jnp.asarray(ts_min))
+            np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+            np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+        print("oracle-parity-ok")
+        """)
+
+
+@pytest.mark.timeout(520)
+def test_mesh_vs_threaded_bit_parity_multidevice():
+    """The tentpole acceptance gate: mesh answers are bit-identical to
+    the threaded fan-out for shards 1/2/4 x k {1,10} x window modes,
+    with live buffer rows seeding the launch bound, and stay so after a
+    forced rebalance (which must also force a re-pin)."""
+    out = _run("""
+        import jax, numpy as np
+        assert jax.device_count() == 4
+        from repro.core import summarization as S
+        from repro.distributed.sharded_lsm import ShardedCoconutLSM
+        from repro.obs.registry import get_registry
+
+        cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+        rng = np.random.default_rng(7)
+        queries = rng.standard_normal((8, 64)).astype(np.float32)
+        for shards in (1, 2, 4):
+            eng = ShardedCoconutLSM(cfg, shards=shards,
+                                    buffer_capacity=256, leaf_size=64)
+            n = 2400
+            eng.insert(rng.standard_normal((n, 64)).astype(np.float32),
+                       np.arange(n, dtype=np.int64))
+            eng.flush()
+            # unflushed tail: exercises the buffer-seeded launch bound
+            eng.insert(rng.standard_normal((64, 64)).astype(np.float32),
+                       np.arange(n, n + 64, dtype=np.int64))
+            for k in (1, 10):
+                for window in (None, 500):
+                    dt, it, _ = eng.search_exact_batch(
+                        queries, k=k, window=window, scan_mode="threaded")
+                    dm, im, inf = eng.search_exact_batch(
+                        queries, k=k, window=window, scan_mode="mesh")
+                    assert inf["scan_mode"] == "mesh", (shards, k, window)
+                    np.testing.assert_array_equal(dm, dt)
+                    np.testing.assert_array_equal(im, it)
+            if shards > 1:
+                pins0 = get_registry().counter(
+                    "query.mesh_pins_total").value
+                eng.rebalance(force=True)
+                dt, it, _ = eng.search_exact_batch(queries, k=5,
+                                                   scan_mode="threaded")
+                dm, im, inf = eng.search_exact_batch(queries, k=5,
+                                                     scan_mode="mesh")
+                assert inf["scan_mode"] == "mesh"
+                np.testing.assert_array_equal(dm, dt)
+                np.testing.assert_array_equal(im, it)
+                # the moved runs changed every shard fingerprint
+                assert get_registry().counter(
+                    "query.mesh_pins_total").value > pins0
+            eng.close()
+        print("parity-ok")
+        """)
+    assert "parity-ok" in out
+
+
+def test_mesh_budgeted_probe_falls_back():
+    """Budgeted / approx probes have no device twin: the mesh engine
+    takes the threaded seam, counts the fallback, and the answers are
+    exactly the threaded budgeted answers."""
+    from repro.obs.registry import get_registry
+    from repro.query import Budget
+    eng = _make_engine(2, scan_mode="mesh")
+    rng = np.random.default_rng(3)
+    eng.insert(rng.standard_normal((1200, 64)).astype(np.float32),
+               np.arange(1200, dtype=np.int64))
+    eng.flush()
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    reg = get_registry()
+    fb0 = reg.counter("query.mesh_fallbacks_total").value
+    ap0 = reg.counter("query.mesh_fallback.approx_total").value
+    dm, im, inf = eng.search_exact_batch(q, k=3, budget=Budget(max_leaves=4))
+    dt, it, _ = eng.search_exact_batch(q, k=3, budget=Budget(max_leaves=4),
+                                       scan_mode="threaded")
+    assert reg.counter("query.mesh_fallbacks_total").value == fb0 + 1
+    assert reg.counter("query.mesh_fallback.approx_total").value == ap0 + 1
+    assert inf.get("scan_mode") != "mesh"
+    np.testing.assert_array_equal(dm, dt)
+    np.testing.assert_array_equal(im, it)
+    eng.close()
+
+
+def test_mesh_pin_budget_fallback_keeps_answers_exact():
+    """Partial device residency: a pin-budget miss (max_pin_bytes too
+    small for the snapshot) falls back to threaded with identical
+    answers — the mesh path never silently degrades."""
+    from repro.obs.registry import get_registry
+    from repro.query.mesh import MeshScanEngine
+    eng = _make_engine(2, scan_mode="mesh")
+    rng = np.random.default_rng(4)
+    eng.insert(rng.standard_normal((1000, 64)).astype(np.float32),
+               np.arange(1000, dtype=np.int64))
+    eng.flush()
+    eng._mesh_engine = MeshScanEngine(eng.cfg, max_pin_bytes=64)
+    q = rng.standard_normal((3, 64)).astype(np.float32)
+    reg = get_registry()
+    un0 = reg.counter("query.mesh_fallback.unpinnable_total").value
+    dm, im, inf = eng.search_exact_batch(q, k=4)
+    dt, it, _ = eng.search_exact_batch(q, k=4, scan_mode="threaded")
+    assert reg.counter(
+        "query.mesh_fallback.unpinnable_total").value == un0 + 1
+    assert inf.get("scan_mode") != "mesh"
+    np.testing.assert_array_equal(dm, dt)
+    np.testing.assert_array_equal(im, it)
+    eng.close()
+
+
+def test_mesh_sees_freshly_flushed_rows():
+    """Insert -> probe (buffer hit) -> flush -> probe (pinned hit): the
+    planted row answers d == 0.0 with its id in both states, and the
+    flush forces a re-pin (fingerprint changed).  Concurrent engine:
+    its snapshots expose the live buffer to searches."""
+    from repro.obs.registry import get_registry
+    eng = _make_engine(2, scan_mode="mesh", concurrent=True)
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((600, 64)).astype(np.float32)
+    eng.insert(base, np.arange(600, dtype=np.int64))
+    eng.flush()
+    planted = rng.standard_normal(64).astype(np.float32) * 10.0
+    eng.insert(planted[None], np.asarray([600], np.int64))
+    d, ids, inf = eng.search_exact_batch(planted[None], k=1)
+    assert inf["scan_mode"] == "mesh"
+    assert d[0, 0] == 0.0 and ids[0, 0] == 600
+    pins0 = get_registry().counter("query.mesh_pins_total").value
+    eng.flush()
+    d, ids, inf = eng.search_exact_batch(planted[None], k=1)
+    assert inf["scan_mode"] == "mesh"
+    assert d[0, 0] == 0.0 and ids[0, 0] == 600
+    assert inf["buffer_rows"] == 0
+    assert get_registry().counter("query.mesh_pins_total").value > pins0
+    eng.close()
+
+
+def test_kernel_mode_env_override(monkeypatch):
+    """COCONUT_KERNEL_MODE pins the auto kernel mode; without it the
+    default is pallas on TPU AND GPU backends, jnp on CPU."""
+    import jax
+    from repro.kernels import ops
+    monkeypatch.delenv("COCONUT_KERNEL_MODE", raising=False)
+    for backend, want in (("tpu", "pallas"), ("gpu", "pallas"),
+                          ("cpu", "jnp")):
+        monkeypatch.setattr(jax, "default_backend", lambda b=backend: b)
+        assert ops._default_mode() == want
+        assert ops._resolve("auto") == want
+    monkeypatch.setenv("COCONUT_KERNEL_MODE", "interpret")
+    assert ops._default_mode() == "interpret"
+    monkeypatch.setenv("COCONUT_KERNEL_MODE", "bogus")
+    assert ops._default_mode() in ("pallas", "jnp")   # ignored, not raised
+    # explicit modes always win over the env
+    monkeypatch.setenv("COCONUT_KERNEL_MODE", "interpret")
+    assert ops._resolve("jnp") == "jnp"
+
+
+@pytest.mark.concurrency
+@pytest.mark.timeout(520)
+def test_mesh_no_stale_reads_under_ingest_and_rebalance():
+    """A writer thread hammers insert/flush/rebalance while the prober
+    runs mesh probes for rows that were acked AND flushed before the
+    churn started: every probe must find its planted row at d == 0.0 —
+    a stale pinned device block (pre-rebalance layout, dropped run)
+    would miss it or return a wrong id."""
+    out = _run("""
+        import threading, numpy as np, jax
+        assert jax.device_count() == 4
+        from repro.core import summarization as S
+        from repro.distributed.sharded_lsm import ShardedCoconutLSM
+
+        cfg = S.SummaryConfig(series_len=64, segments=8, bits=4)
+        rng = np.random.default_rng(11)
+        eng = ShardedCoconutLSM(cfg, shards=4, buffer_capacity=256,
+                                leaf_size=64, scan_mode="mesh")
+        planted = (rng.standard_normal((24, 64)) * 5.0).astype(np.float32)
+        eng.insert(planted, np.arange(24, dtype=np.int64))
+        eng.insert(rng.standard_normal((2000, 64)).astype(np.float32),
+                   np.arange(24, 2024, dtype=np.int64))
+        eng.flush()
+
+        stop = threading.Event()
+        errs = []
+        def writer():
+            i, nid = 0, 3000
+            try:
+                while not stop.is_set():
+                    rows = rng.standard_normal((64, 64)).astype(np.float32)
+                    eng.insert(rows, np.arange(nid, nid + 64,
+                                               dtype=np.int64))
+                    nid += 64
+                    if i % 2 == 0:
+                        eng.flush()
+                    if i % 5 == 0:
+                        eng.rebalance(force=True)
+                    i += 1
+            except Exception as e:          # surfaced by the main thread
+                errs.append(e)
+        t = threading.Thread(target=writer)
+        t.start()
+        try:
+            mesh_probes = 0
+            for it in range(40):
+                pi = it % 24
+                d, ids, info = eng.search_exact_batch(planted[pi][None],
+                                                      k=1)
+                assert d[0, 0] == 0.0, (it, d[0, 0])
+                assert ids[0, 0] == pi, (it, ids[0, 0])
+                mesh_probes += info.get("scan_mode") == "mesh"
+        finally:
+            stop.set()
+            t.join()
+        assert not errs, errs
+        assert mesh_probes > 0              # the device path actually ran
+        eng.close()
+        print("stale-read-check-ok", mesh_probes)
+        """)
+    assert "stale-read-check-ok" in out
